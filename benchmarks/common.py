@@ -1,0 +1,83 @@
+"""Shared benchmark machinery: datasets, timing, result store.
+
+Datasets mirror the paper's Table I, scaled to this CPU container (the
+paper's |D| are 2-15M; defaults here are 2e4-1e5 -- pass --full to restore
+paper sizes on real hardware). Comparative CLAIMS (GPU-SJ vs brute force vs
+CPU baselines, UNICOMP work ratios, count consistency) are validated at the
+scaled sizes; absolute times are machine-local.
+
+  Syn{n}D   uniform [0,100]^n              (the grid's worst case, SVI-C)
+  SW2D/3D   clustered lat/lon (+TEC)       (space-weather-like skew)
+  SDSS2D    filamentary 2-D galaxy field   (survey-like skew)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def syn(n_points: int, n_dims: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0, 100, size=(n_points, n_dims))
+
+
+def sw_like(n_points: int, n_dims: int = 2, seed: int = 1) -> np.ndarray:
+    """Clustered geo points: dense mid-latitude bands + sparse elsewhere."""
+    rng = np.random.default_rng(seed)
+    n_band = int(n_points * 0.8)
+    lat = np.concatenate([
+        rng.normal(45, 8, n_band), rng.uniform(-90, 90, n_points - n_band)])
+    lon = rng.uniform(-180, 180, n_points)
+    cols = [lat[:n_points], lon]
+    if n_dims == 3:
+        cols.append(rng.lognormal(2.0, 0.5, n_points))  # TEC-like
+    return np.stack(cols, axis=1)
+
+
+def sdss_like(n_points: int, seed: int = 2) -> np.ndarray:
+    """Filamentary 2-D field: points along random walls + field noise."""
+    rng = np.random.default_rng(seed)
+    n_fil = int(n_points * 0.7)
+    k = 40
+    centers = rng.uniform(0, 100, (k, 2))
+    angles = rng.uniform(0, np.pi, k)
+    which = rng.integers(0, k, n_fil)
+    t = rng.normal(0, 6, n_fil)
+    fil = centers[which] + np.stack(
+        [t * np.cos(angles[which]), t * np.sin(angles[which])], 1)
+    fil += rng.normal(0, 0.3, fil.shape)
+    field = rng.uniform(0, 100, (n_points - n_fil, 2))
+    return np.clip(np.concatenate([fil, field]), 0, 100)
+
+
+def timeit(fn, *, trials: int = 3):
+    """Median wall time of ``trials`` runs (paper averages 3 trials)."""
+    times = []
+    out = None
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def store(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load(name: str):
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)

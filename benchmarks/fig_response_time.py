@@ -1,0 +1,84 @@
+"""Figures 4, 5, 6: response time vs epsilon, all implementations.
+
+fig4  real-world-like datasets (SW2D/SW3D/SDSS2D; clustered + filamentary)
+fig5  synthetic uniform 2-6D at the '2M' scale point (scaled down on CPU)
+fig6  synthetic uniform at the '10M' scale point (larger |D|)
+
+Each cell times GPU-SJ (with and without UNICOMP), CPU-RTREE, SUPEREGO, and
+(once per dataset; eps-independent) GPU brute force, and asserts every
+implementation agrees on the pair count -- the paper's cross-validation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.joins import IMPLS, gpusj_warm
+from repro.core.selfjoin import self_join_count
+
+
+def _sweep(name, datasets, eps_list, *, brute_once=True, trials=3):
+    rows = []
+    for dname, pts in datasets:
+        bcount = None
+        btime = None
+        for i, eps in enumerate(eps_list[dname]):
+            gpusj_warm(pts, eps, unicomp=True)
+            gpusj_warm(pts, eps, unicomp=False)
+            row = {"dataset": dname, "eps": eps, "n": pts.shape[1],
+                   "npts": pts.shape[0]}
+            counts = {}
+            for impl in ("gpusj", "gpusj_nouni", "cpurtree", "superego"):
+                t, c = common.timeit(lambda: IMPLS[impl](pts, eps),
+                                     trials=trials)
+                row[impl + "_s"] = t
+                counts[impl] = int(c)
+            if brute_once and i == 0:
+                btime, bcount = common.timeit(
+                    lambda: IMPLS["brute"](pts, eps), trials=1)
+            row["brute_s"] = btime if i == 0 else None
+            assert len(set(counts.values())) == 1, (dname, eps, counts)
+            if i == 0 and bcount is not None:
+                assert bcount == counts["gpusj"], (dname, eps)
+            row["pairs"] = counts["gpusj"]
+            rows.append(row)
+            print(f"[{name}] {dname} eps={eps}: gpusj {row['gpusj_s']:.3f}s "
+                  f"rtree {row['cpurtree_s']:.3f}s ego {row['superego_s']:.3f}s "
+                  f"pairs {row['pairs']}", flush=True)
+    common.store(name, {"rows": rows})
+    return rows
+
+
+def fig4(scale=1.0, trials=3):
+    n = int(20000 * scale)
+    datasets = [
+        ("SW2DA", common.sw_like(n, 2)),
+        ("SW3DA", common.sw_like(n, 3)),
+        ("SDSS2DA", common.sdss_like(n)),
+    ]
+    eps = {"SW2DA": [0.4, 0.8, 1.2], "SW3DA": [0.8, 1.6, 2.4],
+           "SDSS2DA": [0.3, 0.6, 0.9]}
+    return _sweep("fig4", datasets, eps, trials=trials)
+
+
+def fig5(scale=1.0, trials=3):
+    n = int(20000 * scale)
+    datasets = [(f"Syn{d}D", common.syn(n, d)) for d in (2, 3, 4, 5, 6)]
+    eps = {"Syn2D": [0.4, 0.8, 1.2], "Syn3D": [1.5, 2.5, 3.5],
+           "Syn4D": [3.0, 5.0, 7.0], "Syn5D": [6.0, 8.0, 10.0],
+           "Syn6D": [8.0, 10.0, 12.0]}
+    return _sweep("fig5", datasets, eps, trials=trials)
+
+
+def fig6(scale=1.0, trials=2):
+    n = int(60000 * scale)
+    datasets = [(f"Syn{d}D10M", common.syn(n, d, seed=9)) for d in (2, 4, 6)]
+    eps = {"Syn2D10M": [0.3, 0.6], "Syn4D10M": [2.5, 4.0],
+           "Syn6D10M": [7.0, 9.0]}
+    return _sweep("fig6", datasets, eps, trials=trials)
+
+
+if __name__ == "__main__":
+    fig4()
+    fig5()
+    fig6()

@@ -1,0 +1,93 @@
+"""Figures 7, 8, 9 + Fig 1: derived from the response-time sweeps.
+
+fig7  speedup of GPU-SJ (UNICOMP) over CPU-RTREE       (paper avg: 26.9x)
+fig8  speedup of GPU-SJ (UNICOMP) over SUPEREGO        (paper avg: 2.38x)
+fig9  UNICOMP response-time ratio (without / with)     (paper: <2 at n<=3,
+                                                        >=2 possible n>=5)
+fig1  motivation: R-tree self-join time + avg neighbors vs dimension
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _ratios(num_key, den_key):
+    out = []
+    for fig in ("fig4", "fig5", "fig6"):
+        data = common.load(fig)
+        if not data:
+            continue
+        for row in data["rows"]:
+            out.append({
+                "dataset": row["dataset"], "eps": row["eps"],
+                "ratio": row[num_key] / row[den_key],
+            })
+    return out
+
+
+def fig7():
+    rows = _ratios("cpurtree_s", "gpusj_s")
+    avg = float(np.mean([r["ratio"] for r in rows])) if rows else 0.0
+    common.store("fig7", {"rows": rows, "avg_speedup": avg,
+                          "paper_avg": 26.9})
+    print(f"[fig7] GPU-SJ vs CPU-RTREE: avg {avg:.1f}x over {len(rows)} "
+          f"cells (paper: 26.9x on a TITAN X vs 1 CPU thread)")
+    return avg
+
+
+def fig8():
+    rows = _ratios("superego_s", "gpusj_s")
+    avg = float(np.mean([r["ratio"] for r in rows])) if rows else 0.0
+    wins = sum(1 for r in rows if r["ratio"] > 1)
+    common.store("fig8", {"rows": rows, "avg_speedup": avg,
+                          "wins": wins, "paper_avg": 2.38})
+    print(f"[fig8] GPU-SJ vs SUPEREGO: avg {avg:.2f}x, wins {wins}/"
+          f"{len(rows)} (paper: 2.38x vs 32 threads)")
+    return avg
+
+
+def fig9():
+    rows = _ratios("gpusj_nouni_s", "gpusj_s")
+    by_n = {}
+    for fig in ("fig4", "fig5", "fig6"):
+        data = common.load(fig)
+        if not data:
+            continue
+        for row in data["rows"]:
+            by_n.setdefault(row["n"], []).append(
+                row["gpusj_nouni_s"] / row["gpusj_s"])
+    summary = {n: float(np.mean(v)) for n, v in sorted(by_n.items())}
+    common.store("fig9", {"rows": rows, "by_dim": summary})
+    print(f"[fig9] UNICOMP ratio by dim: "
+          + ", ".join(f"n={n}: {r:.2f}x" for n, r in summary.items())
+          + " (paper: ~1-1.5x low-D, >=2x possible at n>=5)")
+    return summary
+
+
+def fig1(scale=1.0, trials=2):
+    """Motivation: CPU R-tree self-join time + mean neighbors vs dimension."""
+    from benchmarks.joins import IMPLS
+    from repro.core.selfjoin import per_point_neighbor_counts
+
+    n = int(10000 * scale)
+    rows = []
+    for d in (2, 3, 4, 5, 6):
+        pts = common.syn(n, d, seed=5)
+        eps = 1.0 * (d / 2.0)  # keep some density as volume grows
+        t, pairs = common.timeit(lambda: IMPLS["cpurtree"](pts, eps),
+                                 trials=trials)
+        mean_nbrs = pairs / n
+        rows.append({"n": d, "eps": eps, "rtree_s": t,
+                     "mean_neighbors": mean_nbrs})
+        print(f"[fig1] n={d}: rtree {t:.2f}s, {mean_nbrs:.2f} avg neighbors")
+    common.store("fig1", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    fig1()
+    fig7()
+    fig8()
+    fig9()

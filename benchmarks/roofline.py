@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifact (results/dryrun.json).
+
+Prints the per-(arch x shape x mesh) three-term roofline with bottleneck and
+the MODEL_FLOPS/HLO_FLOPs useful fraction; the markdown form of this table
+is EXPERIMENTS.md SRoofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "dryrun.json")
+
+
+def rows(path=DRYRUN, mesh="single"):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    out = []
+    for key, val in sorted(data.items()):
+        if key.startswith("_") or not key.endswith("|" + mesh):
+            continue
+        arch, shape, _ = key.split("|")
+        if "skipped" in val:
+            out.append({"arch": arch, "shape": shape, "skip": val["skipped"]})
+            continue
+        if "roofline" not in val:
+            out.append({"arch": arch, "shape": shape,
+                        "skip": "ERROR: " + val.get("error", "?")})
+            continue
+        r = val["roofline"]
+        mc = val.get("model_check", {})
+        out.append({
+            "arch": arch, "shape": shape,
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful": mc.get("useful_fraction"),
+            "step_s": max(r["compute_s"], r["memory_s"], r["collective_s"]),
+            "frac_of_roofline": r["compute_s"] / max(
+                r["compute_s"], r["memory_s"], r["collective_s"]),
+        })
+    return out
+
+
+def main(mesh="single"):
+    table = rows(mesh=mesh)
+    if not table:
+        print("[roofline] no dryrun.json yet -- run "
+              "`python -m repro.launch.dryrun --all --mesh both "
+              "--out results/dryrun.json`")
+        return
+    print(f"{'arch':16s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+          f"{'collective':>10s} {'bound':>10s} {'useful':>7s}")
+    for r in table:
+        if "skip" in r:
+            print(f"{r['arch']:16s} {r['shape']:12s} SKIP: {r['skip'][:48]}")
+            continue
+        u = f"{r['useful']:.2f}" if r.get("useful") else "--"
+        print(f"{r['arch']:16s} {r['shape']:12s} {r['compute_s']:10.3e} "
+              f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+              f"{r['bottleneck']:>10s} {u:>7s}")
+
+
+if __name__ == "__main__":
+    main()

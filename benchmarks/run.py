@@ -1,0 +1,70 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per cell (us_per_call = the timed
+implementation under test, GPU-SJ with UNICOMP; derived = the headline
+derived quantity for that figure). ``--full`` restores paper-scale dataset
+sizes (hours on this CPU container; sized for real accelerators).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale dataset sizes")
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma list: fig1,fig4,fig5,fig6,fig7,fig8,fig9,"
+                         "table2,roofline")
+    args = ap.parse_args(argv)
+    scale = args.scale if args.scale else (100.0 if args.full else 1.0)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    from benchmarks import fig_response_time, fig_speedup, table2_metrics
+    from benchmarks import roofline as roofline_mod
+
+    lines = []
+    if want("fig4"):
+        for r in fig_response_time.fig4(scale=scale):
+            lines.append((f"fig4/{r['dataset']}/eps{r['eps']}",
+                          r["gpusj_s"] * 1e6, r["pairs"]))
+    if want("fig5"):
+        for r in fig_response_time.fig5(scale=scale):
+            lines.append((f"fig5/{r['dataset']}/eps{r['eps']}",
+                          r["gpusj_s"] * 1e6, r["pairs"]))
+    if want("fig6"):
+        for r in fig_response_time.fig6(scale=scale):
+            lines.append((f"fig6/{r['dataset']}/eps{r['eps']}",
+                          r["gpusj_s"] * 1e6, r["pairs"]))
+    if want("fig1"):
+        for r in fig_speedup.fig1(scale=scale):
+            lines.append((f"fig1/n{r['n']}", r["rtree_s"] * 1e6,
+                          round(r["mean_neighbors"], 3)))
+    if want("fig7"):
+        avg = fig_speedup.fig7()
+        lines.append(("fig7/avg_speedup_vs_rtree", 0.0, round(avg, 2)))
+    if want("fig8"):
+        avg = fig_speedup.fig8()
+        lines.append(("fig8/avg_speedup_vs_superego", 0.0, round(avg, 2)))
+    if want("fig9"):
+        for n, ratio in fig_speedup.fig9().items():
+            lines.append((f"fig9/unicomp_ratio_n{n}", 0.0, round(ratio, 3)))
+    if want("table2"):
+        for r in table2_metrics.run(scale=scale):
+            lines.append((f"table2/{r['dataset']}", 0.0,
+                          round(r["cand_ratio"], 3)))
+    if want("roofline"):
+        roofline_mod.main()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in lines:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Table II analogue: execution characteristics of UNICOMP.
+
+The paper profiles occupancy and L1 cache utilization on the GPU to explain
+why UNICOMP's ~2x work reduction does not always yield 2x time. Those
+counters have no TPU meaning; the structural analogues we report are:
+
+  work ratio        cells visited & candidate slots, without/with UNICOMP
+                    (the actual work-avoidance factor)
+  padding efficiency valid candidate slots / (padded) window slots -- the
+                    TPU cost of regularizing ragged cells into fixed windows
+                    (the analogue of occupancy loss)
+  query-tile reuse  stencil offsets per query tile residency -- how many
+                    times the VMEM-resident query tile is reused (the
+                    analogue of the L1 temporal-locality gain, kernel
+                    cell_join.py keeps the tile resident across offsets)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.grid import build_grid_host
+from repro.core.selfjoin import self_join_count
+
+
+def run(scale=1.0):
+    n = int(20000 * scale)
+    rows = []
+    for dname, pts, eps in [
+        ("SW2DA", common.sw_like(n, 2), 0.4),
+        ("SDSS2DA", common.sdss_like(n), 0.3),
+        ("Syn5D", common.syn(n, 5), 8.0),
+        ("Syn6D", common.syn(n, 6), 10.0),
+    ]:
+        index = build_grid_host(pts, eps)
+        cmax = int(index.max_per_cell)
+        cpad = -(-max(cmax, 1) // 8) * 8
+        s_u = self_join_count(pts, eps, unicomp=True, index=index)
+        s_f = self_join_count(pts, eps, unicomp=False, index=index)
+        valid_frac_u = s_u.candidates_checked / (
+            s_u.offsets * pts.shape[0] * cpad)
+        rows.append({
+            "dataset": dname, "eps": eps, "n": pts.shape[1],
+            "cells_ratio": s_f.cells_visited / max(s_u.cells_visited, 1),
+            "cand_ratio": s_f.candidates_checked / max(
+                s_u.candidates_checked, 1),
+            "pad_efficiency": valid_frac_u,
+            "max_per_cell": cmax,
+            "window": cpad,
+            "query_tile_reuse": s_u.offsets,
+        })
+        r = rows[-1]
+        print(f"[table2] {dname}: work ratio cells {r['cells_ratio']:.2f}x "
+              f"cands {r['cand_ratio']:.2f}x, pad-eff "
+              f"{r['pad_efficiency']:.3f}, reuse {r['query_tile_reuse']}")
+    common.store("table2", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

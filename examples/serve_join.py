@@ -1,0 +1,11 @@
+"""Self-join serving: index once, answer batched epsilon-range requests.
+
+The DBSCAN-style usage the paper cites (SII): the grid index is built once
+over the dataset; request batches of query points are answered with the
+bounded adjacent-cell search. Run:  python examples/serve_join.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "selfjoin", "--points", "50000", "--dims", "4",
+          "--eps", "2.5", "--requests", "10", "--request-batch", "512"])

@@ -1,0 +1,50 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the framework's full stack -- config registry, LMModel, AdamW with fp32
+master, deterministic token pipeline with the paper's self-join dedup
+operator, async checkpointing, straggler monitor -- via launch/train.py.
+
+Default sizing is CPU-friendly; pass --full100m for the true 100M model
+(12L x d768, GPT-2-small class) and more steps, as you would on a TPU host.
+"""
+import argparse
+import sys
+
+import repro  # noqa: F401  (enables x64, registers configs)
+from repro.launch.train import main as train_main
+from repro.models.config import ModelConfig
+
+# a real ~124M config, selectable below
+GPT_100M = ModelConfig(
+    name="gpt-100m", family="dense", n_layers=12, d_model=768, n_heads=12,
+    n_kv_heads=12, d_ff=3072, vocab=32000, attn_chunk=256,
+)
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full100m", action="store_true",
+                    help="train the real 124M model (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=None)
+    args, rest = ap.parse_known_args()
+
+    if args.full100m:
+        # register the 100M config under a temporary name
+        import repro.configs as cfgs
+
+        class _Mod:
+            CONFIG = GPT_100M
+            REDUCED = GPT_100M
+
+        sys.modules["repro.configs.gpt_100m"] = _Mod
+        cfgs.ALIASES["gpt-100m"] = "gpt_100m"
+        steps = args.steps or 300
+        argv = ["--arch", "gpt-100m", "--steps", str(steps),
+                "--batch", "8", "--seq", "512", "--dedup",
+                "--ckpt-dir", "/tmp/gpt100m_ckpt", "--ckpt-every", "100"]
+    else:
+        steps = args.steps or 200
+        argv = ["--arch", "qwen1.5-0.5b", "--reduced", "--steps", str(steps),
+                "--batch", "8", "--seq", "128", "--dedup",
+                "--ckpt-dir", "/tmp/lm_ckpt", "--ckpt-every", "100",
+                "--log-every", "20"]
+    train_main(argv + rest)

@@ -1,0 +1,15 @@
+"""repro — TPU-native distance-similarity self-join framework.
+
+Reproduction of Gowanlock & Karsin (2018), "GPU Accelerated Self-join for the
+Distance Similarity Metric", adapted to TPU/JAX per DESIGN.md, plus the
+multi-arch LM substrate (configs/, models/, launch/).
+
+x64 is enabled globally: the paper's GPU-SJ uses 64-bit floats throughout, and
+the grid's linearized cell keys need int64 in >=4-D. All model/LM code passes
+explicit dtypes (bf16/f32) and is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

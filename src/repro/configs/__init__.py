@@ -1,0 +1,95 @@
+"""Architecture registry: the 10 assigned archs + the paper's own workload.
+
+Each ``configs/<arch>.py`` exports:
+    CONFIG   -- the exact published configuration (source tier in docstring)
+    REDUCED  -- a small same-family config for CPU smoke tests
+
+Shape cells (LM family): seq_len x global_batch per the assignment;
+``decode_*``/``long_*`` lower ``serve_step`` (one token against a KV cache of
+seq_len), not ``train_step``. Skips (encoder-only decode, full-attention
+long_500k) are encoded in ``cell_plan`` and mirrored in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+ARCHS = [
+    "qwen2_72b",
+    "qwen1_5_0_5b",
+    "qwen2_5_32b",
+    "stablelm_12b",
+    "arctic_480b",
+    "grok_1_314b",
+    "xlstm_1_3b",
+    "hubert_xlarge",
+    "llava_next_34b",
+    "zamba2_1_2b",
+]
+
+# canonical ids from the assignment -> module names
+ALIASES = {
+    "qwen2-72b": "qwen2_72b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "stablelm-12b": "stablelm_12b",
+    "arctic-480b": "arctic_480b",
+    "grok-1-314b": "grok_1_314b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "hubert-xlarge": "hubert_xlarge",
+    "llava-next-34b": "llava_next_34b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "selfjoin": "selfjoin",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+
+def get_config(arch: str, *, reduced: bool = False):
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def cell_plan(arch: str):
+    """List of (ShapeCell, skip_reason|None) for an architecture."""
+    cfg = get_config(arch)
+    plan = []
+    for cell in SHAPES:
+        skip = None
+        if cell.kind == "decode" and not cfg.has_decode:
+            skip = "encoder-only: no decode step"
+        elif cell.name == "long_500k" and not cfg.sub_quadratic:
+            skip = ("full attention is quadratic at 500k context; "
+                    "run only for SSM/hybrid (DESIGN.md)")
+        elif cell.name == "prefill_32k" and not cfg.has_decode:
+            skip = None  # encoder: prefill cell = encoder forward
+        plan.append((cell, skip))
+    return plan
+
+
+def all_cells():
+    """Every (arch, cell, skip) across the assignment (40 logical cells)."""
+    out = []
+    for arch in ARCHS:
+        a = arch.replace("_", "-")
+        # restore canonical spelling
+        canon = {v: k for k, v in ALIASES.items()}[arch]
+        for cell, skip in cell_plan(arch):
+            out.append((canon, cell, skip))
+    return out

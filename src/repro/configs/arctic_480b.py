@@ -1,0 +1,23 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128e top-2 + dense residual.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+Note: n_heads=56 does not divide the 16-way model axis; attention runs with
+replicated heads and the weights shard on the fused head*dim axis (448/dev).
+Experts (128) are expert-parallel over the 16-way data axis.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000,
+    n_experts=128, top_k=2, moe_dense_residual=True,
+)
+
+REDUCED = ModelConfig(
+    name="arctic-480b-reduced", family="moe",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+    d_ff=96, vocab=512, n_experts=8, top_k=2, moe_dense_residual=True,
+    attn_chunk=32, remat=False,
+)

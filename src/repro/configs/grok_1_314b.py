@@ -1,0 +1,21 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8e top-2. [hf:xai-org/grok-1; unverified]
+
+Note: 8 experts do not divide the 16-way data axis -> expert weights shard
+over (d_model x d_ff) = ('data' x 'model') instead of expert-parallel.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, vocab=131072,
+    n_experts=8, top_k=2,
+)
+
+REDUCED = ModelConfig(
+    name="grok-1-314b-reduced", family="moe",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+    d_ff=128, vocab=512, n_experts=4, top_k=2,
+    attn_chunk=32, remat=False,
+)

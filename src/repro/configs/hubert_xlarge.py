@@ -1,0 +1,22 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504
+-- encoder-only, same arch as w2v2. [arXiv:2106.07447; unverified]
+
+Modality frontend (conv feature extractor) is a STUB: input_specs() provides
+precomputed frame embeddings (B, S, d_model); vocab=504 is the HuBERT
+cluster-target codebook. Encoder-only -> no decode shapes; prefill_32k
+lowers the encoder forward.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab=504, encoder_only=True, input_kind="embeddings",
+)
+
+REDUCED = ModelConfig(
+    name="hubert-xlarge-reduced", family="audio",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab=64, encoder_only=True, input_kind="embeddings",
+    attn_chunk=32, remat=False,
+)

@@ -1,0 +1,22 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 -- anyres tiling. [hf:llava-hf/llava-v1.6-mistral-7b-hf;
+unverified]
+
+Modality frontend (ViT + anyres tile packer) is a STUB: input_specs()
+provides precomputed patch+text embeddings (B, S, d_model) for train/prefill;
+decode embeds generated tokens through the LM embedding table.
+n_heads=56 does not divide the model axis -> replicated-head attention.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab=64000, input_kind="embeddings",
+)
+
+REDUCED = ModelConfig(
+    name="llava-next-34b-reduced", family="vlm",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+    d_ff=256, vocab=512, input_kind="embeddings", attn_chunk=32, remat=False,
+)

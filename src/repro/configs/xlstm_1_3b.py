@@ -1,0 +1,21 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H (kv=4) d_ff=0 vocab=50304 --
+sLSTM + mLSTM blocks. [arXiv:2405.04517; unverified]
+
+Block pattern: one sLSTM every 8 layers (6 of 48), rest mLSTM, expand=2.
+mLSTM runs chunkwise-parallel (sub-quadratic -> long_500k eligible);
+sLSTM is recurrent (lax.scan over time).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304, slstm_every=8, ssm_expand=2,
+)
+
+REDUCED = ModelConfig(
+    name="xlstm-1.3b-reduced", family="ssm",
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=512, slstm_every=4, ssm_expand=2, ssm_chunk=16,
+    remat=False,
+)

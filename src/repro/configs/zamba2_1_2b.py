@@ -1,0 +1,28 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (kv=32) d_ff=8192
+vocab=32000, ssm_state=64 -- Mamba2 + shared attn blocks.
+[arXiv:2411.15242; hf]
+
+38 Mamba2 layers; ONE shared attention+FFN block (single param set) applied
+every 6 layers (7 invocations). Hybrid is long_500k-eligible: the Mamba2
+backbone is linear and only the shared block holds a (per-invocation) KV
+cache. Zamba2's per-invocation LoRA deltas on the shared block are omitted
+(noted in DESIGN.md).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32000, ssm_state=64, ssm_head_dim=64,
+    shared_attn_every=6,
+    # ssm_chunk=64 balances the intra-chunk quadratic term against the
+    # state-passing term (hillclimb iteration 2, EXPERIMENTS.md SPerf)
+    ssm_chunk=64,
+)
+
+REDUCED = ModelConfig(
+    name="zamba2-1.2b-reduced", family="hybrid",
+    n_layers=4, d_model=128, n_heads=8, n_kv_heads=8,
+    d_ff=256, vocab=512, ssm_state=16, ssm_head_dim=16,
+    shared_attn_every=2, ssm_chunk=16, attn_chunk=32, remat=False,
+)

@@ -1,0 +1,41 @@
+"""Core self-join library: the paper's primary contribution in JAX.
+
+Public API:
+    build_grid_host / build_grid   -- the epsilon-grid index (paper SIV)
+    self_join                      -- grid join, optional UNICOMP (paper SV-B)
+    self_join_batched              -- result-set batching driver (paper SV-A)
+    brute_force_join / brute_force_count  -- GPU brute-force baseline (paper SVI-B)
+    rtree_join / ego_join          -- CPU baselines (paper SVI-B)
+    distributed_self_join_count    -- shard_map slab decomposition (DESIGN S3)
+"""
+from repro.core.grid import GridIndex, build_grid, build_grid_host
+from repro.core.stencil import stencil_offsets
+from repro.core.selfjoin import (
+    per_point_neighbor_counts,
+    range_query,
+    self_join,
+    self_join_batched,
+    self_join_count,
+    self_join_count_compact,
+)
+from repro.core.brute import brute_force_count, brute_force_join
+from repro.core.baselines import ego_join, rtree_join
+from repro.core.distributed import distributed_self_join_count
+
+__all__ = [
+    "GridIndex",
+    "build_grid",
+    "build_grid_host",
+    "stencil_offsets",
+    "self_join",
+    "self_join_count",
+    "self_join_count_compact",
+    "self_join_batched",
+    "per_point_neighbor_counts",
+    "range_query",
+    "brute_force_count",
+    "brute_force_join",
+    "rtree_join",
+    "ego_join",
+    "distributed_self_join_count",
+]

@@ -1,0 +1,104 @@
+"""GPU brute-force baseline (paper SVI-B): O(|D|^2) nested-loop join.
+
+The paper uses |D| threads, each comparing its point against all others, to
+show that GPU-SJ's gains are not merely GPU throughput. Our TPU analogue is a
+row-tiled sweep: each scan step evaluates a (tile x |D|) distance block --
+this is also the shape the Pallas kernel (kernels/distance_tile.py) executes
+on the MXU; ``distance_impl='pallas'`` routes the block computation there.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _block_hits_jnp(q, pts, eps):
+    """(T,n) x (N,n) -> (T,N) bool: ||q - p||^2 <= eps^2."""
+    d2 = jnp.sum((q[:, None, :] - pts[None, :, :]) ** 2, axis=-1)
+    return d2 <= eps * eps
+
+
+def _get_impl(name):
+    if name == "jnp":
+        return _block_hits_jnp
+    if name == "pallas":
+        from repro.kernels.ops import distance_tile_hits
+
+        return distance_tile_hits
+    raise ValueError(f"unknown distance_impl {name!r}")
+
+
+@partial(jax.jit, static_argnames=("tile", "distance_impl"))
+def _count(points, eps, *, tile: int, distance_impl: str):
+    npts, _ = points.shape
+    n_tiles = -(-npts // tile)
+    pad = n_tiles * tile - npts
+    pts_pad = jnp.pad(points, ((0, pad), (0, 0)), constant_values=0.0)
+    hits_fn = _get_impl(distance_impl)
+
+    def body(total, t):
+        q = jax.lax.dynamic_slice_in_dim(pts_pad, t * tile, tile)
+        rows = t * tile + jnp.arange(tile)
+        hits = hits_fn(q, points, eps)
+        hits = hits & (rows[:, None] < npts)                  # query padding
+        hits = hits & (rows[:, None] != jnp.arange(npts)[None, :])  # self
+        return total + hits.sum(dtype=jnp.int64), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.int64), jnp.arange(n_tiles))
+    return total
+
+
+def brute_force_count(points, eps, *, tile: int = 256, distance_impl: str = "jnp") -> int:
+    """Ordered-pair count (excl. self) by exhaustive comparison."""
+    points = jnp.asarray(points)
+    return int(_count(points, jnp.asarray(eps, points.dtype), tile=tile,
+                      distance_impl=distance_impl))
+
+
+@partial(jax.jit, static_argnames=("tile", "capacity", "distance_impl"))
+def _fill(points, eps, *, tile: int, capacity: int, distance_impl: str):
+    npts, _ = points.shape
+    n_tiles = -(-npts // tile)
+    pad = n_tiles * tile - npts
+    pts_pad = jnp.pad(points, ((0, pad), (0, 0)), constant_values=0.0)
+    hits_fn = _get_impl(distance_impl)
+
+    def body(carry, t):
+        cursor, keys, vals = carry
+        q = jax.lax.dynamic_slice_in_dim(pts_pad, t * tile, tile)
+        rows = t * tile + jnp.arange(tile)
+        hits = hits_fn(q, points, eps)
+        hits = hits & (rows[:, None] < npts)
+        hits = hits & (rows[:, None] != jnp.arange(npts)[None, :])
+        flat = hits.reshape(-1)
+        rel = jnp.cumsum(flat.astype(jnp.int64)) - 1
+        n_hits = rel[-1] + 1
+        qid = jnp.broadcast_to(rows[:, None], hits.shape).reshape(-1)
+        cid = jnp.broadcast_to(jnp.arange(npts)[None, :], hits.shape).reshape(-1)
+        idx = jnp.where(flat, cursor + rel, capacity)
+        keys = keys.at[idx].set(qid.astype(jnp.int32), mode="drop")
+        vals = vals.at[idx].set(cid.astype(jnp.int32), mode="drop")
+        return (cursor + n_hits, keys, vals), None
+
+    keys0 = jnp.full((capacity,), -1, jnp.int32)
+    vals0 = jnp.full((capacity,), -1, jnp.int32)
+    (count, keys, vals), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.int64), keys0, vals0), jnp.arange(n_tiles)
+    )
+    return keys, vals, count
+
+
+def brute_force_join(points, eps, *, tile: int = 256, distance_impl: str = "jnp"):
+    """All ordered pairs (K,2) by exhaustive comparison (sorted by key)."""
+    points = jnp.asarray(points)
+    eps = jnp.asarray(eps, points.dtype)
+    total = int(_count(points, eps, tile=tile, distance_impl=distance_impl))
+    keys, vals, count = _fill(
+        points, eps, tile=tile, capacity=max(total, 1), distance_impl=distance_impl
+    )
+    assert int(count) == total
+    pairs = np.stack([np.asarray(keys), np.asarray(vals)], axis=1)[:total]
+    return pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]

@@ -1,0 +1,264 @@
+"""The epsilon-grid index of paper SIV.
+
+The paper's index has four components (Fig. 2a):
+    A   point-id lookup array, |A| = |D|, grouped by grid cell
+    G   per non-empty cell, the [min, max] range into A
+    B   sorted linearized ids of the non-empty cells (binary-searched)
+    M_j per-dimension list of non-empty cell coordinates (range masking)
+
+Only non-empty cells are stored, so space is O(|D|) independent of the
+(hyper)volume (paper SIV-D). We provide two builders:
+
+  * ``build_grid_host`` -- exact, numpy, on the host. Mirrors the paper: the
+    CUDA version also builds the index on the host before shipping it to the
+    device ("inserting points into the grid requires far less work than
+    constructing the R-tree", SVI-B).
+  * ``build_grid`` -- fully jittable, shapes padded to |D| (the number of
+    non-empty cells is at most |D|), for use inside shard_map / pjit where
+    host round-trips are impossible.
+
+Both produce the same ``GridIndex`` pytree; the joins in ``selfjoin.py``
+consume either.
+
+TPU adaptation note (DESIGN.md S2): the per-thread binary search of B in the
+paper's kernel is replaced by vectorized ``searchsorted`` over all cells per
+stencil offset at *search* time; the per-dimension masks M_j are kept for the
+host path and subsumed by the searchsorted miss (-1) on the device path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel linear key for padding slots in B. Must compare greater than any
+# real key so searchsorted never matches it.
+PAD_KEY = jnp.iinfo(jnp.int64).max
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GridIndex:
+    """The paper's index (A/G/B + geometry), as a JAX pytree.
+
+    Arrays are padded to static shapes: ``cell_keys``/``cell_start``/
+    ``cell_count`` have length ``num_points`` with ``num_cells`` valid
+    entries; padding keys are PAD_KEY.
+    """
+
+    # --- geometry (paper SIV-B) ---
+    grid_min: jax.Array      # (n,) g_j^min = min x_j - eps
+    eps: jax.Array           # () scalar
+    dims: jax.Array          # (n,) |g_j| cells per dimension, int64
+    # --- components (paper SIV-C) ---
+    order: jax.Array         # (|D|,) int32 == A : point ids grouped by cell
+    points_sorted: jax.Array # (|D|, n)  D[A] : coordinates in A-order
+    cell_keys: jax.Array     # (|D|,) int64 == B : sorted linear ids (padded)
+    cell_start: jax.Array    # (|D|,) int32 == G.min : offset into A
+    cell_count: jax.Array    # (|D|,) int32 == G.max-G.min+1
+    point_cell_rank: jax.Array  # (|D|,) int32: rank in B of each sorted point's cell
+    num_cells: jax.Array     # () int32 |G| = |B|
+    max_per_cell: jax.Array  # () int32 (exact on host path; reported on jit path)
+
+    @property
+    def n_dims(self) -> int:
+        return self.points_sorted.shape[1]
+
+    @property
+    def num_points(self) -> int:
+        return self.points_sorted.shape[0]
+
+
+def cell_coords(points: jax.Array, grid_min: jax.Array, eps) -> jax.Array:
+    """n-dimensional integer cell coordinates of each point (int64).
+
+    The grid range is appended by eps on both sides (paper SIV-B), so every
+    point's coordinate is >= 1 and adjacent-cell lookups never go negative.
+    """
+    return jnp.floor((points - grid_min) / eps).astype(jnp.int64)
+
+
+def linearize(coords: jax.Array, dims: jax.Array) -> jax.Array:
+    """Row-major linear cell id (paper Fig. 2b's lexicographic cell id).
+
+    int64: for 6-D data the id space is prod |g_j| which overflows int32.
+    """
+    coords = coords.astype(jnp.int64)
+    dims = dims.astype(jnp.int64)
+    n = coords.shape[-1]
+    key = coords[..., 0]
+    for j in range(1, n):
+        key = key * dims[j] + coords[..., j]
+    return key
+
+
+def grid_geometry(points: jax.Array, eps) -> tuple[jax.Array, jax.Array]:
+    """grid_min (g_j^min) and dims (|g_j|) per paper SIV-B.
+
+    g_j^min = min_j - eps ; g_j^max = max_j + eps ; |g_j| = ceil(range/eps).
+    """
+    eps = jnp.asarray(eps, points.dtype)
+    gmin = points.min(axis=0) - eps
+    gmax = points.max(axis=0) + eps
+    dims = jnp.ceil((gmax - gmin) / eps).astype(jnp.int64) + 1
+    return gmin, dims
+
+
+# ---------------------------------------------------------------------------
+# Host (exact) build -- mirrors the paper's host-side index construction.
+# ---------------------------------------------------------------------------
+
+def build_grid_host(points: np.ndarray, eps: float) -> GridIndex:
+    """Exact epsilon-grid build in numpy. Returns a device GridIndex."""
+    points = np.asarray(points)
+    npts, n = points.shape
+    gmin = points.min(axis=0) - eps
+    gmax = points.max(axis=0) + eps
+    dims = (np.ceil((gmax - gmin) / eps)).astype(np.int64) + 1
+
+    coords = np.floor((points - gmin) / eps).astype(np.int64)
+    keys = coords[:, 0]
+    for j in range(1, n):
+        keys = keys * dims[j] + coords[:, j]
+
+    order = np.argsort(keys, kind="stable").astype(np.int32)
+    keys_sorted = keys[order]
+
+    uniq, start, count = np.unique(keys_sorted, return_index=True, return_counts=True)
+    ncells = uniq.shape[0]
+
+    cell_keys = np.full(npts, np.iinfo(np.int64).max, dtype=np.int64)
+    cell_keys[:ncells] = uniq
+    cell_start = np.zeros(npts, dtype=np.int32)
+    cell_start[:ncells] = start
+    cell_count = np.zeros(npts, dtype=np.int32)
+    cell_count[:ncells] = count
+
+    rank = np.searchsorted(uniq, keys_sorted).astype(np.int32)
+
+    return GridIndex(
+        grid_min=jnp.asarray(gmin),
+        eps=jnp.asarray(eps, dtype=points.dtype),
+        dims=jnp.asarray(dims),
+        order=jnp.asarray(order),
+        points_sorted=jnp.asarray(points[order]),
+        cell_keys=jnp.asarray(cell_keys),
+        cell_start=jnp.asarray(cell_start),
+        cell_count=jnp.asarray(cell_count),
+        point_cell_rank=jnp.asarray(rank),
+        num_cells=jnp.asarray(ncells, dtype=jnp.int32),
+        max_per_cell=jnp.asarray(int(count.max()) if ncells else 0, dtype=jnp.int32),
+    )
+
+
+def masks_host(index: GridIndex) -> list[np.ndarray]:
+    """The paper's per-dimension masking arrays M_j (SIV-C).
+
+    M_j = sorted unique non-empty cell coordinates in dimension j. Used by the
+    host reference search; the device path folds this pruning into the
+    neighbor-table searchsorted (a miss there prunes the same cells and more).
+    """
+    keys = np.asarray(index.cell_keys[: int(index.num_cells)])
+    dims = np.asarray(index.dims)
+    n = dims.shape[0]
+    coords = np.empty((keys.shape[0], n), dtype=np.int64)
+    rem = keys.copy()
+    for j in range(n - 1, 0, -1):
+        coords[:, j] = rem % dims[j]
+        rem //= dims[j]
+    coords[:, 0] = rem
+    return [np.unique(coords[:, j]) for j in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Jitted (padded) build -- for shard_map / end-to-end compiled pipelines.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=())
+def build_grid(points: jax.Array, eps: jax.Array) -> GridIndex:
+    """Jittable epsilon-grid build with |G| padded to |D|.
+
+    Identical semantics to ``build_grid_host``; the number of non-empty cells
+    is data-dependent, so B/G arrays carry |D| slots with ``num_cells`` valid.
+    """
+    gmin, dims = grid_geometry(points, eps)
+    return build_grid_with_geometry(points, eps, gmin, dims)
+
+
+def build_grid_with_geometry(
+    points: jax.Array, eps, gmin: jax.Array, dims: jax.Array,
+    valid: Optional[jax.Array] = None,
+) -> GridIndex:
+    """Jittable grid build against externally supplied geometry.
+
+    Used by the distributed slab join (core/distributed.py): every device
+    builds its local grid against the *global* gmin/dims so cell coordinates
+    -- and therefore the UNICOMP cell-pair ownership rule -- are consistent
+    across devices (DESIGN.md S3).
+
+    ``valid`` marks real points; invalid (padding) points are assigned the
+    sentinel cell key prod(dims), which sorts after every real cell and can
+    never be produced by a real cell + stencil-offset lookup, so padding
+    points are unreachable as candidates. ``max_per_cell`` excludes the
+    sentinel cell.
+    """
+    npts, _ = points.shape
+    keys = linearize(cell_coords(points, gmin, eps), dims)
+    sentinel = jnp.prod(dims.astype(jnp.int64))
+    if valid is not None:
+        keys = jnp.where(valid, keys, sentinel)
+
+    order = jnp.argsort(keys, stable=True).astype(jnp.int32)
+    keys_sorted = keys[order]
+
+    # Segment boundaries of the sorted key array -> non-empty cells.
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), keys_sorted[1:] != keys_sorted[:-1]]
+    )
+    ncells = is_start.sum().astype(jnp.int32)
+    # Rank of each sorted point's cell in B (0-based).
+    rank = (jnp.cumsum(is_start) - 1).astype(jnp.int32)
+
+    # Scatter segment starts into padded arrays. Valid slots: [0, ncells).
+    seg_idx = jnp.where(is_start, rank, npts)  # pad writes -> dropped
+    positions = jnp.arange(npts, dtype=jnp.int32)
+    cell_start = jnp.zeros(npts, jnp.int32).at[seg_idx].set(positions, mode="drop")
+    cell_keys = jnp.full(npts, PAD_KEY, jnp.int64).at[seg_idx].set(
+        keys_sorted, mode="drop"
+    )
+    # count[h] = start[h+1] - start[h]; for the last valid cell use npts.
+    nxt = jnp.concatenate([cell_start[1:], jnp.zeros((1,), jnp.int32)])
+    idx = jnp.arange(npts, dtype=jnp.int32)
+    nxt = jnp.where(idx == ncells - 1, npts, nxt)
+    cell_count = jnp.where(idx < ncells, nxt - cell_start, 0).astype(jnp.int32)
+
+    real_count = jnp.where(cell_keys < sentinel, cell_count, 0)
+    return GridIndex(
+        grid_min=gmin,
+        eps=jnp.asarray(eps, points.dtype),
+        dims=dims,
+        order=order,
+        points_sorted=points[order],
+        cell_keys=cell_keys,
+        cell_start=cell_start,
+        cell_count=cell_count,
+        point_cell_rank=rank,
+        num_cells=ncells,
+        max_per_cell=real_count.max().astype(jnp.int32),
+    )
+
+
+def neighbor_rank(index: GridIndex, query_keys: jax.Array) -> jax.Array:
+    """Vectorized membership lookup in B: rank of each key, or -1 if absent.
+
+    This is the TPU-native replacement for the paper's per-thread binary
+    search (Alg. 1 line 11): one batched ``searchsorted`` over all queries.
+    """
+    pos = jnp.searchsorted(index.cell_keys, query_keys).astype(jnp.int32)
+    pos = jnp.minimum(pos, index.num_points - 1)
+    hit = index.cell_keys[pos] == query_keys
+    return jnp.where(hit, pos, -1)

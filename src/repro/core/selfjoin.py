@@ -1,0 +1,590 @@
+"""The self-join (paper Alg. 1 + SV optimizations), TPU-native formulation.
+
+The paper's CUDA kernel is thread-per-point: each thread walks the 3^n
+adjacent cells of its point, binary-searches B per cell, and appends result
+pairs through a global atomic. On a TPU there are no per-lane scatters or
+atomics, so we restructure the same computation as an **offset sweep**
+(DESIGN.md S2):
+
+    for each stencil offset o in {-1,0,1}^n (or the UNICOMP half-stencil):
+        nbr[h]   = rank in B of (cell h + o)          -- one batched searchsorted
+        for every query point i (vectorized):          -- regular, branch-free
+            candidates = A[start[nbr[rank_i]] : +count]  (padded to C_max slots)
+            hits       = ||q_i - cand||^2 <= eps^2       (masked)
+
+The candidate distance evaluation is the compute hot-spot; it is pluggable
+(``distance_impl``): 'jnp' (reference) or 'pallas' (kernels/cell_join.py,
+MXU formulation).
+
+Result emission replaces the paper's atomics with a two-phase
+count -> exclusive-scan -> scatter fill; the paper sorts the key/value result
+after the kernel, and we optionally do the same. Batching over query points
+(paper SV-A) bounds both the result buffer and the gathered-candidate
+intermediate; the driver ``self_join_batched`` uses >= 3 batches like the
+paper and overlaps device compute with host transfers via JAX async dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grid as grid_lib
+from repro.core.grid import GridIndex, PAD_KEY, build_grid_host, neighbor_rank
+from repro.core.stencil import stencil_offsets
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinStats:
+    """Work counters (paper Table II analogue: cells and distances checked)."""
+
+    total_pairs: int          # ordered pairs with dist <= eps (excl. self)
+    cells_visited: int        # non-empty adjacent cells evaluated
+    candidates_checked: int   # candidate slots with a real point
+    offsets: int              # stencil offsets swept
+
+
+def _strides(dims: jax.Array) -> jax.Array:
+    """Row-major strides s_j = prod_{k>j} dims_k, so key(c+o)=key(c)+o.s."""
+    rev = jnp.cumprod(dims[::-1])          # d_{n-1}, d_{n-1}d_{n-2}, ...
+    return jnp.concatenate([rev[-2::-1], jnp.ones((1,), dims.dtype)])
+
+
+def _offset_tables(index: GridIndex, unicomp: bool):
+    """Static offset list -> (deltas (n_off,), is_zero (n_off,)) device arrays."""
+    offs = stencil_offsets(index.n_dims, unicomp)          # (n_off, n) np
+    deltas = jnp.asarray(offs) @ _strides(index.dims)      # (n_off,) int64
+    is_zero = jnp.asarray(np.all(offs == 0, axis=1))
+    return deltas, is_zero
+
+
+def _neighbor_ranks_for_delta(index: GridIndex, delta: jax.Array) -> jax.Array:
+    """Rank in B of (cell + offset) for every non-empty cell; -1 if absent.
+
+    Padding cells resolve to padding slots whose cell_count is 0, so they
+    contribute no candidates downstream.
+    """
+    valid = jnp.arange(index.num_points) < index.num_cells
+    base = jnp.where(valid, index.cell_keys, 0)
+    qk = jnp.where(valid, base + delta, PAD_KEY)
+    return neighbor_rank(index, qk)
+
+
+def _distance_hits_jnp(q, cand, valid, eps):
+    """Reference candidate evaluation: (B,n) x (B,C,n) -> (B,C) bool hits."""
+    d2 = jnp.sum((q[:, None, :] - cand) ** 2, axis=-1)
+    return (d2 <= eps * eps) & valid
+
+
+def _get_distance_impl(name: str):
+    if name == "jnp":
+        return _distance_hits_jnp
+    if name == "pallas":
+        from repro.kernels.ops import cell_join_hits
+
+        return cell_join_hits
+    raise ValueError(f"unknown distance_impl {name!r}")
+
+
+def _gather_batch(index: GridIndex, nbr_rank_cells, q_start, q_size, max_per_cell):
+    """Candidate window of each query in the batch under one stencil offset.
+
+    Returns (q (q_size,n), cand (q_size,C,n), cand_pos (q_size,C) int32,
+    valid (q_size,C) bool, q_pos (q_size,) int32 position in sorted order).
+    """
+    q_pos = q_start + jnp.arange(q_size, dtype=jnp.int32)
+    q_ok = q_pos < index.num_points
+    q_pos_c = jnp.minimum(q_pos, index.num_points - 1)
+    q = index.points_sorted[q_pos_c]
+    rank = index.point_cell_rank[q_pos_c]
+    nbr = nbr_rank_cells[rank]                       # (q_size,) rank in B or -1
+    nbr_c = jnp.maximum(nbr, 0)
+    start = index.cell_start[nbr_c]
+    count = jnp.where(nbr >= 0, index.cell_count[nbr_c], 0)
+    slots = jnp.arange(max_per_cell, dtype=jnp.int32)
+    cand_pos = start[:, None] + slots[None, :]       # (q_size, C)
+    valid = (slots[None, :] < count[:, None]) & q_ok[:, None]
+    cand_pos_c = jnp.minimum(cand_pos, index.num_points - 1)
+    cand = index.points_sorted[cand_pos_c]
+    return q, cand, cand_pos_c, valid, q_pos_c, q_ok
+
+
+@partial(
+    jax.jit,
+    static_argnames=("q_size", "max_per_cell", "unicomp", "distance_impl"),
+)
+def _count_batch(
+    index: GridIndex,
+    deltas: jax.Array,
+    is_zero: jax.Array,
+    q_start: jax.Array,
+    *,
+    q_size: int,
+    max_per_cell: int,
+    unicomp: bool,
+    distance_impl: str = "jnp",
+):
+    """Count phase: ordered-pair total + work counters for one query batch."""
+    hits_fn = _get_distance_impl(distance_impl)
+    eps = index.eps
+
+    def body(carry, xs):
+        total, cells, cands = carry
+        delta, zero = xs
+        nbr_cells = _neighbor_ranks_for_delta(index, delta)
+        q, cand, cand_pos, valid, q_pos, q_ok = _gather_batch(
+            index, nbr_cells, q_start, q_size, max_per_cell
+        )
+        hits = hits_fn(q, cand, valid, eps)
+        if unicomp:
+            # o = 0: strict upper triangle within the cell; o != 0: all pairs.
+            # Every hit is an unordered pair -> contributes 2 ordered pairs.
+            tri = cand_pos > q_pos[:, None]
+            hits = hits & jnp.where(zero, tri, True)
+            n_ordered = 2 * hits.sum()
+        else:
+            # full stencil: each ordered pair found exactly once; drop self.
+            hits = hits & (cand_pos != q_pos[:, None])
+            n_ordered = hits.sum()
+        # work counters (paper Table II analogue)
+        valid_rank = index.point_cell_rank[
+            jnp.minimum(
+                q_start + jnp.arange(q_size, dtype=jnp.int32), index.num_points - 1
+            )
+        ]
+        visited = (nbr_cells[valid_rank] >= 0) & q_ok
+        return (
+            total + n_ordered,
+            cells + visited.sum(),
+            cands + valid.sum(),
+        ), None
+
+    init = (jnp.zeros((), jnp.int64),) * 3
+    (total, cells, cands), _ = jax.lax.scan(body, init, (deltas, is_zero))
+    return total, cells, cands
+
+
+@partial(
+    jax.jit,
+    static_argnames=("q_size", "max_per_cell", "unicomp", "capacity", "distance_impl"),
+)
+def _fill_batch(
+    index: GridIndex,
+    deltas: jax.Array,
+    is_zero: jax.Array,
+    q_start: jax.Array,
+    *,
+    q_size: int,
+    max_per_cell: int,
+    unicomp: bool,
+    capacity: int,
+    distance_impl: str = "jnp",
+):
+    """Fill phase: emit ordered pairs (original point ids) into a flat buffer.
+
+    The paper's kernel appends through a global atomic and sorts afterwards;
+    we compute each hit's output slot with a cumulative sum (deterministic)
+    and scatter. Returns (keys, vals, count); slots >= count are PAD (-1).
+    """
+    hits_fn = _get_distance_impl(distance_impl)
+    eps = index.eps
+    orig_id = index.order  # sorted position -> original point id
+
+    def body(carry, xs):
+        cursor, keys, vals = carry
+        delta, zero = xs
+        nbr_cells = _neighbor_ranks_for_delta(index, delta)
+        q, cand, cand_pos, valid, q_pos, _ = _gather_batch(
+            index, nbr_cells, q_start, q_size, max_per_cell
+        )
+        hits = hits_fn(q, cand, valid, eps)
+        if unicomp:
+            tri = cand_pos > q_pos[:, None]
+            hits = hits & jnp.where(zero, tri, True)
+        else:
+            hits = hits & (cand_pos != q_pos[:, None])
+        flat = hits.reshape(-1)
+        rel = jnp.cumsum(flat.astype(jnp.int64)) - 1      # position among hits
+        n_hits = jnp.where(flat.shape[0] > 0, rel[-1] + 1, 0)
+        qid = jnp.broadcast_to(orig_id[q_pos][:, None], hits.shape).reshape(-1)
+        cid = orig_id[cand_pos].reshape(-1)
+        if unicomp:
+            pos_fwd = cursor + 2 * rel
+            pos_rev = pos_fwd + 1
+            idx_fwd = jnp.where(flat, pos_fwd, capacity)
+            idx_rev = jnp.where(flat, pos_rev, capacity)
+            keys = keys.at[idx_fwd].set(qid, mode="drop")
+            vals = vals.at[idx_fwd].set(cid, mode="drop")
+            keys = keys.at[idx_rev].set(cid, mode="drop")
+            vals = vals.at[idx_rev].set(qid, mode="drop")
+            cursor = cursor + 2 * n_hits
+        else:
+            pos = cursor + rel
+            idx = jnp.where(flat, pos, capacity)
+            keys = keys.at[idx].set(qid, mode="drop")
+            vals = vals.at[idx].set(cid, mode="drop")
+            cursor = cursor + n_hits
+        return (cursor, keys, vals), None
+
+    keys0 = jnp.full((capacity,), -1, jnp.int32)
+    vals0 = jnp.full((capacity,), -1, jnp.int32)
+    (count, keys, vals), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.int64), keys0, vals0), (deltas, is_zero)
+    )
+    return keys, vals, count
+
+
+def _resolve_index(points, eps, index: Optional[GridIndex]) -> GridIndex:
+    if index is not None:
+        return index
+    return build_grid_host(np.asarray(points), float(eps))
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cap_q", "max_per_cell", "unicomp", "distance_impl"),
+)
+def _count_compact(
+    index: GridIndex,
+    deltas: jax.Array,          # o != 0 offsets only
+    *,
+    cap_q: int,
+    max_per_cell: int,
+    unicomp: bool,
+    distance_impl: str = "jnp",
+):
+    """Compacted sweep over the non-zero stencil offsets.
+
+    In high dimensionality most (query, offset) probes hit an EMPTY neighbor
+    cell (uniform 6-D: >90% misses), yet the dense sweep still gathers a full
+    max_per_cell window of padding for each -- the dominant HBM traffic term
+    (EXPERIMENTS.md SPerf). Here queries with a live neighbor are packed into
+    ``cap_q`` slots per offset BEFORE the gather, so traffic scales with
+    *actual* candidate volume. ``cap_q`` is exact: the driver computes
+    max-over-offsets of the live-query count from the host grid, so no
+    overflow is possible. The o=0 (own cell) pass stays dense -- every query
+    is live there.
+    """
+    hits_fn = _get_distance_impl(distance_impl)
+    eps = index.eps
+    npts = index.num_points
+
+    def body(carry, delta):
+        total, slots = carry
+        nbr_cells = _neighbor_ranks_for_delta(index, delta)
+        q_pos_all = jnp.arange(npts, dtype=jnp.int32)
+        rank = index.point_cell_rank
+        nbr_all = nbr_cells[rank]                     # (|D|,)
+        live = nbr_all >= 0
+        packed = jnp.argsort(~live)[:cap_q].astype(jnp.int32)
+        p_live = live[packed]
+        q_pos = packed
+        nbr = nbr_all[packed]
+        nbr_c = jnp.maximum(nbr, 0)
+        start = index.cell_start[nbr_c]
+        count = jnp.where(p_live, index.cell_count[nbr_c], 0)
+        sl = jnp.arange(max_per_cell, dtype=jnp.int32)
+        cand_pos = jnp.minimum(start[:, None] + sl[None, :], npts - 1)
+        valid = sl[None, :] < count[:, None]
+        q = index.points_sorted[q_pos]
+        cand = index.points_sorted[cand_pos]
+        hits = hits_fn(q, cand, valid, eps)
+        if unicomp:
+            n = 2 * hits.sum()
+        else:
+            hits = hits & (cand_pos != q_pos[:, None])
+            n = hits.sum()
+        return (total + n.astype(jnp.int64),
+                slots + valid.sum(dtype=jnp.int64)), None
+
+    init = (jnp.zeros((), jnp.int64), jnp.zeros((), jnp.int64))
+    (total, slots), _ = jax.lax.scan(body, init, deltas)
+    return total, slots
+
+
+def compact_cap(index: GridIndex, unicomp: bool) -> int:
+    """Exact max live-query count over non-zero offsets (host side)."""
+    ncells = int(index.num_cells)
+    keys = np.asarray(index.cell_keys[:ncells])
+    counts = np.asarray(index.cell_count[:ncells]).astype(np.int64)
+    deltas = np.asarray(_offset_tables(index, unicomp)[0][1:])  # skip o=0
+    cap = 1
+    for delta in deltas:
+        pos = np.searchsorted(keys, keys + delta)
+        pos = np.minimum(pos, ncells - 1)
+        live = keys[pos] == keys + delta
+        cap = max(cap, int(counts[live].sum()))
+    return cap
+
+
+def self_join_count_compact(
+    points,
+    eps,
+    *,
+    unicomp: bool = True,
+    index: Optional[GridIndex] = None,
+    distance_impl: str = "jnp",
+) -> JoinStats:
+    """self_join_count with empty-neighbor compaction (beyond-paper opt)."""
+    index = _resolve_index(points, eps, index)
+    max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
+    deltas, is_zero = _offset_tables(index, unicomp)
+    cap_q = _round_up(compact_cap(index, unicomp), 128)
+    # o = 0 dense pass (every query is live in its own cell)
+    t0, _, k0 = _count_batch(
+        index, deltas[:1], is_zero[:1], jnp.asarray(0, jnp.int32),
+        q_size=index.num_points, max_per_cell=max_per_cell, unicomp=unicomp,
+        distance_impl=distance_impl)
+    tn, slots = _count_compact(
+        index, deltas[1:], cap_q=min(cap_q, index.num_points),
+        max_per_cell=max_per_cell, unicomp=unicomp,
+        distance_impl=distance_impl)
+    return JoinStats(
+        total_pairs=int(t0) + int(tn),
+        cells_visited=0,
+        candidates_checked=int(k0) + int(slots),
+        offsets=int(deltas.shape[0]),
+    )
+
+
+def self_join_count(
+    points,
+    eps,
+    *,
+    unicomp: bool = True,
+    index: Optional[GridIndex] = None,
+    distance_impl: str = "jnp",
+    query_batch: Optional[int] = None,
+) -> JoinStats:
+    """Total ordered-pair count + work counters (no materialized result)."""
+    index = _resolve_index(points, eps, index)
+    npts = index.num_points
+    deltas, is_zero = _offset_tables(index, unicomp)
+    max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
+    q_size = int(query_batch) if query_batch else npts
+    total = cells = cands = 0
+    for q_start in range(0, npts, q_size):
+        t, c, k = _count_batch(
+            index,
+            deltas,
+            is_zero,
+            jnp.asarray(q_start, jnp.int32),
+            q_size=q_size,
+            max_per_cell=max_per_cell,
+            unicomp=unicomp,
+            distance_impl=distance_impl,
+        )
+        total += int(t)
+        cells += int(c)
+        cands += int(k)
+    return JoinStats(
+        total_pairs=total,
+        cells_visited=cells,
+        candidates_checked=cands,
+        offsets=int(deltas.shape[0]),
+    )
+
+
+def self_join(
+    points,
+    eps,
+    *,
+    unicomp: bool = True,
+    index: Optional[GridIndex] = None,
+    distance_impl: str = "jnp",
+    sort_result: bool = True,
+):
+    """Single-batch self-join. Returns (pairs (K,2) int32 np.ndarray).
+
+    Two-phase: exact count, then fill with exactly-sized capacity. For the
+    incremental / overlapped execution the paper uses, see
+    ``self_join_batched``.
+    """
+    index = _resolve_index(points, eps, index)
+    stats = self_join_count(
+        points, eps, unicomp=unicomp, index=index, distance_impl=distance_impl
+    )
+    capacity = max(stats.total_pairs, 1)
+    deltas, is_zero = _offset_tables(index, unicomp)
+    max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
+    keys, vals, count = _fill_batch(
+        index,
+        deltas,
+        is_zero,
+        jnp.asarray(0, jnp.int32),
+        q_size=index.num_points,
+        max_per_cell=max_per_cell,
+        unicomp=unicomp,
+        capacity=capacity,
+        distance_impl=distance_impl,
+    )
+    assert int(count) == stats.total_pairs, (int(count), stats.total_pairs)
+    pairs = np.stack([np.asarray(keys), np.asarray(vals)], axis=1)[: int(count)]
+    if sort_result:  # the paper sorts the key/value result after the kernel
+        pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+    return pairs
+
+
+def self_join_batched(
+    points,
+    eps,
+    *,
+    unicomp: bool = True,
+    n_batches: int = 3,
+    index: Optional[GridIndex] = None,
+    distance_impl: str = "jnp",
+    sort_result: bool = True,
+):
+    """The paper's batching scheme (SV-A): >= 3 query batches, each batch's
+    result copied to the host while the next batch computes (JAX async
+    dispatch provides the overlap; on TPU these run on separate streams).
+
+    Memory high-water is O(|D|/n_batches * C_max) intermediates + one batch
+    result, instead of the full result set -- this is what lets result sets
+    larger than device memory complete (paper Fig. 1 regime).
+    """
+    index = _resolve_index(points, eps, index)
+    npts = index.num_points
+    n_batches = max(int(n_batches), 1)
+    q_size = -(-npts // n_batches)  # ceil
+    deltas, is_zero = _offset_tables(index, unicomp)
+    max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
+
+    # Phase 1: per-batch exact counts (cheap; no result materialization).
+    counts = []
+    for b in range(n_batches):
+        t, _, _ = _count_batch(
+            index,
+            deltas,
+            is_zero,
+            jnp.asarray(b * q_size, jnp.int32),
+            q_size=q_size,
+            max_per_cell=max_per_cell,
+            unicomp=unicomp,
+            distance_impl=distance_impl,
+        )
+        counts.append(t)
+    counts = [int(t) for t in counts]  # sync point
+    capacity = max(max(counts), 1)     # one fill compilation reused per batch
+
+    # Phase 2: fill batches; async dispatch overlaps batch b+1 compute with
+    # batch b's D2H transfer (np.asarray blocks only on b's buffers).
+    device_results = []
+    for b in range(n_batches):
+        keys, vals, cnt = _fill_batch(
+            index,
+            deltas,
+            is_zero,
+            jnp.asarray(b * q_size, jnp.int32),
+            q_size=q_size,
+            max_per_cell=max_per_cell,
+            unicomp=unicomp,
+            capacity=capacity,
+            distance_impl=distance_impl,
+        )
+        device_results.append((keys, vals, cnt))
+
+    out = np.empty((sum(counts), 2), dtype=np.int32)
+    pos = 0
+    for b, (keys, vals, cnt) in enumerate(device_results):
+        k = counts[b]
+        assert int(cnt) == k
+        out[pos : pos + k, 0] = np.asarray(keys)[:k]
+        out[pos : pos + k, 1] = np.asarray(vals)[:k]
+        pos += k
+    if sort_result:
+        out = out[np.lexsort((out[:, 1], out[:, 0]))]
+    return out
+
+
+def range_query(
+    queries,
+    points,
+    eps,
+    *,
+    index: Optional[GridIndex] = None,
+) -> np.ndarray:
+    """Epsilon-range counts for EXTERNAL query points against an indexed set.
+
+    The serving-side building block (launch/serve.py): the grid is built once
+    over ``points``; each request batch of queries is answered by the same
+    bounded adjacent-cell sweep, with the query's cell derived from its
+    coordinates (queries need not belong to the dataset). Returns (Q,) int32
+    neighbor counts; the DBSCAN-style use the paper cites (SII).
+    """
+    index = _resolve_index(points, eps, index)
+    queries = jnp.asarray(queries)
+    deltas, _ = _offset_tables(index, unicomp=False)
+    max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
+
+    @jax.jit
+    def run(index, queries):
+        # cell key of each query under the dataset's grid geometry
+        qcoords = grid_lib.cell_coords(queries, index.grid_min, index.eps)
+        # clamp into the grid (queries may fall outside the indexed volume)
+        qcoords = jnp.clip(qcoords, 1, index.dims - 2)
+        qkeys = grid_lib.linearize(qcoords, index.dims)
+        eps2 = index.eps * index.eps
+
+        def body(counts, delta):
+            nbr = neighbor_rank(index, qkeys + delta)      # (Q,)
+            nbr_c = jnp.maximum(nbr, 0)
+            start = index.cell_start[nbr_c]
+            count = jnp.where(nbr >= 0, index.cell_count[nbr_c], 0)
+            slots = jnp.arange(max_per_cell, dtype=jnp.int32)
+            pos = jnp.minimum(start[:, None] + slots[None, :],
+                              index.num_points - 1)
+            valid = slots[None, :] < count[:, None]
+            cand = index.points_sorted[pos]
+            d2 = jnp.sum((queries[:, None, :] - cand) ** 2, axis=-1)
+            hits = (d2 <= eps2) & valid
+            return counts + hits.sum(axis=1, dtype=jnp.int32), None
+
+        counts0 = jnp.zeros((queries.shape[0],), jnp.int32)
+        counts, _ = jax.lax.scan(body, counts0, deltas)
+        return counts
+
+    return np.asarray(run(index, queries))
+
+
+def per_point_neighbor_counts(
+    points,
+    eps,
+    *,
+    index: Optional[GridIndex] = None,
+) -> np.ndarray:
+    """|epsilon-neighborhood| of each point (excl. self) -- the range-query
+    building block the paper cites for DBSCAN/OPTICS. Full-stencil sweep with
+    a scatter-add on the query id."""
+    index = _resolve_index(points, eps, index)
+    deltas, is_zero = _offset_tables(index, unicomp=False)
+    max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
+
+    @jax.jit
+    def run(index):
+        def body(deg, xs):
+            delta, _ = xs
+            nbr_cells = _neighbor_ranks_for_delta(index, delta)
+            q, cand, cand_pos, valid, q_pos, _ = _gather_batch(
+                index, nbr_cells, jnp.asarray(0, jnp.int32),
+                index.num_points, max_per_cell,
+            )
+            hits = _distance_hits_jnp(q, cand, valid, index.eps)
+            hits = hits & (cand_pos != q_pos[:, None])
+            deg = deg.at[index.order[q_pos]].add(hits.sum(axis=1).astype(jnp.int32))
+            return deg, None
+
+        deg0 = jnp.zeros((index.num_points,), jnp.int32)
+        deg, _ = jax.lax.scan(body, deg0, (deltas, is_zero))
+        return deg
+
+    return np.asarray(run(index))

@@ -1,0 +1,81 @@
+"""Adjacent-cell stencils and the UNICOMP work-halving (paper SV-B).
+
+The search for neighbors of a point in cell c is bounded to the 3^n adjacent
+cells c + o, o in {-1,0,+1}^n (paper SIV-D). UNICOMP ("uni-directional
+comparison") evaluates each unordered *pair of cells* exactly once and emits
+both orders of every found pair, halving cell evaluations and distance
+calculations.
+
+The paper formulates UNICOMP with an odd/even cell-coordinate rule (Alg. 2):
+a cell with odd coordinate in dimension j evaluates the neighbors differing
+in dimension j. Observe what that rule computes: for every unordered pair of
+adjacent cells (a, b), exactly one of a, b evaluates the other. Our TPU
+formulation achieves the same single-evaluation property directly with a
+*lexicographically positive* half-stencil:
+
+    keep offset o  iff  o = 0  or  the first nonzero coordinate of o is +1
+
+(3^n - 1)/2 + 1 offsets survive instead of 3^n. o = 0 (the cell itself) is
+handled with an intra-cell upper-triangle mask. Equivalence to the paper's
+odd/even rule is checked in tests/test_selfjoin.py: both evaluate each
+unordered adjacent cell pair exactly once, so the produced pair sets are
+identical; the half-stencil is branch-free and offset-static, which suits a
+vector machine (DESIGN.md S2).
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+
+def stencil_offsets(n: int, unicomp: bool) -> np.ndarray:
+    """All 3^n adjacent-cell offsets, or the UNICOMP half-stencil.
+
+    Returns (n_offsets, n) int64. The zero offset is always first.
+    """
+    offs = np.array(list(itertools.product((-1, 0, 1), repeat=n)), dtype=np.int64)
+    if unicomp:
+        keep = []
+        for o in offs:
+            nz = np.nonzero(o)[0]
+            if nz.size == 0 or o[nz[0]] > 0:
+                keep.append(o)
+        offs = np.stack(keep)
+    # zero offset first (intra-cell pass)
+    zkey = np.all(offs == 0, axis=1)
+    offs = np.concatenate([offs[zkey], offs[~zkey]], axis=0)
+    return offs
+
+
+def unicomp_paper_visits(coord: np.ndarray, n: int) -> list[tuple]:
+    """The paper's Alg. 2 odd/even rule, as offsets visited by cell ``coord``.
+
+    Reference-only (used by tests to prove pair-coverage equivalence with the
+    half-stencil). Alg. 2's pass for dimension j visits offsets o with
+    o[j] != 0, o[k] = 0 for k > j, and o[k] free for k < j -- i.e. the pass
+    that owns offset o is its *last* nonzero dimension. The pass runs iff
+    coord[j] is odd. Since adjacent cells differ by 1 in that dimension,
+    exactly one endpoint of every unordered adjacent-cell pair is odd there,
+    so each pair is evaluated exactly once -- the same invariant as our
+    lexicographic half-stencil.
+    """
+    visits = []
+    for o in itertools.product((-1, 0, 1), repeat=n):
+        o = np.array(o, dtype=np.int64)
+        nz = np.nonzero(o)[0]
+        if nz.size == 0:
+            continue
+        j = nz[-1]  # the paper pass that owns this offset
+        if coord[j] % 2 == 1:
+            visits.append(tuple(o))
+        # even coordinate in dim j: the *neighbor* cell owns the pair; its
+        # coordinate in dim j is coord[j] +- 1, which is odd.
+    return visits
+
+
+def offsets_array(n: int, unicomp: bool):
+    """stencil_offsets as a device-ready array (import-light helper)."""
+    import jax.numpy as jnp
+
+    return jnp.asarray(stencil_offsets(n, unicomp))

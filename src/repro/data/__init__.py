@@ -1,0 +1,5 @@
+"""Data substrate: synthetic token pipeline + self-join dedup operator."""
+from repro.data.pipeline import TokenPipeline
+from repro.data.dedup import dedup_batch, embed_ngrams
+
+__all__ = ["TokenPipeline", "dedup_batch", "embed_ngrams"]

@@ -1,0 +1,70 @@
+"""Near-duplicate removal via the paper's epsilon self-join.
+
+This is the framework's first-class integration of the paper's technique
+(DESIGN.md SArch-applicability): documents are embedded into a *low
+dimensional* space (n-gram count sketch -> random projection to 2-6 D,
+exactly the dimensionality regime the paper targets), then a distance
+similarity self-join with radius eps finds all near-duplicate pairs, and one
+element of every pair is dropped (lowest-id survivor, union-find over join
+pairs so duplicate *clusters* keep exactly one representative).
+
+The join is the GPU-SJ algorithm: grid index + UNICOMP + batched result
+(core/selfjoin.py), i.e. the data pipeline literally runs the paper's
+contribution on every batch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.selfjoin import self_join
+
+
+def embed_ngrams(tokens: np.ndarray, n_dims: int = 4, n: int = 2,
+                 n_hash: int = 64, seed: int = 1234) -> np.ndarray:
+    """(B, S) int tokens -> (B, n_dims) float64 document sketch.
+
+    Hashed n-gram counts (n_hash buckets, L2-normalized) followed by a fixed
+    Gaussian random projection to n_dims. Near-identical documents land
+    within a small epsilon of each other; unrelated ones do not.
+    """
+    B, S = tokens.shape
+    t = tokens.astype(np.int64)
+    grams = t[:, : S - n + 1].copy()
+    for k in range(1, n):
+        grams = grams * 1000003 + t[:, k : S - n + 1 + k]
+    buckets = (grams % n_hash).astype(np.int64)
+    counts = np.zeros((B, n_hash), np.float64)
+    rows = np.repeat(np.arange(B), buckets.shape[1])
+    np.add.at(counts, (rows, buckets.reshape(-1)), 1.0)
+    norms = np.linalg.norm(counts, axis=1, keepdims=True)
+    counts /= np.maximum(norms, 1e-12)
+    proj = np.random.Generator(np.random.Philox(key=seed)).normal(
+        size=(n_hash, n_dims)) / np.sqrt(n_dims)
+    return counts @ proj
+
+
+def dedup_batch(tokens: np.ndarray, *, eps: float = 0.05, n_dims: int = 4,
+                unicomp: bool = True) -> np.ndarray:
+    """Boolean keep-mask over the batch; duplicate clusters keep one doc."""
+    emb = embed_ngrams(tokens, n_dims=n_dims)
+    pairs = self_join(emb, eps, unicomp=unicomp)
+    keep = np.ones(tokens.shape[0], bool)
+    if pairs.shape[0] == 0:
+        return keep
+    # union-find so chains a~b~c keep exactly one representative
+    parent = np.arange(tokens.shape[0])
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in pairs:
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+    for i in range(tokens.shape[0]):
+        if find(i) != i:
+            keep[i] = False
+    return keep

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the join's compute hot-spots.
+
+distance_tile.py -- brute-force / refine tile (MXU formulation), count+hits
+cell_join.py     -- per-cell gathered-candidate refine (VPU formulation)
+ops.py           -- jit'd wrappers (interpret on CPU, Mosaic on TPU)
+ref.py           -- pure-jnp oracles (tests assert allclose against these)
+"""
+from repro.kernels.ops import cell_join_hits, distance_tile_counts, distance_tile_hits
+
+__all__ = ["cell_join_hits", "distance_tile_counts", "distance_tile_hits"]

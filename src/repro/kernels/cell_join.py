@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: grid-cell candidate refine (Alg. 1 lines 14-17).
+
+Consumes what the offset sweep gathers: a tile of query points and, per
+query, its padded candidate window from one adjacent cell. Computes masked
+squared distances and the epsilon threshold entirely in VMEM.
+
+Layout: queries (TB, NP), candidates (TB, C, NP), validity (TB, C). The
+candidate window C is small (max points per cell, rounded to 8), so this is
+VPU elementwise work: the subtract-square-reduce over NP lanes. The MXU
+formulation is deliberately NOT used here: each query row contracts against
+its *own* candidate set (a batched matvec, M=1), which cannot fill the
+128x128 systolic array; the VPU form also avoids the catastrophic
+cancellation of ||a||^2+||b||^2-2ab for nearby points, which matters since
+cell windows contain exactly the nearby points. (The brute-force kernel can
+use the MXU because its query tile shares one global candidate tile.)
+
+The query tile (TB, NP) stays resident in VMEM across all stencil offsets of
+one sweep step -- the TPU analogue of the L1 temporal locality the paper
+measures for UNICOMP (Table II); see EXPERIMENTS.md SPerf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NP_PAD = 8
+
+
+def _cell_join_kernel(eps2_ref, q_ref, cand_ref, valid_ref, out_ref):
+    q = q_ref[...]                    # (TB, NP)
+    c = cand_ref[...]                 # (TB, C, NP)
+    v = valid_ref[...]                # (TB, C) int8
+    d = q[:, None, :] - c
+    d2 = jnp.sum(d * d, axis=-1)      # (TB, C)
+    hit = (d2 <= eps2_ref[0, 0]) & (v != 0)
+    out_ref[...] = hit.astype(jnp.int8)
+
+
+def _ceil_to(x, m):
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def cell_join_hits(q, cand, valid, eps, *, tb: int = 512, interpret: bool = True):
+    """(B,n) x (B,C,n) x (B,C) bool -> (B,C) bool epsilon-hits.
+
+    Drop-in for selfjoin._distance_hits_jnp (``distance_impl='pallas'``).
+    """
+    b, n = q.shape
+    c = cand.shape[1]
+    b_p = _ceil_to(max(b, 1), tb)
+    pad_b = b_p - b
+    if n < NP_PAD:
+        q = jnp.pad(q, ((0, 0), (0, NP_PAD - n)))
+        cand = jnp.pad(cand, ((0, 0), (0, 0), (0, NP_PAD - n)))
+    if pad_b:
+        q = jnp.pad(q, ((0, pad_b), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad_b), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad_b), (0, 0)))
+    eps2 = jnp.asarray(eps, q.dtype).reshape(1, 1) ** 2
+
+    out = pl.pallas_call(
+        _cell_join_kernel,
+        grid=(b_p // tb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((tb, NP_PAD), lambda i: (i, 0)),
+            pl.BlockSpec((tb, c, NP_PAD), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_p, c), jnp.int8),
+        interpret=interpret,
+    )(eps2, q, cand.astype(q.dtype), valid.astype(jnp.int8))
+    return out[:b].astype(bool)

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: tiled epsilon-distance join (the refine hot-spot).
+
+This is the compute core of both the brute-force baseline (paper SVI-B) and
+the batched refine stage of GPU-SJ. The CUDA original evaluates one scalar
+Euclidean distance per thread (Alg. 1 lines 14-16); the TPU formulation
+computes a (TQ x TC) block of squared distances at once on the MXU:
+
+    ||q - p||^2 = ||q||^2 + ||p||^2 - 2 q . p
+
+The cross term is a (TQ, NP) x (TC, NP) dot_general, i.e. a systolic-array
+matmul with the point dimensionality NP as the contraction. NP is tiny (2-6,
+zero-padded to 8); the MXU zero-pads the contraction internally, and the
+norms are rank-1 VPU terms -- the kernel is deliberately memory-streaming
+(candidates flow HBM->VMEM once per query tile) because at n <= 6 the join is
+intrinsically bandwidth-bound (see EXPERIMENTS.md roofline).
+
+Two entry points:
+  * hits kernel  -- emits the (TQ, TC) boolean block (drop-in for the jnp
+    reference; used by the fill phase which needs the mask).
+  * count kernel -- fused threshold+popcount accumulated over candidate
+    tiles; per-query counts never leave VMEM until the final (TQ,) write.
+    This is the paper's "count phase" with zero result-buffer traffic.
+
+VMEM working set (defaults TQ=TC=256, NP=8, f32): q 8 KiB + p 8 KiB +
+out 64 KiB (hits) or 1 KiB (counts) -- far under the ~16 MiB/core budget, so
+the grid can be swept with full double-buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NP_PAD = 8  # point dimensionality padded to the f32 sublane count
+
+
+def _acc_dtype(dtype):
+    # MXU accumulates bf16 x bf16 natively in f32; keep f64 for the paper-
+    # precision interpret path.
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def _hits_kernel(eps2_ref, q_ref, p_ref, out_ref):
+    q = q_ref[...]                      # (TQ, NP)
+    p = p_ref[...]                      # (TC, NP)
+    acc = _acc_dtype(q.dtype)
+    eps2 = eps2_ref[0, 0].astype(acc)
+    qf = q.astype(acc)
+    pf = p.astype(acc)
+    qn = jnp.sum(qf * qf, axis=1, keepdims=True)        # (TQ, 1)
+    pn = jnp.sum(pf * pf, axis=1, keepdims=True).T      # (1, TC)
+    cross = jax.lax.dot_general(
+        q, p, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc,
+    )                                                   # MXU: (TQ, TC)
+    d2 = qn + pn - 2.0 * cross
+    out_ref[...] = (d2 <= eps2).astype(jnp.int8)
+
+
+def _count_kernel(eps2_ref, npts_ref, q_ref, p_ref, out_ref, *, tq, tc):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[...]
+    p = p_ref[...]
+    acc = _acc_dtype(q.dtype)
+    eps2 = eps2_ref[0, 0].astype(acc)
+    npts = npts_ref[0, 0]
+    qf = q.astype(acc)
+    pf = p.astype(acc)
+    qn = jnp.sum(qf * qf, axis=1, keepdims=True)
+    pn = jnp.sum(pf * pf, axis=1, keepdims=True).T
+    cross = jax.lax.dot_general(
+        q, p, (((1,), (1,)), ((), ())), preferred_element_type=acc
+    )
+    d2 = qn + pn - 2.0 * cross
+    row = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tc), 0)
+    col = j * tc + jax.lax.broadcasted_iota(jnp.int32, (tq, tc), 1)
+    ok = (row < npts) & (col < npts) & (row != col)
+    hits = (d2 <= eps2) & ok
+    out_ref[0, :] += hits.sum(axis=1).astype(jnp.int32)
+
+
+def _pad_points(x, np_pad):
+    n = x.shape[-1]
+    if n < np_pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, np_pad - n)])
+    return x
+
+
+def _ceil_to(x, m):
+    return -(-x // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tc", "interpret")
+)
+def distance_tile_hits(q, pts, eps, *, tq: int = 256, tc: int = 256,
+                       interpret: bool = True):
+    """(TQ_total,n) x (N,n) -> (TQ_total,N) bool epsilon-hit block."""
+    nq, n = q.shape
+    npts = pts.shape[0]
+    dtype = q.dtype
+    nq_p, nc_p = _ceil_to(nq, tq), _ceil_to(npts, tc)
+    qp = _pad_points(jnp.pad(q, ((0, nq_p - nq), (0, 0))), NP_PAD)
+    # pad candidates far away so padded slots can never hit (1e9 keeps
+    # ||p||^2 ~ 1e18, far below overflow even in bf16/f32, and >> eps^2)
+    pp = _pad_points(jnp.pad(pts, ((0, nc_p - npts), (0, 0)), constant_values=1e9),
+                     NP_PAD)
+    eps2 = jnp.asarray(eps, dtype).reshape(1, 1) ** 2
+
+    out = pl.pallas_call(
+        _hits_kernel,
+        grid=(nq_p // tq, nc_p // tc),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((tq, NP_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((tc, NP_PAD), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq_p, nc_p), jnp.int8),
+        interpret=interpret,
+    )(eps2, qp, pp)
+    return out[:nq, :npts].astype(bool)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tq", "tc", "interpret")
+)
+def distance_tile_counts(pts, eps, *, tq: int = 256, tc: int = 256,
+                         interpret: bool = True):
+    """(N,n) -> (N,) int32 per-point epsilon-neighbor counts (excl. self).
+
+    Fused brute-force count: the full O(N^2) distance evaluation with only an
+    O(N) output -- the TPU version of the paper's count phase.
+    """
+    npts, n = pts.shape
+    dtype = pts.dtype
+    n_p = _ceil_to(npts, max(tq, tc))
+    pp = _pad_points(jnp.pad(pts, ((0, n_p - npts), (0, 0))), NP_PAD)
+    eps2 = jnp.asarray(eps, dtype).reshape(1, 1) ** 2
+    npts_a = jnp.asarray(npts, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(_count_kernel, tq=tq, tc=tc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_p // tq, n_p // tc),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((tq, NP_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((tc, NP_PAD), lambda i, j: (j, 0)),
+        ],
+        # counts live as (1, tq) rows so the accumulator stays 2-D (TPU
+        # vector layout wants a lane dimension)
+        out_specs=pl.BlockSpec((1, tq), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_p // tq, tq), jnp.int32),
+        interpret=interpret,
+    )(eps2, npts_a, pp, pp)
+    return out.reshape(-1)[:npts]

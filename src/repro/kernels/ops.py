@@ -1,0 +1,48 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel body
+runs as traced jnp ops); on a TPU backend they compile to Mosaic. The
+``interpret`` decision is made once at import from the default backend, and
+f64 inputs (the paper's precision, unsupported by the MXU) are computed in
+f32 on TPU -- documented hardware adaptation, validated in tests against the
+f64 oracle with f32 tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cell_join as _cell_join
+from repro.kernels import distance_tile as _distance_tile
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _kernel_dtype(dtype):
+    if not _INTERPRET and dtype == jnp.float64:
+        return jnp.float32  # TPU has no f64; paper precision kept on CPU path
+    return dtype
+
+
+def distance_tile_hits(q, pts, eps):
+    """Brute-force tile: (TQ,n) x (N,n) -> (TQ,N) bool epsilon-hits."""
+    dt = _kernel_dtype(q.dtype)
+    return _distance_tile.distance_tile_hits(
+        q.astype(dt), pts.astype(dt), eps, interpret=_INTERPRET
+    )
+
+
+def distance_tile_counts(pts, eps, *, tq: int = 256, tc: int = 256):
+    """Fused brute-force per-point neighbor counts (excl. self)."""
+    dt = _kernel_dtype(pts.dtype)
+    return _distance_tile.distance_tile_counts(
+        pts.astype(dt), eps, tq=tq, tc=tc, interpret=_INTERPRET
+    )
+
+
+def cell_join_hits(q, cand, valid, eps):
+    """Grid-cell refine: (B,n) x (B,C,n) x (B,C) -> (B,C) bool."""
+    dt = _kernel_dtype(q.dtype)
+    return _cell_join.cell_join_hits(
+        q.astype(dt), cand.astype(dt), valid, eps, interpret=_INTERPRET
+    )

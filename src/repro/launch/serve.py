@@ -1,0 +1,109 @@
+"""Serving driver: batched epsilon-range queries against a grid-indexed set,
+or LM token decoding -- selected by --arch.
+
+Self-join service (the paper's operator as a long-running service):
+    python -m repro.launch.serve --arch selfjoin --points 20000 --dims 4 \
+        --eps 1.0 --requests 8 --request-batch 256
+The dataset is indexed ONCE (grid build, paper SIV); each request batch of
+query points is answered with the bounded adjacent-cell sweep
+(core.selfjoin.range_query). Batch latency is reported per request.
+
+LM decode service:
+    python -m repro.launch.serve --arch qwen1.5-0.5b --reduced --tokens 32
+Prefills a prompt batch and decodes tokens autoregressively with the KV
+cache, reporting per-token latency.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_smoke_mesh
+from repro.models.lm import LMModel
+
+
+def serve_selfjoin(args):
+    from repro.core.grid import build_grid_host
+    from repro.core.selfjoin import range_query
+
+    rng = np.random.default_rng(args.seed)
+    pts = rng.uniform(0, 100, size=(args.points, args.dims))
+    t0 = time.time()
+    index = build_grid_host(pts, args.eps)
+    print(f"[serve] indexed {args.points} pts in {time.time()-t0:.3f}s "
+          f"(|G|={int(index.num_cells)} non-empty cells)")
+    lat = []
+    total = 0
+    for r in range(args.requests):
+        q = rng.uniform(0, 100, size=(args.request_batch, args.dims))
+        t0 = time.time()
+        counts = range_query(q, pts, args.eps, index=index)
+        lat.append(time.time() - t0)
+        total += int(counts.sum())
+    lat_ms = 1000 * np.asarray(lat)
+    print(f"[serve] {args.requests} requests x {args.request_batch} queries: "
+          f"p50 {np.percentile(lat_ms, 50):.1f}ms "
+          f"p99 {np.percentile(lat_ms, 99):.1f}ms "
+          f"({total} neighbors found)")
+    return float(np.median(lat_ms))
+
+
+def serve_lm(args):
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = LMModel(cfg, None)
+    params, _ = model.init(jax.random.PRNGKey(args.seed))
+    B, S = args.request_batch, args.prompt_len
+    rng = np.random.default_rng(args.seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    caches = model.init_caches(B, S + args.tokens)
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step, donate_argnums=(2,))
+    t0 = time.time()
+    logits, caches = prefill(params, batch, caches)
+    logits.block_until_ready()
+    print(f"[serve] prefill {B}x{S} in {time.time()-t0:.3f}s")
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    lat = []
+    out = [tok]
+    for _ in range(args.tokens):
+        t0 = time.time()
+        logits, caches = decode(params, tok, caches)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok.block_until_ready()
+        lat.append(time.time() - t0)
+        out.append(tok)
+    lat_ms = 1000 * np.asarray(lat[1:])  # drop compile step
+    print(f"[serve] decoded {args.tokens} tokens: "
+          f"p50 {np.percentile(lat_ms, 50):.1f}ms/token")
+    return float(np.median(lat_ms))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="selfjoin")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    # selfjoin service
+    ap.add_argument("--points", type=int, default=20000)
+    ap.add_argument("--dims", type=int, default=4)
+    ap.add_argument("--eps", type=float, default=2.0)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--request-batch", type=int, default=256)
+    # lm service
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args(argv)
+    if args.arch == "selfjoin":
+        return serve_selfjoin(args)
+    return serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Model zoo: one implementation spine for the 10 assigned architectures.
+
+layers.py      -- norms, dense/embed params with sharding specs, RoPE, losses
+attention.py   -- GQA attention: chunked train/prefill + KV-cache decode
+moe.py         -- top-k router with capacity + sort-based dispatch (EP)
+xlstm.py       -- mLSTM (chunkwise-parallel) and sLSTM (recurrent) blocks
+mamba2.py      -- Mamba2 SSD (chunked scan) block
+transformer.py -- per-family block assembly, lax.scan + remat layer stack
+lm.py          -- LMModel facade: init / train_loss / prefill / decode
+"""
+from repro.models.lm import LMModel
+
+__all__ = ["LMModel"]

@@ -1,0 +1,165 @@
+"""GQA attention: chunked train/prefill path + KV-cache decode path.
+
+Memory-efficient training attention: a lax.scan over query chunks so the
+(B, chunk, H, S) score block is the only attention intermediate alive --
+required for prefill_32k and compatible with remat (the block is recomputed
+in the backward pass).
+
+Sharding: heads are TP-sharded when n_heads divides the model axis
+(with_sharding_constraint on q/k/v); otherwise heads stay replicated and the
+KV cache's sequence dimension is model-sharded at decode (GSPMD inserts the
+partial-softmax all-reduces). Decisions are made from the config by
+transformer.py and threaded here as ``head_tp``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import apply_rope, dense_param, bias_param, shard
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, KV, hd)
+    v: jax.Array          # (B, S_max, KV, hd)
+    length: jax.Array     # () int32 -- tokens already in the cache
+
+
+def init_attention(key, cfg, ctx):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_param(ks[0], d, H * hd, ctx, dt)
+    p["wk"], s["wk"] = dense_param(ks[1], d, KV * hd, ctx, dt)
+    p["wv"], s["wv"] = dense_param(ks[2], d, KV * hd, ctx, dt)
+    p["wo"], s["wo"] = dense_param(ks[3], H * hd, d, ctx, dt, tp_dim="in")
+    if cfg.qkv_bias:
+        p["bq"], s["bq"] = bias_param(H * hd, ctx, dt, tp=True)
+        p["bk"], s["bk"] = bias_param(KV * hd, ctx, dt, tp=True)
+        p["bv"], s["bv"] = bias_param(KV * hd, ctx, dt, tp=True)
+    return p, s
+
+
+def _qkv(p, x, cfg):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, KV, hd),
+        v.reshape(B, S, KV, hd),
+    )
+
+
+def _sdpa_block(qc, k, v, mask, cfg):
+    """qc: (B, c, H, hd) vs full k/v: (B, S, KV, hd); mask (c, S) or None."""
+    B, c, H, hd = qc.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = qc.reshape(B, c, KV, G, hd)
+    scores = jnp.einsum(
+        "bckgh,bskh->bckgs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[None, :, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bckgs,bskh->bckgh", w, v.astype(jnp.float32))
+    return out.reshape(B, c, H, hd).astype(qc.dtype)
+
+
+def attention_forward(p, x, cfg, *, causal: bool, head_tp: Optional[str],
+                      dp_spec, positions=None):
+    """Full-sequence attention (train / prefill). x: (B, S, d)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, dp_spec, None, head_tp, None)
+    k = shard(k, dp_spec, None, head_tp if cfg.n_kv_heads == cfg.n_heads else None, None)
+    v = shard(v, dp_spec, None, head_tp if cfg.n_kv_heads == cfg.n_heads else None, None)
+
+    chunk = min(cfg.attn_chunk, S)
+    if S % chunk:
+        chunk = S  # fall back to unchunked for odd smoke-test lengths
+    nc = S // chunk
+    qs = q.reshape(B, nc, chunk, cfg.n_heads, cfg.head_dim)
+    pos_k = jnp.arange(S)
+
+    def body(_, xs):
+        qc, ci = xs
+        if causal:
+            pos_q = ci * chunk + jnp.arange(chunk)
+            mask = pos_k[None, :] <= pos_q[:, None]
+        else:
+            mask = None
+        return None, _sdpa_block(qc, k, v, mask, cfg)
+
+    _, outs = jax.lax.scan(
+        body, None, (jnp.moveaxis(qs, 1, 0), jnp.arange(nc)),
+        unroll=nc if cfg.unroll_scans else 1,
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"]
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> KVCache:
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, max_len, KV, hd), dtype),
+        v=jnp.zeros((batch, max_len, KV, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_spec(cfg, seq_axes) -> KVCache:
+    """PartitionSpec pytree for the KV cache; sequence over ``seq_axes``."""
+    s = P("data", seq_axes, None, None)
+    return KVCache(k=s, v=s, length=P())
+
+
+def attention_decode(p, x, cache: KVCache, cfg, *, head_tp, seq_axes, dp_spec):
+    """One-token decode. x: (B, 1, d). Returns (out (B,1,d), new cache)."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, cfg)
+    pos = cache.length
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), pos, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), pos, axis=1)
+    new_k = shard(new_k, dp_spec, seq_axes, None, None)
+    new_v = shard(new_v, dp_spec, seq_axes, None, None)
+    S = cache.k.shape[1]
+    valid = jnp.arange(S)[None, :] <= pos          # (1, S)
+    out = _sdpa_block(q, new_k, new_v, valid, cfg)  # (B, 1, H, hd)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, KVCache(k=new_k, v=new_v, length=pos + 1)
+
+
+def prefill_cache(p, x, cfg, *, head_tp, seq_axes, dp_spec, max_len=None):
+    """Prefill: full forward that also materializes the cache."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    positions = jnp.arange(S)[None, :]
+    k_r = apply_rope(k, positions, cfg.rope_theta)
+    out = attention_forward(p, x, cfg, causal=not cfg.encoder_only,
+                            head_tp=head_tp, dp_spec=dp_spec)
+    max_len = max_len or S
+    ck = jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.head_dim), k.dtype)
+    cv = jnp.zeros_like(ck)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k_r, 0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v, 0, axis=1)
+    ck = shard(ck, dp_spec, seq_axes, None, None)
+    cv = shard(cv, dp_spec, seq_axes, None, None)
+    return out, KVCache(k=ck, v=cv, length=jnp.asarray(S, jnp.int32))

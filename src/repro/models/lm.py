@@ -1,0 +1,321 @@
+"""LMModel: init / train_loss / prefill / decode for every architecture.
+
+Layout selection happens here: given the mesh axes (ShardCtx) and the shape
+cell, pick batch axes, head TP, and cache sequence sharding, falling back to
+replication whenever a dimension does not divide the axis (recorded by
+``layout_report`` and surfaced in the dry-run output).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import transformer as tf
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ShardCtx,
+    cross_entropy,
+    embed_param,
+    norm_param,
+    rms_norm,
+    shard,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    batch_axes: Any          # axis (or tuple) for the batch dim, or None
+    head_tp: Optional[str]   # 'model' when n_heads divides the TP axis
+    cache_seq: Any           # axes for the KV-cache sequence dim
+
+
+def make_shard_ctx(mesh=None) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx(fsdp_axis=None, tp_axis=None, fsdp_size=1, tp_size=1)
+    names = mesh.axis_names
+    fsdp = "data" if "data" in names else None
+    tp = "model" if "model" in names else None
+    return ShardCtx(
+        fsdp_axis=fsdp,
+        tp_axis=tp,
+        fsdp_size=mesh.shape[fsdp] if fsdp else 1,
+        tp_size=mesh.shape[tp] if tp else 1,
+    )
+
+
+def choose_layout(cfg: ModelConfig, mesh, batch: int, seq: int) -> Layout:
+    if mesh is None:
+        return Layout(batch_axes=None, head_tp=None, cache_seq=None)
+    names = mesh.axis_names
+    sizes = dict(zip(names, tuple(mesh.shape[n] for n in names)))
+    dp_candidates = []
+    if "pod" in names and "data" in names:
+        dp_candidates.append(("pod", "data"))
+    if "data" in names:
+        dp_candidates.append(("data",))
+    batch_axes = None
+    for cand in dp_candidates:
+        n = 1
+        for a in cand:
+            n *= sizes[a]
+        if batch % n == 0:
+            batch_axes = cand if len(cand) > 1 else cand[0]
+            break
+    tp = sizes.get("model", 1)
+    head_tp = "model" if ("model" in names and cfg.n_heads % tp == 0) else None
+    cache_seq = None
+    if "model" in names and seq % tp == 0:
+        cache_seq = "model"
+        if batch_axes is None and "data" in names and seq % (tp * sizes["data"]) == 0:
+            cache_seq = ("data", "model")
+    return Layout(batch_axes=batch_axes, head_tp=head_tp, cache_seq=cache_seq)
+
+
+class LMModel:
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.ctx = make_shard_ctx(mesh)
+        self._specs_cache = None
+
+    @property
+    def param_specs(self):
+        """Spec pytree (cached; derived abstractly, no allocation)."""
+        if self._specs_cache is None:
+            _, self._specs_cache = self.abstract_params()
+        return self._specs_cache
+
+    def _stack_kwargs(self):
+        if self.mesh is None:
+            return {}
+        s = self.param_specs
+        return {"block_specs": s.get("blocks"),
+                "shared_specs": s.get("shared_attn")}
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, rng) -> Tuple[Any, Any]:
+        """Returns (params, specs) parallel pytrees."""
+        cfg, ctx = self.cfg, self.ctx
+        dt = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(rng, 5)
+        p, s = {}, {}
+        if cfg.input_kind == "tokens" or cfg.has_decode:
+            p["embed"], s["embed"] = embed_param(keys[0], cfg.vocab,
+                                                 cfg.d_model, ctx, dt)
+        p["blocks"], s["blocks"] = tf.init_stack(keys[1], cfg, ctx)
+        sp, ss = tf.init_shared_attn(keys[2], cfg, ctx)
+        if sp is not None:
+            p["shared_attn"], s["shared_attn"] = sp, ss
+        p["final_norm"], s["final_norm"] = norm_param(cfg.d_model, dt)
+        p["head"], s["head"] = embed_param(keys[3], cfg.vocab, cfg.d_model, ctx, dt)
+        s["head"] = P(ctx.axis("tp", cfg.vocab), None)
+        return p, s
+
+    def abstract_params(self, rng=None):
+        """(ShapeDtypeStruct pytree, specs) without allocating -- dry-run.
+
+        init() is traced abstractly (eval_shape); the specs -- plain static
+        PartitionSpec objects, value-independent -- are captured through a
+        side box during the trace.
+        """
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        box = {}
+
+        def capture(k):
+            p, s = self.init(k)
+            box["specs"] = s
+            return p
+
+        shapes = jax.eval_shape(capture, rng)
+        return shapes, box["specs"]
+
+    # -- embedding / head ---------------------------------------------------
+
+    def _embed_in(self, p, batch, layout):
+        cfg = self.cfg
+        if cfg.input_kind == "tokens":
+            x = p["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+        else:
+            x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        return shard(x, layout.batch_axes, None, None)
+
+    def _loss_from_hidden(self, p, x, labels, layout):
+        """Sequence-chunked CE against the TP-sharded head (memory-bounded)."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        chunk = min(cfg.loss_chunk, S)
+        if S % chunk:
+            chunk = S
+        nc = S // chunk
+        xs = jnp.moveaxis(x.reshape(B, nc, chunk, cfg.d_model), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+        def body(carry, xs_):
+            xc, lc = xs_
+            logits = xc @ p["head"].T.astype(xc.dtype)
+            logits = shard(logits, layout.batch_axes, None,
+                           self.ctx.axis("tp", cfg.vocab))
+            lsum, cnt = carry
+            mask = lc >= 0
+            lo = logits.astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(lo, axis=-1)
+            ll = jnp.take_along_axis(lo, jnp.maximum(lc, 0)[..., None],
+                                     axis=-1)[..., 0]
+            loss = (lse - ll) * mask
+            if cfg.z_loss:
+                loss = loss + cfg.z_loss * (lse * mask) ** 2
+            return (lsum + loss.sum(), cnt + mask.sum(dtype=jnp.int32)), None
+
+        body = jax.checkpoint(body)
+        (lsum, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+            (xs, ls), unroll=nc if cfg.unroll_scans else 1)
+        return lsum / jnp.maximum(cnt, 1)
+
+    # -- training -----------------------------------------------------------
+
+    def train_loss(self, p, batch, layout: Optional[Layout] = None):
+        cfg = self.cfg
+        layout = layout or self._default_layout(batch)
+        x = self._embed_in(p, batch, layout)
+        x, _, aux = tf.stack_forward(
+            p["blocks"], p.get("shared_attn"), x, cfg, self.ctx, mode="train",
+            head_tp=layout.head_tp, seq_axes=layout.cache_seq,
+            dp_spec=layout.batch_axes, caches=None,
+            **self._stack_kwargs())
+        x = rms_norm(x, p["final_norm"])
+        loss = self._loss_from_hidden(p, x, batch["labels"], layout)
+        return loss, aux
+
+    def _default_layout(self, batch):
+        leaf = batch["tokens"] if "tokens" in batch else batch["embeds"]
+        return choose_layout(self.cfg, self.mesh, leaf.shape[0], leaf.shape[1])
+
+    def encode(self, p, batch, layout: Optional[Layout] = None):
+        """Encoder-only forward -> (B, S, vocab) logits (hubert's 'prefill')."""
+        cfg = self.cfg
+        layout = layout or self._default_layout(batch)
+        x = self._embed_in(p, batch, layout)
+        x, _, _ = tf.stack_forward(
+            p["blocks"], p.get("shared_attn"), x, cfg, self.ctx, mode="train",
+            head_tp=layout.head_tp, seq_axes=layout.cache_seq,
+            dp_spec=layout.batch_axes, caches=None,
+            **self._stack_kwargs())
+        x = rms_norm(x, p["final_norm"])
+        return x @ p["head"].T.astype(x.dtype)
+
+    # -- serving ------------------------------------------------------------
+
+    def init_caches(self, batch: int, max_len: int) -> tf.StackCaches:
+        cfg = self.cfg
+        L = cfg.n_layers
+        dt = jnp.dtype(cfg.dtype)
+
+        def stack_kv(n):
+            return KVCache(
+                k=jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+                v=jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+                length=jnp.zeros((n,), jnp.int32),
+            )
+
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            return tf.StackCaches(kv=stack_kv(L))
+        if cfg.family == "ssm":
+            H = cfg.n_heads
+            dh = cfg.d_inner // H
+            ml = jnp.zeros((L, batch, H, dh, dh), jnp.float32)
+            sl = (jnp.zeros((L, batch, cfg.d_model), jnp.float32),
+                  jnp.zeros((L, batch, cfg.d_model), jnp.float32))
+            return tf.StackCaches(mlstm=ml, slstm=sl)
+        if cfg.family == "hybrid":
+            st = mamba_lib.mamba2_state(cfg, batch)
+            mamba = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), st)
+            n_inv = tf._shared_invocations(cfg)
+            kv = KVCache(
+                k=jnp.zeros((n_inv, batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim), dt),
+                v=jnp.zeros((n_inv, batch, max_len, cfg.n_kv_heads,
+                             cfg.head_dim), dt),
+                length=jnp.zeros((), jnp.int32),
+            )
+            return tf.StackCaches(mamba=mamba, shared_kv=kv)
+        raise ValueError(cfg.family)
+
+    def cache_specs(self, layout: Layout) -> tf.StackCaches:
+        cfg = self.cfg
+        b, s_ = layout.batch_axes, layout.cache_seq
+        kvspec = KVCache(k=P(None, b, s_, None, None),
+                         v=P(None, b, s_, None, None), length=P(None))
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            return tf.StackCaches(kv=kvspec)
+        if cfg.family == "ssm":
+            return tf.StackCaches(
+                mlstm=P(None, b, None, None, None),
+                slstm=(P(None, b, None), P(None, b, None)))
+        if cfg.family == "hybrid":
+            return tf.StackCaches(
+                mamba=mamba_lib.Mamba2State(
+                    conv=P(None, b, None, None),
+                    ssm=P(None, b, None, None, None)),
+                shared_kv=KVCache(k=P(None, b, s_, None, None),
+                                  v=P(None, b, s_, None, None), length=P()))
+        raise ValueError(cfg.family)
+
+    def prefill(self, p, batch, caches: tf.StackCaches,
+                layout: Optional[Layout] = None):
+        """Process a prompt; returns (last-position logits, filled caches)."""
+        cfg = self.cfg
+        layout = layout or self._default_layout(batch)
+        x = self._embed_in(p, batch, layout)
+        x, caches, _ = tf.stack_forward(
+            p["blocks"], p.get("shared_attn"), x, cfg, self.ctx,
+            mode="prefill", head_tp=layout.head_tp, seq_axes=layout.cache_seq,
+            dp_spec=layout.batch_axes, caches=caches,
+            **self._stack_kwargs())
+        x = rms_norm(x, p["final_norm"])
+        logits = x[:, -1, :] @ p["head"].T.astype(x.dtype)
+        if cfg.family == "hybrid":
+            caches = caches._replace(shared_kv=caches.shared_kv._replace(
+                length=jnp.asarray(x.shape[1], jnp.int32)))
+        return logits, caches
+
+    def decode_step(self, p, tokens, caches: tf.StackCaches,
+                    layout: Optional[Layout] = None):
+        """One token for every sequence. tokens: (B,) int32."""
+        cfg = self.cfg
+        if layout is None:
+            b = tokens.shape[0]
+            s = self._cache_len(caches)
+            layout = choose_layout(cfg, self.mesh, b, s)
+        x = p["embed"][tokens][:, None, :].astype(jnp.dtype(cfg.dtype))
+        x = shard(x, layout.batch_axes, None, None)
+        x, caches, _ = tf.stack_forward(
+            p["blocks"], p.get("shared_attn"), x, cfg, self.ctx, mode="decode",
+            head_tp=layout.head_tp, seq_axes=layout.cache_seq,
+            dp_spec=layout.batch_axes, caches=caches,
+            **self._stack_kwargs())
+        x = rms_norm(x, p["final_norm"])
+        logits = x[:, 0, :] @ p["head"].T.astype(x.dtype)
+        if cfg.family == "hybrid":
+            caches = caches._replace(shared_kv=caches.shared_kv._replace(
+                length=caches.shared_kv.length + 1))
+        return logits, caches
+
+    def _cache_len(self, caches):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            return caches.kv.k.shape[2]
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            return caches.shared_kv.k.shape[2]
+        return 0

@@ -1,0 +1,114 @@
+"""Mamba2 (SSD) block, chunked-scan form, for zamba2's backbone.
+
+State-space duality form: per head h with head dim P and state dim N,
+
+    S_t = exp(dt_t * A_h) S_{t-1} + dt_t * x_t B_t^T     (P x N state)
+    y_t = S_t C_t + D_h x_t
+
+which is exactly the gated-linear recurrence of xlstm.chunked_gated_linear
+with q = C, k = B, v = dt * x, log_f = dt * A, i = 1 -- the two families
+share one chunked kernel (DESIGN.md: one implementation spine).
+
+Includes the causal depthwise conv (width ``conv_width``) on the x/B/C
+stream, SiLU activations and the gated output projection, following the
+Mamba2 block layout (arXiv:2405.21060; 'hf' tier via Zamba2 configs).
+Decode keeps (conv window, SSM state) as the recurrent cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_param, shard
+from repro.models.xlstm import chunked_gated_linear, gated_linear_step
+
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_channels) rolling input window
+    ssm: jax.Array    # (B, H, N, P) state (dk=N, dv=P in the shared kernel)
+
+
+def _conv_channels(cfg):
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_mamba2(key, cfg, ctx):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    dt_ = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    # in_proj -> [z (gate, di), x (di), B (N), C (N), dt (H)]
+    p["win"], s["win"] = dense_param(ks[0], d, 2 * di + 2 * N + H, ctx, dt_)
+    p["wout"], s["wout"] = dense_param(ks[1], di, d, ctx, dt_, tp_dim="in")
+    p["conv_w"] = (
+        jax.random.normal(ks[2], (cfg.conv_width, _conv_channels(cfg)), dt_) * 0.2
+    )
+    s["conv_w"] = jax.sharding.PartitionSpec(None, None)
+    p["a_log"] = jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32))
+    s["a_log"] = jax.sharding.PartitionSpec(None)
+    p["d_skip"] = jnp.ones((H,), jnp.float32)
+    s["d_skip"] = jax.sharding.PartitionSpec(None)
+    p["dt_bias"] = jnp.zeros((H,), jnp.float32)
+    s["dt_bias"] = jax.sharding.PartitionSpec(None)
+    return p, s
+
+
+def _causal_conv(u, w, prev=None):
+    """Depthwise causal conv. u: (B, S, C); w: (W, C); prev: (B, W-1, C)."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([prev, u], axis=1)          # (B, S+W-1, C)
+    out = sum(ext[:, i : i + u.shape[1]] * w[i] for i in range(W))
+    window = ext[:, -(W - 1):] if W > 1 else prev
+    return out, window
+
+
+def mamba2_forward(p, x, cfg, state: Mamba2State | None = None):
+    """x: (B, S, d). state None -> chunked scan; else one-step decode."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = di // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+
+    proj = x @ p["win"]
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt_pre = jnp.split(xbc_dt, [di + 2 * N], axis=-1)
+    conv_out, conv_win = _causal_conv(
+        xbc, p["conv_w"], None if state is None else state.conv
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bmat, Cmat = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["a_log"])                                          # (H,)
+    log_f = dt * A                                                    # (B,S,H)
+
+    xs_h = xs.reshape(B, S, H, P)
+    v = xs_h * dt[..., None].astype(xs.dtype)                         # dt * x
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, H, N))
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, H, N))
+    ones = jnp.ones_like(dt)
+
+    if state is None:
+        y, ssm = chunked_gated_linear(q, k, v, log_f, ones, cfg.ssm_chunk,
+                                      unroll=cfg.unroll_scans, shared_qk=True)
+    else:
+        ssm, y1 = gated_linear_step(state.ssm, q[:, 0], k[:, 0], v[:, 0],
+                                    log_f[:, 0], ones[:, 0])
+        y = y1[:, None]
+    y = y + xs_h * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    out = y @ p["wout"]
+    return out, Mamba2State(conv=conv_win, ssm=ssm)
+
+
+def mamba2_state(cfg, batch: int) -> Mamba2State:
+    H = cfg.d_inner // cfg.ssm_head_dim
+    return Mamba2State(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, _conv_channels(cfg)),
+                       jnp.dtype(cfg.dtype)),
+        ssm=jnp.zeros((batch, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    )

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN: top-k router, capacity, sort-based dispatch.
+
+Dispatch is scatter-based (argsort by expert id + per-expert cumulative
+slots) rather than one-hot einsum: O(T x d) memory instead of O(T x E x cap).
+Tokens over capacity are dropped (standard capacity-factor semantics) and the
+drop fraction is returned for logging.
+
+Routing is ROW-LOCAL (vmapped per batch row, capacity per row) for training
+so dispatch indices shard with the batch, and batch-global at decode (S=1)
+where per-row capacity would reserve slots in every expert per sequence.
+Sharding: experts are expert-parallel over the FSDP axis when E divides it
+(arctic: 128 over 16; the (B,E,cap,d) dispatched tensor is resharded
+B->'data' to E->'data', the canonical MoE all-to-all); otherwise (grok: 8
+experts) storage stays 256-way FSDP with compute-time weight gathers. The
+full derivation of this layout is the EXPERIMENTS.md SPerf hillclimb log
+(79.9 s -> 4.8 s of per-step collectives on grok-1-314b train_4k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_param, shard
+
+
+def init_moe(key, cfg, ctx):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    p["router"], s["router"] = dense_param(ks[0], d, E, ctx, jnp.float32,
+                                           tp_dim="out", scale=0.02)
+    s["router"] = P(None, None)  # tiny; keep replicated
+    ep_axis = ctx.axis("fsdp", E)
+    scale = 1.0 / jnp.sqrt(d)
+    shape_in = (E, d, ff)
+    shape_out = (E, ff, d)
+    p["w_gate"] = jax.random.normal(ks[1], shape_in, dt) * scale
+    p["w_up"] = jax.random.normal(ks[2], shape_in, dt) * scale
+    p["w_down"] = jax.random.normal(ks[3], shape_out, dt) / jnp.sqrt(ff)
+    if ep_axis:
+        s["w_gate"] = s["w_up"] = P(ep_axis, None, ctx.axis("tp", ff))
+        s["w_down"] = P(ep_axis, ctx.axis("tp", ff), None)
+    else:
+        s["w_gate"] = s["w_up"] = P(None, ctx.axis("fsdp", d), ctx.axis("tp", ff))
+        s["w_down"] = P(None, ctx.axis("tp", ff), ctx.axis("fsdp", d))
+    return p, s
+
+
+def _route_row(tokens, tope, topw, E, k, cap):
+    """Dispatch ONE batch row: (S,d),(S,k),(S,k) -> dispatched (E*cap, d),
+    slot/src/wgt for the combine, keep mask. vmapped over the batch so every
+    index op (sort, cumsum, scatter) is row-local -- with the batch sharded
+    over 'data', GSPMD never materializes a replicated global routing chain
+    (which cost 50 GB/layer f32 all-reduces in the global-sort formulation;
+    EXPERIMENTS.md SPerf)."""
+    S, d = tokens.shape
+    eid = tope.reshape(-1)                                   # (S*k,)
+    src = jnp.repeat(jnp.arange(S), k)
+    wgt = topw.reshape(-1)
+    order = jnp.argsort(eid)
+    eid_s, src_s, wgt_s = eid[order], src[order], wgt[order]
+    counts = jnp.bincount(eid, length=E)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(S * k) - offsets[eid_s]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, eid_s * cap + pos_in_e, E * cap)  # drop slot
+    dispatched = jnp.zeros((E * cap, d), tokens.dtype).at[slot].set(
+        tokens[src_s], mode="drop")
+    return dispatched, slot, src_s, wgt_s, keep
+
+
+def moe_ffn(p, x, cfg, *, ep_axis, cap_axis=None, dp_spec="data", rng=None):
+    """x: (B, S, d) -> (B, S, d). Returns (out, aux) with load stats.
+
+    Row-local routing + layout (measured on the dry-run, SPerf):
+      * routing/dispatch is vmapped per batch row (capacity enforced per
+        row, the standard per-device-capacity semantics), so the dispatch
+        indices stay sharded with the batch;
+      * EP case (E divides the FSDP axis; arctic): the dispatched tensor is
+        resharded from (B->'data') to (E->'data'), which GSPMD implements as
+        the canonical MoE all-to-all; expert compute is local;
+      * non-EP case (grok, E=8 < 16): expert STORAGE stays 256-way FSDP
+        (d x f over data x model) but compute uses weights gathered over
+        'data' (0.6 GB/layer bf16 all-gather instead of 20-50 GB/layer f32
+        activation all-reduces from a d-sharded contraction); expert FLOPs
+        stay distributed over the batch shards. Weight-grad partials
+        reduce-scatter back into the FSDP shards via the in-scan param
+        constraint (transformer._constrain_tree).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    if S == 1 and B > 1:
+        # decode: per-row capacity would reserve cap slots in EVERY expert
+        # for every sequence (measured 2.4e5x the useful decode FLOPs on
+        # arctic, EXPERIMENTS.md SPerf note) -- fold the batch into one
+        # routing row so dispatch is global across the decode batch.
+        out, aux = moe_ffn(p, x.reshape(1, B, d), cfg, ep_axis=ep_axis,
+                           cap_axis=cap_axis, dp_spec=None, rng=rng)
+        return out.reshape(B, S, d), aux
+    x = shard(x, dp_spec, None, None)
+
+    # router in bf16 operands / f32 accumulation (an f32 input cast would
+    # drag the whole (B,S,d) cotangent to f32 on the way back)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)                     # (B, S, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(-(-int(S * k / E * cfg.capacity_factor) // 8) * 8, 8)
+    dispatched, slot, src_s, wgt_s, keep = jax.vmap(
+        lambda t, e, w: _route_row(t, e, w, E, k, cap))(x, tope, topw)
+    dispatched = dispatched.reshape(B, E, cap, d)
+
+    if ep_axis is None:
+        # non-EP: batch-sharded expert compute with gathered weights
+        dispatched = shard(dispatched, dp_spec, None, None, None)
+        w_gate = shard(p["w_gate"], None, None, "model")
+        w_up = shard(p["w_up"], None, None, "model")
+        w_down = shard(p["w_down"], None, "model", None)
+    else:
+        # EP: all-to-all (B->'data')  ->  (E->'data')
+        dispatched = shard(dispatched, None, ep_axis, None, None)
+        w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", dispatched, w_gate))
+    h = h * jnp.einsum("becd,edf->becf", dispatched, w_up)
+    eo = jnp.einsum("becf,efd->becd", h, w_down)
+    if ep_axis is None:
+        eo = shard(eo, dp_spec, None, None, None)
+    else:
+        eo = shard(eo, dp_spec, None, None, None)  # reverse all-to-all
+    eo = eo.reshape(B, E * cap, d)
+    eo = jnp.concatenate([eo, jnp.zeros((B, 1, d), eo.dtype)], axis=1)
+
+    def combine_row(eo_row, slot, src_s, wgt_s):
+        gathered = eo_row[slot] * wgt_s[:, None].astype(eo_row.dtype)
+        return jnp.zeros((S, d), eo_row.dtype).at[src_s].add(gathered)
+
+    out = jax.vmap(combine_row)(eo, slot, src_s, wgt_s)
+    out = shard(out, dp_spec, None, None)
+    aux = {
+        "dropped_frac": 1.0 - keep.mean(),
+        "router_entropy": -(probs * jnp.log(probs + 1e-9)).sum(-1).mean(),
+    }
+    return out.astype(x.dtype), aux

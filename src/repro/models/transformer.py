@@ -1,0 +1,372 @@
+"""Per-family block assembly and the scanned, remat'd layer stack.
+
+All 10 architectures share this spine:
+
+  * params are initialized per layer with jax.vmap over layer keys, giving
+    every leaf a leading L dimension; the forward pass is one lax.scan over
+    that stack (small HLO, fast SPMD partitioning, flat live memory);
+  * jax.checkpoint on the scan body implements activation rematerialization;
+  * heterogeneous stacks (xlstm's mLSTM/sLSTM pattern) carry a static
+    per-layer kind vector and lax.cond inside the body; zamba2's shared
+    attention block lives outside the scanned stack (one param set) and is
+    applied statically between scanned groups of ``shared_attn_every``
+    Mamba2 layers (a per-layer lax.cond costs 4.4x, EXPERIMENTS.md SPerf);
+  * sharding is injected through ShardCtx (which axes exist and their sizes)
+    -- every weight picks a legal spec at init, and activations get
+    with_sharding_constraint at family-specific cut points.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ShardCtx,
+    cross_entropy,
+    dense_param,
+    embed_param,
+    norm_param,
+    rms_norm,
+    shard,
+)
+
+KIND_IDS = {"attn": 0, "mlstm": 1, "slstm": 2, "mamba2": 3}
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_ffn(key, cfg, ctx):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["w_gate"], s["w_gate"] = dense_param(ks[0], d, ff, ctx, dt)
+    p["w_up"], s["w_up"] = dense_param(ks[1], d, ff, ctx, dt)
+    p["w_down"], s["w_down"] = dense_param(ks[2], ff, d, ctx, dt, tp_dim="in")
+    return p, s
+
+
+def _init_layer(key, cfg: ModelConfig, ctx: ShardCtx):
+    """One layer's params for the union of block kinds this family needs."""
+    p, s = {}, {}
+    ks = jax.random.split(key, 8)
+    p["ln1"], s["ln1"] = norm_param(cfg.d_model, jnp.dtype(cfg.dtype))
+    kinds = set(cfg.layer_kinds())
+    if "attn" in kinds:
+        p["attn"], s["attn"] = attn_lib.init_attention(ks[0], cfg, ctx)
+        p["ln2"], s["ln2"] = norm_param(cfg.d_model, jnp.dtype(cfg.dtype))
+        if cfg.n_experts:
+            p["moe"], s["moe"] = moe_lib.init_moe(ks[1], cfg, ctx)
+            if cfg.moe_dense_residual:
+                p["ffn"], s["ffn"] = _init_ffn(ks[2], cfg, ctx)
+        else:
+            p["ffn"], s["ffn"] = _init_ffn(ks[2], cfg, ctx)
+    if "mlstm" in kinds:
+        p["mlstm"], s["mlstm"] = xlstm_lib.init_mlstm(ks[3], cfg, ctx)
+    if "slstm" in kinds:
+        p["slstm"], s["slstm"] = xlstm_lib.init_slstm(ks[4], cfg, ctx)
+    if "mamba2" in kinds:
+        p["mamba"], s["mamba"] = mamba_lib.init_mamba2(ks[5], cfg, ctx)
+    return p, s
+
+
+def init_stack(key, cfg: ModelConfig, ctx: ShardCtx):
+    """All layers, vmapped init -> every leaf has leading dim L."""
+    keys = jax.random.split(key, cfg.n_layers)
+    p0, s0 = _init_layer(keys[0], cfg, ctx)  # structure + specs template
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg, ctx)[0])(keys)
+    specs = jax.tree.map(
+        lambda sp: P(*((None,) + tuple(sp))), s0,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return stacked, specs
+
+
+# ---------------------------------------------------------------------------
+# per-layer apply
+# ---------------------------------------------------------------------------
+
+def _apply_attn_layer(bp, x, cfg, *, mode, head_tp, seq_axes, dp_spec,
+                      ep_axis=None, cache=None):
+    h = rms_norm(x, bp["ln1"])
+    new_cache = None
+    if mode == "decode":
+        a, new_cache = attn_lib.attention_decode(
+            bp["attn"], h, cache, cfg, head_tp=head_tp, seq_axes=seq_axes,
+            dp_spec=dp_spec)
+    elif mode == "prefill":
+        a, new_cache = attn_lib.prefill_cache(
+            bp["attn"], h, cfg, head_tp=head_tp, seq_axes=seq_axes,
+            dp_spec=dp_spec, max_len=cache.k.shape[1] if cache else None)
+    else:
+        a = attn_lib.attention_forward(
+            bp["attn"], h, cfg, causal=not cfg.encoder_only,
+            head_tp=head_tp, dp_spec=dp_spec)
+    x = x + a
+    h = rms_norm(x, bp["ln2"])
+    aux = {}
+    if cfg.n_experts:
+        cap_axis = None if ep_axis is not None else "data"
+        m, aux = moe_lib.moe_ffn(bp["moe"], h, cfg, ep_axis=ep_axis,
+                                 cap_axis=cap_axis, dp_spec=dp_spec)
+        if cfg.moe_dense_residual:
+            m = m + _ffn(bp["ffn"], h)
+        x = x + m
+    else:
+        x = x + _ffn(bp["ffn"], h)
+    return x, new_cache, aux
+
+
+def _ffn(fp, h):
+    return (jax.nn.silu(h @ fp["w_gate"]) * (h @ fp["w_up"])) @ fp["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# stack forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+class StackCaches(NamedTuple):
+    """Union cache pytree; unused slots are () for a given family."""
+    kv: Any = ()          # attn: KVCache with (L, ...) leaves
+    mlstm: Any = ()       # (L, B, H, dh, dh)
+    slstm: Any = ()       # ((L,B,d), (L,B,d))
+    mamba: Any = ()       # Mamba2State with (L, ...) leaves
+    shared_kv: Any = ()   # zamba2: KVCache with (n_inv, ...) leaves
+
+
+def _layer_kind_array(cfg):
+    return jnp.asarray([KIND_IDS[k] for k in cfg.layer_kinds()], jnp.int32)
+
+
+def _constrain_tree(params, specs):
+    """with_sharding_constraint over a (params, specs) pair of pytrees.
+
+    Applied to the per-layer parameter slice INSIDE the scan body: the
+    constraint's transpose applies the same sharding to the parameter
+    cotangent, which is what keeps per-layer gradients in their FSDP shards
+    (reduce-scatter) instead of replicated f32 all-reduces -- measured 80s ->
+    sub-second on grok-1-314b train_4k (EXPERIMENTS.md SPerf).
+    """
+    if specs is None:
+        return params
+
+    def one(sp, p):
+        try:
+            return jax.lax.with_sharding_constraint(p, sp)
+        except (ValueError, RuntimeError):
+            return p
+
+    return jax.tree.map(one, specs, params,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _strip_layer_dim(specs):
+    if specs is None:
+        return None
+    return jax.tree.map(lambda sp: P(*tuple(sp)[1:]), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_forward(stacked, shared_attn, x, cfg: ModelConfig, ctx, *,
+                  mode: str, head_tp, seq_axes, dp_spec,
+                  caches: Optional[StackCaches] = None, block_specs=None,
+                  shared_specs=None):
+    """Run all layers. mode: 'train' | 'prefill' | 'decode'.
+
+    Returns (x, new_caches, aux). Caches are scanned alongside the layer
+    params; zamba2's shared-attention KV cache rides in the scan carry. In
+    'train' mode no caches are produced (dummy pass-throughs keep the scan
+    signature static).
+    """
+    kinds = _layer_kind_array(cfg)
+    layer_idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    has_shared = cfg.shared_attn_every > 0 and shared_attn is not None
+    ep_axis = ctx.axis("fsdp", cfg.n_experts) if cfg.n_experts else None
+    per_layer_specs = _strip_layer_dim(block_specs)
+
+    def body(carry, xs):
+        x, shared_cache = carry
+        bp, kind, li, layer_cache = xs
+        bp = _constrain_tree(bp, per_layer_specs)
+        new_cache = layer_cache
+        dropped = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            x, kv, a = _apply_attn_layer(
+                bp, x, cfg, mode=mode, head_tp=head_tp, seq_axes=seq_axes,
+                dp_spec=dp_spec, ep_axis=ep_axis, cache=layer_cache)
+            if kv is not None:
+                new_cache = kv
+            if "dropped_frac" in a:
+                dropped = a["dropped_frac"].astype(jnp.float32)
+
+        elif cfg.family == "ssm":
+            h = rms_norm(x, bp["ln1"])
+            if mode == "train":
+                o = jax.lax.cond(
+                    kind == KIND_IDS["slstm"],
+                    lambda h: xlstm_lib.slstm_forward(bp["slstm"], h, cfg)[0],
+                    lambda h: xlstm_lib.mlstm_forward(bp["mlstm"], h, cfg)[0],
+                    h)
+            else:
+                ml_state, sl_state = layer_cache
+                use = mode == "decode"
+
+                def do_m(h):
+                    o, st = xlstm_lib.mlstm_forward(
+                        bp["mlstm"], h, cfg, state=ml_state if use else None)
+                    return o, (st, sl_state)
+
+                def do_s(h):
+                    o, st = xlstm_lib.slstm_forward(
+                        bp["slstm"], h, cfg, state=sl_state if use else None)
+                    return o, (ml_state, st)
+
+                o, new_cache = jax.lax.cond(
+                    kind == KIND_IDS["slstm"], do_s, do_m, h)
+            x = x + o
+
+        elif cfg.family == "hybrid":
+            h = rms_norm(x, bp["ln1"])
+            o, st = mamba_lib.mamba2_forward(
+                bp["mamba"], h, cfg,
+                state=layer_cache if mode == "decode" else None)
+            x = x + o
+            if mode != "train":
+                new_cache = st
+        else:
+            raise ValueError(cfg.family)
+        return (x, shared_cache), (new_cache, dropped)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    layer_caches = _scan_caches(caches, cfg)
+    shared0 = caches.shared_kv if (caches is not None and has_shared) else ()
+
+    if cfg.family == "hybrid" and has_shared:
+        # Grouped execution: scan each run of ``shared_attn_every`` Mamba2
+        # layers, then apply the shared attention block ONCE, statically.
+        # (The earlier per-layer lax.cond formulation made the attention
+        # branch part of every scanned layer: 4.4x the per-layer FLOPs on
+        # zamba2 train_4k -- EXPERIMENTS.md SPerf iteration log.)
+        L, k = cfg.n_layers, cfg.shared_attn_every
+        bounds = list(range(0, L, k))
+        new_layer_list, dropped_all = [], []
+        shared_cache = shared0
+        for g, lo in enumerate(bounds):
+            hi = min(lo + k, L)
+            sl = lambda a: a[lo:hi]
+            grp_stack = jax.tree.map(sl, stacked)
+            grp_caches = jax.tree.map(sl, layer_caches)
+            # shared attention first (zamba2 places it at layers 0, k, 2k..)
+            if mode == "train":
+                x, _ = _apply_shared(shared_attn, x, cfg, mode, head_tp,
+                                     seq_axes, dp_spec, None)
+            else:
+                this = KVCache(k=shared_cache.k[g], v=shared_cache.v[g],
+                               length=shared_cache.length)
+                x, nc = _apply_shared(shared_attn, x, cfg, mode, head_tp,
+                                      seq_axes, dp_spec, this)
+                shared_cache = KVCache(
+                    k=_set(shared_cache.k, g, nc.k),
+                    v=_set(shared_cache.v, g, nc.v),
+                    length=shared_cache.length)
+            (x, _), (grp_new, grp_drop) = jax.lax.scan(
+                body, (x, ()), (grp_stack, kinds[lo:hi], layer_idx[lo:hi],
+                                grp_caches),
+                unroll=(hi - lo) if cfg.unroll_scans else 1)
+            new_layer_list.append(grp_new)
+            dropped_all.append(grp_drop)
+        new_layer_caches = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_layer_list)
+        dropped = jnp.concatenate(dropped_all)
+        new_caches = _pack_caches(new_layer_caches, shared_cache, cfg)
+        return x, new_caches, {"dropped_frac": dropped.mean()}
+
+    (x, shared_cache), (new_layer_caches, dropped) = jax.lax.scan(
+        body, (x, shared0), (stacked, kinds, layer_idx, layer_caches),
+        unroll=cfg.n_layers if cfg.unroll_scans else 1)
+    new_caches = _pack_caches(new_layer_caches, shared_cache, cfg)
+    return x, new_caches, {"dropped_frac": dropped.mean()}
+
+
+def _is_arr(x):
+    return isinstance(x, jax.Array) or hasattr(x, "shape")
+
+
+def _set(arr, i, val):
+    return jax.lax.dynamic_update_index_in_dim(arr, val, i, axis=0)
+
+
+def _apply_shared(sp, x, cfg, mode, head_tp, seq_axes, dp_spec, cache):
+    h = rms_norm(x, sp["ln1"])
+    if mode == "decode":
+        a, nc = attn_lib.attention_decode(sp["attn"], h, cache, cfg,
+                                          head_tp=head_tp, seq_axes=seq_axes,
+                                          dp_spec=dp_spec)
+    elif mode == "prefill":
+        a, nc = attn_lib.prefill_cache(sp["attn"], h, cfg, head_tp=head_tp,
+                                       seq_axes=seq_axes, dp_spec=dp_spec,
+                                       max_len=cache.k.shape[1])
+    else:
+        a, nc = attn_lib.attention_forward(sp["attn"], h, cfg, causal=True,
+                                           head_tp=head_tp, dp_spec=dp_spec), None
+    x = x + a
+    h2 = rms_norm(x, sp["ln2"])
+    return x + _ffn(sp["ffn"], h2), nc
+
+
+def _shared_invocations(cfg):
+    if cfg.shared_attn_every <= 0:
+        return 0
+    return -(-cfg.n_layers // cfg.shared_attn_every)
+
+
+def _scan_caches(caches: Optional[StackCaches], cfg):
+    """Layer-cache pytree handed to scan as xs (leading dim L)."""
+    if caches is None:
+        # train mode: dummy per-layer zeros so the scan xs structure is fixed
+        L = cfg.n_layers
+        if cfg.family == "ssm":
+            return (jnp.zeros((L, 1)), (jnp.zeros((L, 1)), jnp.zeros((L, 1))))
+        return jnp.zeros((L, 1))
+    if cfg.family == "ssm":
+        return (caches.mlstm, caches.slstm)
+    if cfg.family == "hybrid":
+        return caches.mamba
+    return caches.kv
+
+
+def _pack_caches(new_layer_caches, shared_cache, cfg) -> StackCaches:
+    if cfg.family == "ssm":
+        ml, sl = new_layer_caches
+        return StackCaches(mlstm=ml, slstm=sl)
+    if cfg.family == "hybrid":
+        return StackCaches(mamba=new_layer_caches, shared_kv=shared_cache)
+    return StackCaches(kv=new_layer_caches)
+
+
+def init_shared_attn(key, cfg, ctx):
+    """zamba2's shared attention+FFN block (single param set)."""
+    if cfg.shared_attn_every <= 0:
+        return None, None
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = norm_param(cfg.d_model, jnp.dtype(cfg.dtype))
+    p["ln2"], s["ln2"] = norm_param(cfg.d_model, jnp.dtype(cfg.dtype))
+    p["attn"], s["attn"] = attn_lib.init_attention(ks[0], cfg, ctx)
+    p["ffn"], s["ffn"] = _init_ffn(ks[1], cfg, ctx)
+    return p, s

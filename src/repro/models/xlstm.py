@@ -1,0 +1,191 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM (matrix memory, the parallelizable block): per head h with dim dh,
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        (dh x dh matrix memory)
+    y_t = C_t^T q_t
+
+computed in a chunkwise-parallel form (intra-chunk quadratic with a decay
+matrix, inter-chunk state carry via lax.scan over chunks) -- the same
+machinery Mamba2's SSD uses, shared via ``chunked_gated_linear``. Training
+cost is O(S * dh^2 / chunk + S * chunk * dh): sub-quadratic in S, which is
+what qualifies xlstm-1.3b for the long_500k cell.
+
+Simplifications vs. the paper (xLSTM, arXiv:2405.04517, 'unverified' tier):
+sigmoid input gate instead of exponential-with-stabilizer, and the
+key-normalizer n_t is dropped (sigmoid gates keep the state bounded; the
+1/sqrt(dh) key scaling plays the stabilizing role). No separate output gate
+projection on sLSTM. Recorded in DESIGN.md SArch-applicability.
+
+sLSTM (scalar memory, strictly recurrent): lax.scan over time. Kept for
+block-pattern fidelity; xlstm-1.3b uses 1 sLSTM per ``slstm_every`` layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_param, shard
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked gated linear attention (used by mLSTM and Mamba2 SSD)
+# ---------------------------------------------------------------------------
+
+def chunked_gated_linear(q, k, v, log_f, i_gate, chunk: int, unroll: bool = False,
+                         shared_qk: bool = False):
+    """y_t = sum_{j<=t} (prod_{r=j+1..t} f_r) i_j (q_t . k_j) v_j, chunked.
+
+    q, k: (B, S, H, dk); v: (B, S, H, dv); log_f, i_gate: (B, S, H).
+    Returns (y (B,S,H,dv), final_state (B,H,dk,dv)).
+
+    ``shared_qk``: Mamba2's B/C projections are shared across heads (q/k
+    arrive head-broadcast); the intra-chunk score matmul is then computed
+    ONCE per chunk instead of per head -- an H-fold FLOP cut on that term
+    (measured on zamba2 train_4k, EXPERIMENTS.md SPerf).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    nc = S // c
+
+    def resh(x):
+        return jnp.moveaxis(x.reshape(B, nc, c, *x.shape[2:]), 1, 0)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    fs, is_ = resh(log_f), resh(i_gate)
+
+    def body(state, xs):
+        qc, kc, vc, fc, ic = xs                     # (B, c, H, *)
+        F = jnp.cumsum(fc, axis=1)                  # (B, c, H) log decay
+        # intra-chunk: D[t, j] = exp(F_t - F_j) * i_j  for j <= t
+        dmat = F[:, :, None, :] - F[:, None, :, :]  # (B, c, c, H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        gates = jnp.exp(dmat) * ic[:, None, :, :]   # (B, c(t), c(j), H)
+        if shared_qk:
+            scores1 = jnp.einsum("btd,bjd->btj", qc[:, :, 0].astype(jnp.float32),
+                                 kc[:, :, 0].astype(jnp.float32))
+            scores = scores1[..., None]             # (B, c, c, 1) -> bcast H
+        else:
+            scores = jnp.einsum("bthd,bjhd->btjh", qc.astype(jnp.float32),
+                                kc.astype(jnp.float32))
+        intra = jnp.einsum("btjh,bjhv->bthv", scores * gates,
+                           vc.astype(jnp.float32))
+        # inter-chunk: y += exp(F_t) * q_t . state
+        inter = jnp.einsum("bthd,bhdv->bthv", qc.astype(jnp.float32)
+                           * jnp.exp(F)[..., None], state)
+        # state' = exp(F_c) * state + sum_j exp(F_c - F_j) i_j k_j v_j^T
+        last = F[:, -1:, :]                         # (B, 1, H)
+        carry_gate = jnp.exp(last - F) * ic         # (B, c, H)
+        upd = jnp.einsum("bjh,bjhd,bjhv->bhdv", carry_gate,
+                         kc.astype(jnp.float32), vc.astype(jnp.float32))
+        state = jnp.exp(last[:, 0, :])[..., None, None] * state + upd
+        return state, intra + inter
+
+    state0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+    state, ys = jax.lax.scan(body, state0, (qs, ks, vs, fs, is_),
+                             unroll=nc if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dv)
+    return y.astype(v.dtype), state
+
+
+def gated_linear_step(state, q, k, v, log_f, i_gate):
+    """Single-token recurrent step. state: (B,H,dk,dv); q/k/v: (B,H,d*)."""
+    f = jnp.exp(log_f)[..., None, None].astype(jnp.float32)
+    upd = jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32),
+                     v.astype(jnp.float32)) * i_gate[..., None, None]
+    state = f * state + upd
+    y = jnp.einsum("bhdv,bhd->bhv", state, q.astype(jnp.float32))
+    return state, y.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, ctx):
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wqkv"], s["wqkv"] = dense_param(ks[0], d, 3 * di, ctx, dt)
+    p["wgate"], s["wgate"] = dense_param(ks[1], d, 2 * H, ctx, dt, scale=0.02)
+    p["wout"], s["wout"] = dense_param(ks[2], di, d, ctx, dt, tp_dim="in")
+    return p, s
+
+
+def mlstm_forward(p, x, cfg, state=None):
+    """x: (B, S, d). state None -> chunked parallel; else one-step decode."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = cfg.d_inner
+    dh = di // H
+    qkv = x @ p["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, H, dh) / jnp.sqrt(dh).astype(x.dtype)
+    v = v.reshape(B, S, H, dh)
+    gates = (x @ p["wgate"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gates[..., :H])
+    i_gate = jax.nn.sigmoid(gates[..., H:])
+    if state is None:
+        y, fin = chunked_gated_linear(q, k, v, log_f, i_gate, cfg.ssm_chunk,
+                                      unroll=cfg.unroll_scans)
+    else:
+        fin, y1 = gated_linear_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                    log_f[:, 0], i_gate[:, 0])
+        y = y1[:, None]
+    out = y.reshape(B, S, di) @ p["wout"]
+    return out, fin
+
+
+def mlstm_state(cfg, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_inner // H
+    return jnp.zeros((batch, H, dh, dh), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (recurrent scalar memory)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, ctx):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["wx"], s["wx"] = dense_param(ks[0], d, 4 * d, ctx, dt)
+    p["wh"], s["wh"] = dense_param(ks[1], d, 4 * d, ctx, dt, scale=0.02)
+    return p, s
+
+
+def slstm_forward(p, x, cfg, state=None):
+    """x: (B, S, d); recurrent over S. state = (c, h) each (B, d)."""
+    B, S, d = x.shape
+    xg = x @ p["wx"]                       # (B, S, 4d)
+
+    def step(carry, xt):
+        c, h = carry
+        g = (xt + h.astype(xt.dtype) @ p["wh"]).astype(jnp.float32)
+        i, f, z, o = jnp.split(g, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (c, h), h
+
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, h0 = state
+    (c, h), ys = jax.lax.scan(step, (c0, h0), jnp.moveaxis(xg, 1, 0),
+                              unroll=S if cfg.unroll_scans else 1)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)   # (B, S, d)
+    return y, (c, h)
+
+
+def slstm_state(cfg, batch: int):
+    return (jnp.zeros((batch, cfg.d_model), jnp.float32),
+            jnp.zeros((batch, cfg.d_model), jnp.float32))

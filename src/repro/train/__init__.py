@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, steps, compression, straggler, elastic."""
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.steps import make_train_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "make_train_step"]

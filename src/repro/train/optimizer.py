@@ -1,0 +1,134 @@
+"""AdamW with fp32 master weights (bf16 compute params) + Adafactor option.
+
+Optimizer state mirrors the parameter sharding specs exactly (master, m, v
+each get the param's PartitionSpec), so FSDP-sharded parameters keep their
+optimizer state sharded the same way -- 16 bytes/param spread over the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # factored second moment (Adafactor-style) for giant models: v is stored
+    # as row+col factors for 2-D+ weights, ~halving optimizer bytes.
+    factored: bool = False
+    # storage dtype for the first moment (compute stays f32): 'bfloat16'
+    # drops optimizer bytes 4->2 per param -- the 8-bit-Adam-style state
+    # compression lever for the 300B+ MoEs (see EXPERIMENTS.md SDry-run).
+    m_dtype: str = "float32"
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def adamw_init(params, cfg: Optional[AdamWConfig] = None):
+    cfg = cfg or AdamWConfig()
+
+    def v_like(p):
+        if cfg.factored and p.ndim >= 2:
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return jnp.zeros(p.shape, jnp.float32)
+
+    m_dt = jnp.dtype(cfg.m_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, m_dt), params),
+        "v": jax.tree.map(v_like, params),
+    }
+
+
+def opt_state_specs(param_specs, cfg: Optional[AdamWConfig] = None,
+                    param_shapes=None):
+    """Sharding specs for the optimizer state (mirrors param specs)."""
+    from jax.sharding import PartitionSpec as P
+
+    cfg = cfg or AdamWConfig()
+    is_spec = lambda x: isinstance(x, P)
+
+    def v_spec(sp, shape):
+        if cfg.factored and shape is not None and len(shape.shape) >= 2:
+            return {"row": P(*sp[:-1]), "col": P(*(sp[:-2] + sp[-1:]))}
+        return sp
+
+    if cfg.factored and param_shapes is not None:
+        v = jax.tree.map(v_spec, param_specs, param_shapes, is_leaf=is_spec)
+    else:
+        v = param_specs
+    return {
+        "step": P(),
+        "master": param_specs,
+        "m": param_specs,
+        "v": v,
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state, params, cfg: Optional[AdamWConfig] = None):
+    """Returns (new_params, new_state, metrics)."""
+    cfg = cfg or AdamWConfig()
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    m_dt = jnp.dtype(cfg.m_dtype)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        if isinstance(v, dict):  # factored second moment
+            g2 = g * g
+            v = {
+                "row": cfg.b2 * v["row"] + (1 - cfg.b2) * g2.mean(axis=-1),
+                "col": cfg.b2 * v["col"] + (1 - cfg.b2) * g2.mean(axis=-2),
+            }
+            r = v["row"] / jnp.maximum(v["row"].mean(axis=-1, keepdims=True), 1e-30)
+            vhat = r[..., None] * v["col"][..., None, :]
+        else:
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            vhat = v
+        mh = m / b1c
+        vh = vhat / b2c
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m.astype(m_dt), v, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, ma) for g, m, v, ma in
+           zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda ma, p: ma.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,122 @@
+"""Checkpoint: roundtrip, atomicity, retention, async, elastic restore."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointManager, latest_step, restore_checkpoint,
+                        save_checkpoint)
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.bfloat16),
+                   "c": (jnp.zeros((), jnp.int32), jnp.full((2, 2), 7.0))},
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    assert latest_step(str(tmp_path)) == 3
+    got = restore_checkpoint(str(tmp_path), 3, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32))
+
+
+def test_atomicity_incomplete_ignored(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    # simulate a crash mid-save: staging dir + manifest w/o complete flag
+    bad = tmp_path / "step_00000002"
+    bad.mkdir()
+    (bad / "manifest.json").write_text(json.dumps({"complete": False}))
+    (tmp_path / "step_00000003.tmp").mkdir()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_k=2)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, t)
+        mgr.wait()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_async_overlaps_and_surfaces_errors(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(1, tree())
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 1
+    # an unwritable directory surfaces on wait()
+    mgr2 = CheckpointManager("/proc/definitely/not/writable")
+    mgr2.save_async(1, tree())
+    with pytest.raises(BaseException):
+        mgr2.wait()
+
+
+def test_elastic_restore_subprocess(tmp_path):
+    """Save on 1 device; restore onto a 4-device mesh with shardings --
+    the restart-on-different-topology path."""
+    import subprocess, sys, textwrap
+
+    t = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+    save_checkpoint(str(tmp_path), 7, t)
+    code = textwrap.dedent(f"""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.ckpt import restore_checkpoint
+        mesh = jax.make_mesh((4,), ('data',), axis_types=(AxisType.Auto,))
+        like = {{"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}}
+        got = restore_checkpoint({str(tmp_path)!r}, 7, like, mesh=mesh,
+                                 specs={{"w": P('data', None)}})
+        w = got['w']
+        assert len(w.sharding.device_set) == 4, w.sharding
+        assert np.array_equal(np.asarray(w),
+                              np.arange(32, dtype=np.float32).reshape(8, 4))
+        print('OK')
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_straggler_monitor():
+    from repro.train.straggler import StragglerMonitor
+
+    mon = StragglerMonitor(threshold=2.0, patience=2, warmup_steps=1)
+    assert not mon.record(10.0)  # warmup (compile) step ignored
+    mon.record(1.0)              # seeds the EWMA
+    assert not mon.record(1.1)
+    assert mon.record(5.0)       # strike 1
+    assert not mon.should_rebalance()
+    assert mon.record(5.0)       # strike 2
+    assert mon.should_rebalance()
+    mon.reset()
+    assert not mon.should_rebalance()
+
+
+def test_heartbeats(tmp_path):
+    import time
+    from repro.train.straggler import StragglerMonitor
+
+    mon = StragglerMonitor(dead_after=60.0)
+    StragglerMonitor.heartbeat(str(tmp_path), 0, step=5)
+    StragglerMonitor.heartbeat(str(tmp_path), 1, step=5)
+    assert mon.dead_hosts(str(tmp_path)) == []
+    # host 1 goes silent; clock advances past dead_after
+    assert mon.dead_hosts(str(tmp_path), now=time.time() + 120) == [0, 1]

@@ -1,0 +1,70 @@
+"""Data pipeline + the paper's self-join dedup operator."""
+import numpy as np
+import pytest
+
+from repro.data.dedup import dedup_batch, embed_ngrams
+from repro.data.pipeline import TokenPipeline
+
+
+def test_pipeline_deterministic_and_step_keyed():
+    p1 = TokenPipeline(vocab=1000, batch=4, seq=64, seed=3)
+    p2 = TokenPipeline(vocab=1000, batch=4, seq=64, seed=3)
+    b1, b2 = p1.batch_at(17), p2.batch_at(17)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(17)["tokens"],
+                              p1.batch_at(18)["tokens"])
+    # labels are next-token with masked tail
+    assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert (b1["labels"][:, -1] == -1).all()
+
+
+def test_pipeline_restart_resumes_exactly():
+    """The step index is the only state -> restart reproduces the stream."""
+    p = TokenPipeline(vocab=500, batch=2, seq=32, seed=1)
+    first = [p.batch_at(s)["tokens"] for s in range(5)]
+    again = [TokenPipeline(vocab=500, batch=2, seq=32, seed=1).batch_at(s)["tokens"]
+             for s in range(5)]
+    for a, b in zip(first, again):
+        assert np.array_equal(a, b)
+
+
+def test_embed_ngrams_separates_duplicates():
+    rng = np.random.default_rng(0)
+    doc = rng.integers(0, 1000, (1, 128))
+    near = doc.copy()
+    near[0, ::64] += 1                        # tiny perturbation (2 tokens)
+    far = rng.integers(0, 1000, (1, 128))
+    emb = embed_ngrams(np.concatenate([doc, near, far]), n_dims=4)
+    d_near = np.linalg.norm(emb[0] - emb[1])
+    d_far = np.linalg.norm(emb[0] - emb[2])
+    assert d_near < 0.25 * d_far
+
+
+def test_dedup_batch_drops_planted_duplicates():
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, 1000, (6, 128))
+    batch = np.concatenate([base, base[:3]])   # plant 3 exact duplicates
+    keep = dedup_batch(batch, eps=0.05)
+    assert keep.sum() == 6
+    # exactly one survivor per duplicate pair, and it is the earliest id
+    for i in range(3):
+        assert keep[i] and not keep[6 + i]
+    # unrelated docs all kept
+    assert keep[3:6].all()
+
+
+def test_dedup_union_find_clusters():
+    rng = np.random.default_rng(2)
+    doc = rng.integers(0, 1000, (1, 128))
+    batch = np.concatenate([doc] * 4 + [rng.integers(0, 1000, (2, 128))])
+    keep = dedup_batch(batch, eps=0.05)
+    assert keep.sum() == 3                     # 1 survivor + 2 unique
+    assert keep[0] and not keep[1:4].any()
+
+
+def test_pipeline_dedup_keeps_batch_shape():
+    p = TokenPipeline(vocab=50, batch=16, seq=32, seed=0, dedup=True,
+                      dedup_eps=0.3)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (16, 32)
+    assert b["labels"].shape == (16, 32)

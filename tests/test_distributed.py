@@ -1,0 +1,183 @@
+"""Distributed slab join + cross-pod compression, on 8 placeholder devices.
+
+Runs in a subprocess-free way: conftest has NOT set a device count, so this
+module re-execs itself? No -- simpler: these tests run under the 8-device
+flag via the pytest-xdist-free trick of setting XLA_FLAGS in a subprocess.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_distributed_count_matches_brute():
+    out = run_sub(textwrap.dedent("""
+        import numpy as np, jax
+        from repro.core.distributed import distributed_self_join_count
+        from repro.core.brute import brute_force_count
+        from jax.sharding import AxisType
+        rng = np.random.default_rng(1)
+        for n, eps in ((2, 0.8), (3, 1.0)):
+            pts = rng.uniform(0, 10, size=(1500, n))
+            bf = brute_force_count(pts, eps)
+            m1 = jax.make_mesh((8,), ('slab',), axis_types=(AxisType.Auto,))
+            c1 = distributed_self_join_count(pts, eps, m1, unicomp=True)
+            m2 = jax.make_mesh((4, 2), ('slab', 'model'),
+                               axis_types=(AxisType.Auto,) * 2)
+            c2 = distributed_self_join_count(pts, eps, m2, unicomp=True,
+                                             model_axis='model')
+            c3 = distributed_self_join_count(pts, eps, m2, unicomp=False,
+                                             model_axis='model')
+            assert bf == c1 == c2 == c3, (n, bf, c1, c2, c3)
+        print('OK')
+    """))
+    assert "OK" in out
+
+
+def test_distributed_skewed_data_balanced():
+    """Equal-count partitioner keeps slabs balanced under heavy skew."""
+    out = run_sub(textwrap.dedent("""
+        import numpy as np, jax
+        from repro.core.distributed import (distributed_self_join_count,
+                                            partition_points_host)
+        from repro.core.brute import brute_force_count
+        from jax.sharding import AxisType
+        rng = np.random.default_rng(2)
+        # 90% of points clustered in 5% of the range
+        a = rng.uniform(0, 0.5, size=(1800, 2))
+        b = rng.uniform(0, 10, size=(200, 2))
+        pts = np.concatenate([a, b])
+        coords, gids, width = partition_points_host(pts, 8)
+        counts = (gids >= 0).sum(axis=1)
+        assert counts.max() - counts.min() <= 1, counts
+        m = jax.make_mesh((8,), ('slab',), axis_types=(AxisType.Auto,))
+        got = distributed_self_join_count(pts, 0.2, m)
+        assert got == brute_force_count(pts, 0.2)
+        print('OK')
+    """))
+    assert "OK" in out
+
+
+def test_halo_overflow_detected():
+    out = run_sub(textwrap.dedent("""
+        import numpy as np, jax
+        from jax.sharding import AxisType
+        from repro.core.distributed import (DistJoinConfig,
+                                            make_distributed_count_step,
+                                            partition_points_host)
+        rng = np.random.default_rng(3)
+        pts = rng.uniform(0, 1.0, size=(800, 2))  # eps >> slab width
+        mesh = jax.make_mesh((8,), ('slab',), axis_types=(AxisType.Auto,))
+        coords, gids, _ = partition_points_host(pts, 8)
+        cfg = DistJoinConfig(pts_per_device=coords.shape[1], n_dims=2,
+                             halo_capacity=4, max_per_cell=64,
+                             model_axis=None)
+        step, in_sh = make_distributed_count_step(mesh, cfg)
+        import jax.numpy as jnp
+        c = jax.device_put(coords.reshape(-1, 2), in_sh[0])
+        g = jax.device_put(gids.reshape(-1), in_sh[1])
+        total, halo_of, cell_of = step(c, g, jnp.asarray(0.5, pts.dtype))
+        assert int(halo_of) == 1  # overflow detected, not silent
+        print('OK')
+    """))
+    assert "OK" in out
+
+
+def test_compressed_train_step_end_to_end():
+    """Full train step with int8 cross-pod grad exchange on a (2,2,2) mesh:
+    loss decreases and tracks the uncompressed step closely."""
+    out = run_sub(textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.models.lm import LMModel
+        from repro.train.optimizer import AdamWConfig, adamw_init, opt_state_specs
+        from repro.train.steps import make_train_step
+        from repro.train.compression import init_error_state
+
+        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
+                             axis_types=(AxisType.Auto,) * 3)
+        cfg = get_config('qwen1.5-0.5b', reduced=True)
+        rng = np.random.default_rng(0)
+        batch = {'tokens': jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32),
+                 'labels': jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32)}
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=1)
+
+        def run(compress):
+            model = LMModel(cfg, mesh)
+            params, specs = model.init(jax.random.PRNGKey(0))
+            opt = adamw_init(params, ocfg)
+            if compress:
+                opt['grad_error'] = init_error_state(params)
+            step = jax.jit(make_train_step(model, ocfg, compress_pods=compress,
+                                           param_specs=specs))
+            losses = []
+            with mesh:
+                for _ in range(4):
+                    params, opt, m = step(params, opt, batch)
+                    losses.append(float(m['loss']))
+            return losses
+
+        plain = run(False)
+        comp = run(True)
+        assert comp[-1] < comp[0], comp
+        assert abs(comp[0] - plain[0]) < 1e-2, (comp[0], plain[0])
+        assert abs(comp[-1] - plain[-1]) < 0.1, (comp, plain)
+        print('OK')
+    """))
+    assert "OK" in out
+
+
+def test_compressed_crosspod_grads():
+    """int8 all-gather grad exchange: mean error small, error feedback
+    carries the residual; exact for pod-identical gradients."""
+    out = run_sub(textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from repro.train.compression import compressed_psum_mean
+        mesh = jax.make_mesh((2, 4), ('pod', 'data'),
+                             axis_types=(AxisType.Auto,) * 2)
+        rng = np.random.default_rng(0)
+        g_global = rng.normal(size=(2, 64)).astype(np.float32)  # per-pod rows
+
+        def f(g, e):
+            m, ne = compressed_psum_mean({'w': g}, {'w': e}, 'pod', 2)
+            return m['w'], ne['w']
+
+        sm = jax.shard_map(f, mesh=mesh,
+                           in_specs=(P('pod'), P('pod')),
+                           out_specs=(P(), P('pod')),
+                           axis_names={'pod'}, check_vma=False)
+        g = jax.device_put(g_global.reshape(-1),
+                           NamedSharding(mesh, P('pod')))
+        e = jnp.zeros_like(g)
+        mean, err = jax.jit(sm)(g, e)
+        true_mean = g_global.mean(axis=0)
+        got = np.asarray(mean)
+        scale = np.abs(g_global).max() / 127.0
+        assert got.shape == (64,)
+        assert np.max(np.abs(got - true_mean)) <= scale + 1e-6
+        # error feedback holds the quantization residual per pod
+        err = np.asarray(err).reshape(2, 64)
+        q = np.clip(np.round(g_global / scale), -127, 127)
+        resid = g_global - q * scale
+        assert np.allclose(err, resid, atol=1e-6)
+        print('OK')
+    """))
+    assert "OK" in out

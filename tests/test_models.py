@@ -1,0 +1,224 @@
+"""Per-arch smoke tests (REDUCED configs) + full-config structural checks.
+
+Every assigned architecture: one forward/train step on CPU, finite loss and
+gradients; decode consistency against teacher-forced prefill logits; the
+FULL configs are only shape-checked (abstract init vs analytic param count)
+-- full-size lowering is exercised by the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ALIASES, get_config
+from repro.models.lm import LMModel
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.steps import make_train_step
+
+CANON = {v: k for k, v in ALIASES.items()}
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, cfg.vocab, (B, S)).astype(np.int32)
+    if cfg.input_kind == "embeddings":
+        return {"embeds": jnp.asarray(
+                    rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16),
+                "labels": jnp.asarray(labels)}
+    return {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+            "labels": jnp.asarray(labels)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get_config(CANON[arch], reduced=True)
+    model = LMModel(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1)
+    opt = adamw_init(params, ocfg)
+    step = jax.jit(make_train_step(model, ocfg))
+    losses = []
+    for i in range(3):
+        params, opt, metrics = step(params, opt, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), (arch, i)
+        losses.append(loss)
+    # same batch re-fed: optimization must reduce the loss
+    assert losses[-1] < losses[0], (arch, losses)
+    # outputs shaped and finite
+    leaves = jax.tree.leaves(params)
+    assert all(np.all(np.isfinite(np.asarray(l, np.float32)))
+               for l in leaves), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(CANON[a]).has_decode])
+def test_reduced_decode_matches_forward(arch):
+    """Prefill then decode-one vs teacher-forced forward: same logits."""
+    import dataclasses
+
+    cfg = get_config(CANON[arch], reduced=True)
+    if cfg.n_experts:
+        # capacity dropping makes decode legitimately diverge from the
+        # teacher-forced forward; lift the cap for the consistency check
+        cfg = dataclasses.replace(cfg, capacity_factor=100.0)
+    model = LMModel(cfg)
+    params, _ = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, cfg.vocab, (B, S + 1)).astype(np.int32)
+    if cfg.input_kind == "embeddings":
+        # vlm: prefill from embeddings uses the embed table for parity
+        emb = np.asarray(params["embed"])[toks]
+        batch = {"embeds": jnp.asarray(emb[:, :S], jnp.bfloat16),
+                 "labels": jnp.zeros((B, S), jnp.int32)}
+        full_batch = {"embeds": jnp.asarray(emb[:, 1:], jnp.bfloat16),
+                      "labels": jnp.zeros((B, S), jnp.int32)}
+    else:
+        batch = {"tokens": jnp.asarray(toks[:, :S]),
+                 "labels": jnp.zeros((B, S), jnp.int32)}
+    caches = model.init_caches(B, S + 4)
+    logits_p, caches = jax.jit(model.prefill)(params, batch, caches)
+    logits_d, _ = jax.jit(model.decode_step)(
+        params, jnp.asarray(toks[:, S]), caches)
+    # reference: full forward over S+1 tokens; decode logits == position S
+    if cfg.input_kind == "embeddings":
+        emb_all = np.asarray(params["embed"])[toks]
+        ref_in = {"embeds": jnp.asarray(emb_all, jnp.bfloat16),
+                  "labels": jnp.zeros((B, S + 1), jnp.int32)}
+    else:
+        ref_in = {"tokens": jnp.asarray(toks),
+                  "labels": jnp.zeros((B, S + 1), jnp.int32)}
+
+    def full_logits(p, b):
+        from repro.models import transformer as tf
+        from repro.models.layers import rms_norm
+        x = model._embed_in(p, b, model._default_layout(b))
+        x, _, _ = tf.stack_forward(
+            p["blocks"], p.get("shared_attn"), x, cfg, model.ctx,
+            mode="train", head_tp=None, seq_axes=None, dp_spec=None)
+        x = rms_norm(x, p["final_norm"])
+        return x[:, -1, :] @ p["head"].T.astype(x.dtype)
+
+    ref = jax.jit(full_logits)(params, ref_in)
+    a = np.asarray(logits_d, np.float32)
+    b = np.asarray(ref, np.float32)
+    # prefill logits (position S-1) must also match the S-token forward
+    np.testing.assert_allclose(a, b, rtol=0.15, atol=0.15)
+    # ranking agreement is the functional check (bf16 noise tolerated)
+    assert (np.argmax(a, -1) == np.argmax(b, -1)).mean() >= 0.95, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count(arch):
+    """Abstract init (no allocation) matches the analytic parameter count
+    within 3% -- guards config drift against the published sizes."""
+    cfg = get_config(CANON[arch])
+    model = LMModel(cfg)
+    shapes, specs = model.abstract_params()
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    analytic = cfg.param_count()
+    assert abs(total - analytic) / analytic < 0.03, (arch, total, analytic)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_spec_divisibility(arch):
+    """Every sharded dim divides its mesh axes on the production mesh."""
+    cfg = get_config(CANON[arch])
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    from repro.models.layers import ShardCtx
+    ctx = ShardCtx(fsdp_axis="data", tp_axis="model", fsdp_size=16,
+                   tp_size=16)
+    model = LMModel.__new__(LMModel)
+    model.cfg, model.mesh, model.ctx = cfg, None, ctx
+    shapes, specs = model.abstract_params()
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    flat_a = jax.tree.leaves(shapes)
+    specs_list = [s for _, s in flat_s]
+    assert len(specs_list) == len(flat_a)
+    for sds, spec in zip(flat_a, specs_list):
+        for dim, ax in zip(sds.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([sizes[a] for a in axes]))
+            assert dim % n == 0, (arch, sds.shape, spec)
+
+
+def test_moe_dispatch_exactness():
+    """Sort-based dispatch == dense reference when capacity is unbounded."""
+    from repro.models.moe import init_moe, moe_ffn
+    from repro.models.config import ModelConfig
+    from repro.models.layers import ShardCtx
+
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=48, vocab=64,
+                      n_experts=4, top_k=2, capacity_factor=100.0)
+    ctx = ShardCtx(None, None, 1, 1)
+    p, _ = init_moe(jax.random.PRNGKey(0), cfg, ctx)
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+    out, aux = moe_ffn(p, x, cfg, ep_axis=None)
+    assert float(aux["dropped_frac"]) == 0.0
+
+    # dense reference
+    T = 16
+    tokens = x.reshape(T, 32)
+    logits = tokens @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    topw, tope = jax.lax.top_k(probs, 2)
+    topw = topw / topw.sum(-1, keepdims=True)
+    ref = np.zeros((T, 32), np.float32)
+    for t in range(T):
+        for j in range(2):
+            e = int(tope[t, j])
+            h = jax.nn.silu(tokens[t] @ p["w_gate"][e]) * (
+                tokens[t] @ p["w_up"][e])
+            ref[t] += float(topw[t, j]) * np.asarray(h @ p["w_down"][e])
+    np.testing.assert_allclose(np.asarray(out).reshape(T, 32), ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_reported():
+    from repro.models.moe import init_moe, moe_ffn
+    from repro.models.config import ModelConfig
+    from repro.models.layers import ShardCtx
+
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab=64,
+                      n_experts=8, top_k=2, capacity_factor=0.25)
+    ctx = ShardCtx(None, None, 1, 1)
+    p, _ = init_moe(jax.random.PRNGKey(0), cfg, ctx)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 16), jnp.bfloat16)
+    out, aux = moe_ffn(p, x, cfg, ep_axis=None)
+    assert float(aux["dropped_frac"]) > 0.0
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+def test_gated_linear_chunked_vs_recurrent():
+    """Chunkwise-parallel mLSTM/SSD kernel == step-by-step recurrence."""
+    from repro.models.xlstm import chunked_gated_linear, gated_linear_step
+
+    rng = np.random.default_rng(0)
+    B, S, H, dk, dv = 2, 24, 3, 8, 5
+    q = jnp.asarray(rng.normal(size=(B, S, H, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, dv)), jnp.float32)
+    log_f = jnp.asarray(np.log(rng.uniform(0.7, 1.0, (B, S, H))), jnp.float32)
+    ig = jnp.asarray(rng.uniform(0.2, 1.0, (B, S, H)), jnp.float32)
+
+    y_chunk, st_chunk = chunked_gated_linear(q, k, v, log_f, ig, chunk=8)
+    st = jnp.zeros((B, H, dk, dv), jnp.float32)
+    ys = []
+    for t in range(S):
+        st, yt = gated_linear_step(st, q[:, t], k[:, t], v[:, t],
+                                   log_f[:, t], ig[:, t])
+        ys.append(yt)
+    y_rec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(st),
+                               rtol=2e-4, atol=2e-4)
