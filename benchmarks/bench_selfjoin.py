@@ -1,0 +1,157 @@
+"""Self-join perf trajectory: count/fill across distance_impl variants.
+
+    PYTHONPATH=src python benchmarks/bench_selfjoin.py [--out BENCH_selfjoin.json]
+
+Times ``self_join_count`` (count) and ``self_join`` (count+fill, unsorted --
+the paper reports the result sort separately) for n in {2, 4, 6} on uniform
+and clustered datasets, across distance_impl in {jnp, pallas, fused}, with
+the grid index prebuilt (index construction is shared by every impl and
+benchmarked in benchmarks/joins.py).
+
+On this CPU container the 'pallas' impl runs the cell_join kernel through
+the interpreter and the 'fused' impl runs the reference lowering of
+kernels/fused_join.py (same algorithm, same outputs as the Mosaic kernel);
+absolute times are machine-local, the IMPL-vs-IMPL ratios are the claim
+(interpret-mode CPU timing as proxy, ISSUE 1). The headline acceptance
+number is fused-vs-jnp on the 2-D uniform 100k workload.
+
+Writes BENCH_selfjoin.json (repo root by default) -- the first point of the
+perf trajectory; later PRs append runs, EXPERIMENTS.md tracks the history.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from repro.core.grid import build_grid_host                     # noqa: E402
+from repro.core.selfjoin import self_join, self_join_count      # noqa: E402
+from benchmarks.common import syn                               # noqa: E402
+
+IMPLS = ("jnp", "pallas", "fused")
+
+
+def clustered(n_points: int, n_dims: int, seed: int = 3) -> np.ndarray:
+    """Gaussian clusters in [0, 100]^n (sw_like is 2/3-D only)."""
+    rng = np.random.default_rng(seed)
+    k = max(n_points // 200, 4)
+    centers = rng.uniform(0, 100, (k, n_dims))
+    pts = centers[rng.integers(0, k, n_points)]
+    return pts + rng.normal(0, 1.5, pts.shape)
+
+
+def workloads(args):
+    # eps tuned per dimensionality for paper-like selectivity (a handful of
+    # neighbors per point on the uniform sets; denser on the clustered sets).
+    yield "uniform-2d", syn(args.points_2d, 2), 0.4
+    yield "clustered-2d", clustered(args.points_2d, 2), 0.4
+    yield "uniform-4d", syn(args.points_4d, 4), 6.0
+    yield "clustered-4d", clustered(args.points_4d, 4), 3.0
+    yield "uniform-6d", syn(args.points_6d, 6), 14.0
+    yield "clustered-6d", clustered(args.points_6d, 6), 4.0
+
+
+def best_of(fn, trials: int) -> float:
+    fn()  # warm-up: jit compile excluded (paper excludes context setup)
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_selfjoin.json"))
+    ap.add_argument("--points-2d", type=int, default=100_000)
+    ap.add_argument("--points-4d", type=int, default=20_000)
+    ap.add_argument("--points-6d", type=int, default=10_000)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--impls", default=",".join(IMPLS),
+                    help="comma-separated subset of %s" % (IMPLS,))
+    args = ap.parse_args(argv)
+    impls = tuple(args.impls.split(","))
+
+    import jax
+
+    results = []
+    for name, pts, eps in workloads(args):
+        index = build_grid_host(pts, eps)
+        expect = self_join_count(pts, eps, index=index).total_pairs
+        entry = {
+            "workload": name,
+            "n_points": int(pts.shape[0]),
+            "n_dims": int(pts.shape[1]),
+            "eps": float(eps),
+            "total_pairs": int(expect),
+            "max_per_cell": int(index.max_per_cell),
+            "impls": {},
+        }
+        for impl in impls:
+            stats = self_join_count(pts, eps, index=index, distance_impl=impl)
+            assert stats.total_pairs == expect, (name, impl, stats)
+            # the interpreted cell_join kernel is ~100x slower than its
+            # Mosaic build; one timed trial keeps the sweep tractable
+            trials = 1 if impl == "pallas" else args.trials
+            t_count = best_of(
+                lambda: self_join_count(pts, eps, index=index,
+                                        distance_impl=impl),
+                trials)
+            t_join = best_of(
+                lambda: self_join(pts, eps, index=index, distance_impl=impl,
+                                  sort_result=False),
+                trials)
+            entry["impls"][impl] = {"count_s": t_count, "join_s": t_join}
+            print(f"[bench] {name:14s} {impl:6s} "
+                  f"count {t_count*1e3:9.1f} ms   join {t_join*1e3:9.1f} ms",
+                  flush=True)
+        j = entry["impls"]
+        if "jnp" in j and "fused" in j:
+            entry["speedup_fused_vs_jnp"] = {
+                "count": j["jnp"]["count_s"] / j["fused"]["count_s"],
+                "join": j["jnp"]["join_s"] / j["fused"]["join_s"],
+            }
+        results.append(entry)
+
+    headline = next((e for e in results
+                     if e["workload"] == "uniform-2d"
+                     and "speedup_fused_vs_jnp" in e), None)
+    payload = {
+        "bench": "selfjoin-distance-impl",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "note": ("CPU proxy timings: 'pallas' via kernel interpreter, "
+                 "'fused' via the reference lowering of the fused kernel "
+                 "(bit-identical outputs to the Mosaic kernel)"),
+        "headline": None if headline is None else {
+            "workload": "uniform-2d",
+            "n_points": headline["n_points"],
+            "fused_over_jnp_join": headline["speedup_fused_vs_jnp"]["join"],
+            "fused_over_jnp_count": headline["speedup_fused_vs_jnp"]["count"],
+        },
+        "results": results,
+    }
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    if headline is not None:
+        print(f"[bench] headline: fused over jnp (uniform-2d, "
+              f"{headline['n_points']} pts): "
+              f"join {payload['headline']['fused_over_jnp_join']:.2f}x, "
+              f"count {payload['headline']['fused_over_jnp_count']:.2f}x")
+    print(f"[bench] wrote {out}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

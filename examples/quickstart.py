@@ -15,8 +15,9 @@ D = rng.uniform(0, 100, size=(20_000, 4))   # |D|=20k points in 4-D
 eps = 4.0
 
 # the self-join: all ordered pairs within eps (grid index + UNICOMP +
-# >=3 result batches, paper SIV-SV)
-pairs = self_join_batched(D, eps, unicomp=True, n_batches=3)
+# >=3 result batches, paper SIV-SV; fused gather-refine kernel, DESIGN.md S4)
+pairs = self_join_batched(D, eps, unicomp=True, n_batches=3,
+                          distance_impl="fused")
 stats = self_join_count(D, eps, unicomp=True)
 
 print(f"|D|={D.shape[0]} n=4 eps={eps}")

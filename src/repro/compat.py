@@ -1,0 +1,42 @@
+"""Version portability shims for jax APIs that moved between releases.
+
+The repo targets the current jax (``jax.shard_map`` with ``check_vma`` /
+``axis_names``, ``jax.sharding.AxisType``) but must also run on the 0.4.x
+line this container ships, where shard_map lives in ``jax.experimental``
+with the (check_rep, auto) spelling. Everything here is a thin argument
+translation -- semantics are identical.
+
+Mesh construction portability lives in ``repro.launch.mesh.make_mesh_compat``
+(it is launch-flavored and must not import jax device state early).
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  axis_names=None):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  axis_names=None):
+        # new-jax axis_names lists the MANUAL axes; old-jax `auto` lists the
+        # complement. check_vma maps to check_rep (default True, like both
+        # jax spellings). 0.4.x raises NotImplementedError for check_rep=True
+        # with a non-empty auto set, so partial-manual maps drop the check
+        # there (new jax still honors it).
+        auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+                if axis_names is not None else frozenset())
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs,
+                          check_rep=check_vma and not auto,
+                          auto=auto)

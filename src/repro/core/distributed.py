@@ -222,7 +222,7 @@ def make_distributed_count_step(mesh: Mesh, cfg: DistJoinConfig):
             gc = gid_sorted[cand_pos]
             if cfg.unicomp:
                 hits = hits & jnp.where(o_zero, gc > gq, gc != gq)
-                inc = jnp.where(o_zero, 2 * hits.sum(), 2 * hits.sum())
+                inc = 2 * hits.sum()  # every unicomp hit is one unordered pair
             else:
                 hits = hits & (gc != gq)
                 inc = hits.sum()
@@ -237,7 +237,9 @@ def make_distributed_count_step(mesh: Mesh, cfg: DistJoinConfig):
         return total, halo_overflow, cell_overflow
 
     off_spec = P(cfg.model_axis) if cfg.model_axis else P()
-    fn = jax.shard_map(
+    from repro.compat import shard_map
+
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(slab), P(slab), P(), off_spec, off_spec, off_spec),

@@ -252,6 +252,52 @@ def build_grid_with_geometry(
     )
 
 
+def window_descriptors(
+    index: GridIndex,
+    deltas: jax.Array,
+    q_start: jax.Array | int = 0,
+    q_size: Optional[int] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-(offset, query) candidate windows in kernel-friendly layout.
+
+    For the query batch at sorted positions [q_start, q_start + q_size) and
+    every stencil offset delta (linearized), returns
+
+        win_start (n_off, q_size) int32 -- offset into ``points_sorted`` of
+            the adjacent cell's candidate window, and
+        win_count (n_off, q_size) int32 -- its length (0 when the adjacent
+            cell is empty, absent from B, or the query slot is padding).
+
+    This is pure index arithmetic: one batched ``searchsorted`` over B for
+    the whole (offset x query) plane, no point-coordinate gather. The fused
+    kernel (kernels/fused_join.py) prefetches these two arrays as scalars
+    (pltpu.PrefetchScalarGridSpec) and performs the HBM->VMEM candidate
+    gather itself, so the (B, C, n) gathered intermediate of the unfused
+    sweep never exists (DESIGN.md S4).
+
+    A window is always a contiguous run of ``points_sorted`` rows because a
+    grid cell's points are contiguous in A-order (paper Fig. 2a), and
+    ``win_start + win_count <= |D|`` always holds, so a kernel may read a
+    fixed C-padded window anywhere as long as ``points_sorted`` carries C
+    rows of tail padding.
+    """
+    npts = index.num_points
+    if q_size is None:
+        q_size = npts
+    q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(q_size, dtype=jnp.int32)
+    q_ok = q_pos < npts
+    q_pos_c = jnp.minimum(q_pos, npts - 1)
+    rank = index.point_cell_rank[q_pos_c]            # (Q,) rank of own cell
+    own_key = index.cell_keys[rank]                  # (Q,) int64
+    qk = own_key[None, :] + deltas[:, None]          # (n_off, Q) int64
+    nbr = neighbor_rank(index, qk)                   # (n_off, Q), -1 = miss
+    live = (nbr >= 0) & q_ok[None, :]
+    nbr_c = jnp.maximum(nbr, 0)
+    win_start = jnp.where(live, index.cell_start[nbr_c], 0).astype(jnp.int32)
+    win_count = jnp.where(live, index.cell_count[nbr_c], 0).astype(jnp.int32)
+    return win_start, win_count
+
+
 def neighbor_rank(index: GridIndex, query_keys: jax.Array) -> jax.Array:
     """Vectorized membership lookup in B: rank of each key, or -1 if absent.
 

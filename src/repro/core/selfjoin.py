@@ -13,15 +13,27 @@ atomics, so we restructure the same computation as an **offset sweep**
             hits       = ||q_i - cand||^2 <= eps^2       (masked)
 
 The candidate distance evaluation is the compute hot-spot; it is pluggable
-(``distance_impl``): 'jnp' (reference) or 'pallas' (kernels/cell_join.py,
-MXU formulation).
+(``distance_impl``):
+
+  'jnp'    -- reference: gather the (B, C, n) candidate tensor, evaluate.
+  'pallas' -- kernels/cell_join.py refine over the same gathered tensor.
+  'fused'  -- kernels/fused_join.py: the gather happens INSIDE the kernel
+              (window descriptors via scalar prefetch, HBM->VMEM dynamic
+              slice per window), all stencil offsets sweep in ONE launch
+              with the query tile VMEM-resident throughout, and count+fill
+              share a single distance evaluation per candidate: the kernel
+              returns the masked hit set plus per-query counts and the
+              per-tile exclusive-scan slot bases, so the fill phase only
+              scatters (DESIGN.md S4). No (B, C, n) intermediate exists.
 
 Result emission replaces the paper's atomics with a two-phase
-count -> exclusive-scan -> scatter fill; the paper sorts the key/value result
-after the kernel, and we optionally do the same. Batching over query points
-(paper SV-A) bounds both the result buffer and the gathered-candidate
-intermediate; the driver ``self_join_batched`` uses >= 3 batches like the
-paper and overlaps device compute with host transfers via JAX async dispatch.
+count -> exclusive-scan -> scatter fill ('jnp'/'pallas'; every distance is
+computed twice) or the fused single-pass count -> fill above. The paper
+sorts the key/value result after the kernel, and we optionally do the same.
+Batching over query points (paper SV-A) bounds both the result buffer and
+the per-batch hit set; the driver ``self_join_batched`` uses >= 3 batches
+like the paper and overlaps device compute with host transfers via JAX
+async dispatch.
 """
 from __future__ import annotations
 
@@ -249,6 +261,238 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+# ---------------------------------------------------------------------------
+# Fused path (distance_impl='fused'): single-pass count -> fill around
+# kernels/fused_join.py. One kernel launch sweeps every stencil offset; the
+# fill reuses the count pass's hit set / per-tile totals, so each candidate
+# distance is evaluated exactly once and the (B, C, n) gathered intermediate
+# of the unfused sweep never exists (DESIGN.md S4).
+# ---------------------------------------------------------------------------
+
+_FUSED_TQ = 128  # query tile rows (kernel grid unit; batch sizes round up)
+
+
+@partial(jax.jit, static_argnames=("qp", "q_limit"))
+def _fused_prep(index: GridIndex, points_pad: jax.Array, deltas: jax.Array,
+                q_start: jax.Array, *, qp: int, q_limit: int):
+    """Window descriptors + contiguous query slice for one batch.
+
+    Pure index arithmetic and a contiguous slice -- explicitly NOT a
+    ``points_sorted[cand_pos]`` gather; candidate coordinates are only ever
+    touched inside the fused kernel. ``q_limit`` < qp zeroes the windows of
+    tile-padding query rows so batches rounded up to the tile unit never
+    overlap the next batch's queries.
+    """
+    from repro.core.grid import window_descriptors
+    from repro.kernels.fused_join import NP_PAD
+
+    ws, wc = window_descriptors(index, deltas, q_start, qp)
+    if q_limit < qp:
+        wc = jnp.where(jnp.arange(qp, dtype=jnp.int32) < q_limit, wc, 0)
+    q_batch = jax.lax.dynamic_slice(
+        points_pad, (q_start, jnp.asarray(0, q_start.dtype)), (qp, NP_PAD))
+    return ws, wc, q_batch
+
+
+def _fused_pad(index: GridIndex, *, q_size: int, c: int,
+               q_start_max: int = 0):
+    """One padded-points copy shared by every batch of a sweep. The tail
+    covers the C-slot window reads and the worst batch's rounded-up query
+    slice (``q_start_max`` = largest batch origin), so the per-batch
+    dynamic_slice never clamps."""
+    from repro.kernels.fused_join import pad_points
+
+    qp = _round_up(max(q_size, 1), _FUSED_TQ)
+    tail = max(c, q_start_max + qp - index.num_points)
+    return pad_points(index.points_sorted, tail), qp
+
+
+def _fused_batch_run(index: GridIndex, points_pad, deltas, is_zero, q_start,
+                     *, qp: int, q_size: int, c: int, unicomp: bool,
+                     keep_hits: bool, method: Optional[str] = None):
+    """One query batch through the fused kernel: descriptors -> sweep."""
+    from repro.kernels import ops
+
+    ws, wc, q_batch = _fused_prep(
+        index, points_pad, deltas, jnp.asarray(q_start, jnp.int32), qp=qp,
+        q_limit=max(q_size, 1))
+    hits, counts, base = ops.fused_join_hits(
+        points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32),
+        jnp.asarray(q_start, jnp.int32), index.eps,
+        c=c, n_real=index.n_dims, unicomp=unicomp, tq=_FUSED_TQ,
+        keep_hits=keep_hits, method=method)
+    return ws, wc, hits, counts, base
+
+
+@partial(jax.jit, static_argnames=("c", "tq", "unicomp", "capacity"))
+def _emit_from_hits(index: GridIndex, hits, counts, slot_base, win_start,
+                    q_start, *, c: int, tq: int, unicomp: bool,
+                    capacity: int):
+    """Fill phase of the fused path: scatter pairs from the count pass's hit
+    set. No distances here -- positions come from the window descriptors and
+    output slots from the kernel's per-tile exclusive scan (``slot_base``)
+    offset by the exclusive scan of the per-tile totals."""
+    n_off, qp, _ = hits.shape
+    npts = index.num_points
+    orig = index.order
+    q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(qp, dtype=jnp.int32)
+    q_pos_c = jnp.minimum(q_pos, npts - 1)
+    slots = jnp.arange(c, dtype=jnp.int32)
+    cand_pos = win_start[:, :, None] + slots[None, None, :]
+    # query-major flattening: a query's hits are contiguous in slot order
+    h = hits.astype(bool).transpose(1, 0, 2).reshape(qp, n_off * c)
+    cp = jnp.minimum(cand_pos.transpose(1, 0, 2).reshape(qp, n_off * c),
+                     npts - 1)
+    rank = jnp.cumsum(h, axis=1) - 1              # within-query hit rank
+    tile_tot = counts.reshape(-1, tq).sum(axis=1).astype(jnp.int64)
+    tile_base = jnp.cumsum(tile_tot) - tile_tot
+    qbase = jnp.repeat(tile_base, tq) + slot_base.astype(jnp.int64)
+    pos = qbase[:, None] + rank
+    qid = jnp.broadcast_to(orig[q_pos_c][:, None], h.shape)
+    cid = orig[cp]
+    keys = jnp.full((capacity,), -1, jnp.int32)
+    vals = jnp.full((capacity,), -1, jnp.int32)
+    if unicomp:
+        # every hit is an unordered pair -> two ordered result rows
+        idx_fwd = jnp.where(h, 2 * pos, capacity)
+        idx_rev = jnp.where(h, 2 * pos + 1, capacity)
+        keys = keys.at[idx_fwd].set(qid, mode="drop")
+        vals = vals.at[idx_fwd].set(cid, mode="drop")
+        keys = keys.at[idx_rev].set(cid, mode="drop")
+        vals = vals.at[idx_rev].set(qid, mode="drop")
+        total = 2 * counts.sum(dtype=jnp.int64)
+    else:
+        idx = jnp.where(h, pos, capacity)
+        keys = keys.at[idx].set(qid, mode="drop")
+        vals = vals.at[idx].set(cid, mode="drop")
+        total = counts.sum(dtype=jnp.int64)
+    return keys, vals, total
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def _emit_from_hits_host(order: np.ndarray, hits, win_start, q_start: int,
+                         npts: int, unicomp: bool) -> np.ndarray:
+    """Host-side fill from the count pass's hit set (no distances, no device
+    scatter). The result is host-bound anyway (the paper copies each batch
+    off-device, SV-A), and compacting the (n_off, Q, C) hit bitmap with one
+    ``np.nonzero`` beats an XLA scatter of mostly-dropped updates by orders
+    of magnitude off-TPU; on TPU the device path ``_emit_from_hits`` keeps
+    the scatter close to the data."""
+    # query-major like the device emit, so both backends produce the SAME
+    # row order (per query: offsets in sweep order, slots in window order)
+    h = np.asarray(hits).astype(bool).transpose(1, 0, 2)   # (Q, n_off, C)
+    ws = np.asarray(win_start)
+    q, off, s = np.nonzero(h)
+    cand_pos = ws[off, q] + s
+    qid = order[np.minimum(q_start + q, npts - 1)]
+    cid = order[cand_pos]
+    if unicomp:
+        out = np.empty((2 * qid.shape[0], 2), np.int32)
+        out[0::2, 0] = qid
+        out[0::2, 1] = cid
+        out[1::2, 0] = cid
+        out[1::2, 1] = qid
+    else:
+        out = np.stack([qid, cid], axis=1).astype(np.int32)
+    return out
+
+
+def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
+                     n_batches: int = 1, method: Optional[str] = None,
+                     emit: Optional[str] = None):
+    """Single-pass count -> fill driver for distance_impl='fused'.
+
+    Per batch: one fused sweep produces the hit set + per-query counts; the
+    exact result size follows from the counts (sync point), and the fill is
+    a pure compaction/scatter over the same hit set -- no second distance
+    pass. ``emit`` selects the fill backend: 'device' (scatter sized by the
+    counts, with the kernel's per-tile slot bases; default on TPU) or 'host'
+    (np.nonzero compaction of the hit bitmap; default elsewhere). Device
+    capacities round to powers of two across batches so the emit scatter
+    compiles O(log) times, not per batch.
+    """
+    if emit is None:
+        emit = "device" if jax.default_backend() == "tpu" else "host"
+    deltas, is_zero = _offset_tables(index, unicomp)
+    c = _round_up(max(int(index.max_per_cell), 1), 8)
+    npts = index.num_points
+    order_np = np.asarray(index.order)
+    n_batches = max(int(n_batches), 1)
+    q_size = -(-npts // n_batches)  # ceil
+    mult = 2 if unicomp else 1
+    points_pad, qp = _fused_pad(index, q_size=q_size, c=c,
+                                q_start_max=(n_batches - 1) * q_size)
+
+    def finish(run):
+        """Drain one batch: blocks on ITS buffers only, so the next batch's
+        kernel (already dispatched, JAX async) overlaps the transfer --
+        the paper's SV-A compute/copy overlap, kept on the fused path."""
+        q_start, ws, hits, counts, base = run
+        if emit == "host":
+            pairs = _emit_from_hits_host(
+                order_np, hits, ws, q_start, npts, unicomp)
+            assert pairs.shape[0] == mult * int(counts.sum(dtype=jnp.int64))
+            return pairs
+        ordered = mult * int(counts.sum(dtype=jnp.int64))
+        capacity = max(ordered if n_batches == 1 else _next_pow2(ordered), 1)
+        keys, vals, cnt = _emit_from_hits(
+            index, hits, counts, base, ws, jnp.asarray(q_start, jnp.int32),
+            c=c, tq=_FUSED_TQ, unicomp=unicomp, capacity=capacity)
+        assert int(cnt) == ordered, (int(cnt), ordered)
+        return np.stack(
+            [np.asarray(keys)[:ordered], np.asarray(vals)[:ordered]], axis=1)
+
+    chunks = []
+    prev = None
+    for b in range(n_batches):
+        q_start = b * q_size
+        ws, _, hits, counts, base = _fused_batch_run(
+            index, points_pad, deltas, is_zero, q_start, qp=qp,
+            q_size=q_size, c=c, unicomp=unicomp, keep_hits=True,
+            method=method)
+        if prev is not None:
+            chunks.append(finish(prev))
+        prev = (q_start, ws, hits, counts, base)
+    if prev is not None:
+        chunks.append(finish(prev))
+    out = (np.concatenate(chunks, axis=0) if chunks
+           else np.empty((0, 2), np.int32))
+    if sort_result:
+        out = out[np.lexsort((out[:, 1], out[:, 0]))]
+    return out
+
+
+def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
+                           query_batch: Optional[int] = None,
+                           method: Optional[str] = None) -> JoinStats:
+    """Count-only fused sweep (keep_hits=False: no O(n_off*Q*C) buffer)."""
+    deltas, is_zero = _offset_tables(index, unicomp)
+    c = _round_up(max(int(index.max_per_cell), 1), 8)
+    npts = index.num_points
+    q_size = int(query_batch) if query_batch else npts
+    mult = 2 if unicomp else 1
+    points_pad, qp = _fused_pad(index, q_size=q_size, c=c,
+                                q_start_max=((npts - 1) // q_size) * q_size)
+    total = cells = cands = 0
+    for q_start in range(0, npts, q_size):
+        _, wc, _, counts, _ = _fused_batch_run(
+            index, points_pad, deltas, is_zero, q_start, qp=qp,
+            q_size=q_size, c=c, unicomp=unicomp, keep_hits=False,
+            method=method)
+        total += mult * int(counts.sum(dtype=jnp.int64))
+        cells += int((wc > 0).sum())
+        cands += int(wc.sum(dtype=jnp.int64))
+    return JoinStats(
+        total_pairs=total,
+        cells_visited=cells,
+        candidates_checked=cands,
+        offsets=int(deltas.shape[0]),
+    )
+
+
 @partial(
     jax.jit,
     static_argnames=("cap_q", "max_per_cell", "unicomp", "distance_impl"),
@@ -274,7 +518,8 @@ def _count_compact(
     overflow is possible. The o=0 (own cell) pass stays dense -- every query
     is live there.
     """
-    hits_fn = _get_distance_impl(distance_impl)
+    fused = distance_impl == "fused"
+    hits_fn = None if fused else _get_distance_impl(distance_impl)
     eps = index.eps
     npts = index.num_points
 
@@ -296,8 +541,16 @@ def _count_compact(
         cand_pos = jnp.minimum(start[:, None] + sl[None, :], npts - 1)
         valid = sl[None, :] < count[:, None]
         q = index.points_sorted[q_pos]
-        cand = index.points_sorted[cand_pos]
-        hits = hits_fn(q, cand, valid, eps)
+        if fused:
+            # gather-free refine: candidate POSITIONS go in, the per-dim
+            # coordinate reads stay inside the op (kernels/fused_join.py)
+            from repro.kernels.ops import fused_window_hits
+
+            hits = fused_window_hits(index.points_sorted, q, cand_pos,
+                                     valid, eps)
+        else:
+            cand = index.points_sorted[cand_pos]
+            hits = hits_fn(q, cand, valid, eps)
         if unicomp:
             n = 2 * hits.sum()
         else:
@@ -340,10 +593,20 @@ def self_join_count_compact(
     deltas, is_zero = _offset_tables(index, unicomp)
     cap_q = _round_up(compact_cap(index, unicomp), 128)
     # o = 0 dense pass (every query is live in its own cell)
-    t0, _, k0 = _count_batch(
-        index, deltas[:1], is_zero[:1], jnp.asarray(0, jnp.int32),
-        q_size=index.num_points, max_per_cell=max_per_cell, unicomp=unicomp,
-        distance_impl=distance_impl)
+    if distance_impl == "fused":
+        points_pad, qp = _fused_pad(
+            index, q_size=index.num_points, c=max_per_cell)
+        _, wc0, _, counts0, _ = _fused_batch_run(
+            index, points_pad, deltas[:1], is_zero[:1], 0, qp=qp,
+            q_size=index.num_points, c=max_per_cell, unicomp=unicomp,
+            keep_hits=False)
+        t0 = (2 if unicomp else 1) * int(counts0.sum(dtype=jnp.int64))
+        k0 = int(wc0.sum(dtype=jnp.int64))
+    else:
+        t0, _, k0 = _count_batch(
+            index, deltas[:1], is_zero[:1], jnp.asarray(0, jnp.int32),
+            q_size=index.num_points, max_per_cell=max_per_cell,
+            unicomp=unicomp, distance_impl=distance_impl)
     tn, slots = _count_compact(
         index, deltas[1:], cap_q=min(cap_q, index.num_points),
         max_per_cell=max_per_cell, unicomp=unicomp,
@@ -367,6 +630,9 @@ def self_join_count(
 ) -> JoinStats:
     """Total ordered-pair count + work counters (no materialized result)."""
     index = _resolve_index(points, eps, index)
+    if distance_impl == "fused":
+        return _self_join_count_fused(
+            index, unicomp=unicomp, query_batch=query_batch)
     npts = index.num_points
     deltas, is_zero = _offset_tables(index, unicomp)
     max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
@@ -405,11 +671,15 @@ def self_join(
 ):
     """Single-batch self-join. Returns (pairs (K,2) int32 np.ndarray).
 
-    Two-phase: exact count, then fill with exactly-sized capacity. For the
+    Two-phase: exact count, then fill with exactly-sized capacity
+    ('jnp'/'pallas'); single-pass count -> fill for 'fused'. For the
     incremental / overlapped execution the paper uses, see
     ``self_join_batched``.
     """
     index = _resolve_index(points, eps, index)
+    if distance_impl == "fused":
+        return _self_join_fused(
+            index, unicomp=unicomp, sort_result=sort_result)
     stats = self_join_count(
         points, eps, unicomp=unicomp, index=index, distance_impl=distance_impl
     )
@@ -453,6 +723,10 @@ def self_join_batched(
     larger than device memory complete (paper Fig. 1 regime).
     """
     index = _resolve_index(points, eps, index)
+    if distance_impl == "fused":
+        return _self_join_fused(
+            index, unicomp=unicomp, sort_result=sort_result,
+            n_batches=n_batches)
     npts = index.num_points
     n_batches = max(int(n_batches), 1)
     q_size = -(-npts // n_batches)  # ceil

@@ -2,9 +2,23 @@
 
 distance_tile.py -- brute-force / refine tile (MXU formulation), count+hits
 cell_join.py     -- per-cell gathered-candidate refine (VPU formulation)
+fused_join.py    -- fused gather-refine sweep (scalar-prefetch windows,
+                    in-kernel HBM->VMEM gather, count + fill slot scan)
 ops.py           -- jit'd wrappers (interpret on CPU, Mosaic on TPU)
 ref.py           -- pure-jnp oracles (tests assert allclose against these)
 """
-from repro.kernels.ops import cell_join_hits, distance_tile_counts, distance_tile_hits
+from repro.kernels.ops import (
+    cell_join_hits,
+    distance_tile_counts,
+    distance_tile_hits,
+    fused_join_hits,
+    fused_window_hits,
+)
 
-__all__ = ["cell_join_hits", "distance_tile_counts", "distance_tile_hits"]
+__all__ = [
+    "cell_join_hits",
+    "distance_tile_counts",
+    "distance_tile_hits",
+    "fused_join_hits",
+    "fused_window_hits",
+]

@@ -1,0 +1,284 @@
+"""Fused gather-refine Pallas TPU kernel (DESIGN.md S4).
+
+The unfused offset sweep (core/selfjoin.py history, kernels/cell_join.py)
+materializes a ``(B, C, n)`` gathered-candidate tensor in HBM per stencil
+offset and then evaluates distances over it -- the dominant cost is HBM
+traffic the paper's shared-memory refine never pays. This kernel removes the
+intermediate: the *positions* of each query's candidate window (``win_start``
+/ ``win_count`` from ``core.grid.window_descriptors``) arrive via scalar
+prefetch (``pltpu.PrefetchScalarGridSpec``), and the kernel performs the
+HBM->VMEM candidate gather itself with a dynamic slice of ``points_sorted``,
+immediately consuming the window for the distance + epsilon threshold. The
+candidate coordinates live only in VMEM.
+
+One ``pallas_call`` sweeps the whole stencil: the grid is
+
+    (query tiles, stencil offsets)       -- offsets innermost
+
+so the query tile block (index map depends on the tile index only) stays
+VMEM-resident across all offsets of the sweep -- the locality
+kernels/cell_join.py's docstring promises but the per-offset dispatch of the
+unfused path could not deliver.
+
+Per grid step the kernel fuses, per query row:
+
+    gather window -> squared distance -> eps threshold -> UNICOMP/self mask
+    -> per-query hit count (accumulated across offsets)
+
+and on the final offset computes the per-tile exclusive scan of the hit
+counts (``slot_base``) -- the slot assignment the fill phase uses, so count
+and fill share ONE distance evaluation per candidate: the driver
+(core/selfjoin.py) sizes the result buffer from ``counts`` and scatters pairs
+from the returned ``hits`` mask without ever recomputing a distance.
+
+Outputs (for a query batch of Q_pad rows, C-slot windows, n_off offsets):
+
+    hits      (n_off, Q_pad, C) int8 -- fully masked epsilon-hits
+    counts    (Q_pad,)          int32 -- per-query hit totals over all offsets
+    slot_base (Q_pad,)          int32 -- per-tile exclusive scan of counts
+
+A ``reference`` lowering with identical semantics runs on backends without
+Mosaic (this container): it evaluates the same windows dimension-by-dimension
+(``(Q, C)`` gathers per coordinate, accumulated in place), so even the
+reference path never materializes a ``(B, C, n)`` candidate tensor. The
+Pallas kernel is validated against it in tests/test_fused_join.py.
+
+Hardware adaptation notes (honest limits of this port):
+  * each row's window is fetched with an explicit ``pltpu.make_async_copy``
+    (HBM -> VMEM scratch) inside a ``fori_loop``, the Mosaic-lowerable form;
+    a production build would double-buffer the row DMAs (pallas_guide.md
+    "Double Buffering"). Off-TPU the copy runs through the interpreter.
+  * scalar-prefetch arrays are (n_off, Q_pad) int32; at serving scale these
+    are sharded with the query batch (launch/mesh.py 'slab' axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NP_PAD = 8     # lane padding of the coordinate axis (matches cell_join.py)
+TQ_DEFAULT = 128  # query tile rows
+
+
+def pad_points(points_sorted: jax.Array, tail: int) -> jax.Array:
+    """(N, n) -> (N + tail, NP_PAD) zero-padded copy for in-kernel gathers.
+
+    ``tail`` >= C guarantees every C-slot window read is in bounds
+    (win_start + C <= N + tail, see grid.window_descriptors); zero pad rows
+    are never hits because their window slots are masked by win_count.
+    """
+    n = points_sorted.shape[1]
+    return jnp.pad(points_sorted, ((0, tail), (0, max(NP_PAD - n, 0))))
+
+
+def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool):
+    """UNICOMP triangle / full-stencil self mask (same rule as the drivers)."""
+    if unicomp:
+        return hit & jnp.where(zero != 0, cand_pos > q_pos, True)
+    return hit & (cand_pos != q_pos)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(ws_ref, wc_ref, iz_ref, meta_ref, eps2_ref, q_ref, pts_ref,
+                  hits_ref, counts_ref, base_ref, win_ref, sem_ref,
+                  *, c, tq, unicomp):
+    i = pl.program_id(0)           # query tile
+    j = pl.program_id(1)           # stencil offset (innermost: q tile resident)
+    n_off = pl.num_programs(1)
+    q_start = meta_ref[0]
+    eps2 = eps2_ref[0, 0]
+    zero = iz_ref[j]
+
+    @pl.when(j == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    def row(r, _):
+        qg = i * tq + r                       # row in the query batch
+        q_pos = q_start + qg                  # global sorted position
+        start = ws_ref[j, qg]
+        cnt = wc_ref[j, qg]
+        # The fused gather: candidate window HBM->VMEM scratch via explicit
+        # DMA (ANY-space refs are not directly loadable under Mosaic),
+        # consumed immediately.
+        dma = pltpu.make_async_copy(
+            pts_ref.at[pl.ds(start, c), :], win_ref, sem_ref)
+        dma.start()
+        dma.wait()
+        window = win_ref[...]                             # (C, NP)
+        qrow = q_ref[pl.ds(r, 1), :]                      # (1, NP)
+        d = window - qrow
+        d2 = jnp.sum(d * d, axis=-1)                      # (C,)
+        slots = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
+        cand_pos = start + slots
+        hit = (d2 <= eps2) & (slots < cnt)
+        hit = _mask_hits(hit, cand_pos, q_pos, zero, unicomp)
+        hits_ref[0, r, :] = hit.astype(jnp.int8)
+        counts_ref[r, 0] = counts_ref[r, 0] + jnp.sum(hit).astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, tq, row, 0)
+
+    @pl.when(j == n_off - 1)
+    def _scan():
+        # In-kernel exclusive scan: per-tile fill slot assignment.
+        ctile = counts_ref[...]
+        base_ref[...] = jnp.cumsum(ctile, axis=0) - ctile
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "tq", "unicomp", "keep_hits", "interpret"))
+def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
+                            is_zero, meta, eps2, *, c, tq, unicomp,
+                            keep_hits=True, interpret=True):
+    n_off, qp = win_start.shape
+    if keep_hits:
+        hits_shape, hits_map = (n_off, qp, c), (lambda i, j, *_: (j, i, 0))
+    else:
+        # count-only launch: one revisited (1, tq, c) block per tile serves
+        # as scratch, so no O(n_off * Q * C) buffer is ever allocated.
+        hits_shape, hits_map = (1, qp, c), (lambda i, j, *_: (0, i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(qp // tq, n_off),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, *_: (0, 0)),
+            pl.BlockSpec((tq, NP_PAD), lambda i, j, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, c), hits_map),
+            pl.BlockSpec((tq, 1), lambda i, j, *_: (i, 0)),
+            pl.BlockSpec((tq, 1), lambda i, j, *_: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((c, NP_PAD), points_pad.dtype),  # DMA'd window
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    hits, counts, base = pl.pallas_call(
+        functools.partial(_fused_kernel, c=c, tq=tq, unicomp=unicomp),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(hits_shape, jnp.int8),
+            jax.ShapeDtypeStruct((qp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((qp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(win_start, win_count, is_zero, meta, eps2, q_batch, points_pad)
+    return hits, counts[:, 0], base[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Reference lowering (identical semantics, no Mosaic required)
+# ---------------------------------------------------------------------------
+
+def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
+                 c, n_real, unicomp):
+    """Masked hits of every query against one offset's windows.
+
+    Distances accumulate dimension-by-dimension over (Q, C) column gathers,
+    so no (Q, C, n) candidate tensor exists on this path either.
+    """
+    qp = ws.shape[0]
+    slots = jnp.arange(c, dtype=jnp.int32)
+    cand_pos = ws[:, None] + slots[None, :]               # (Q, C)
+    d2 = jnp.zeros((qp, c), points_pad.dtype)
+    for dim in range(n_real):
+        cd = jnp.take(points_pad[:, dim], cand_pos)
+        d2 = d2 + (q_batch[:, dim][:, None] - cd) ** 2
+    hit = (d2 <= eps2) & (slots[None, :] < wc[:, None])
+    return _mask_hits(hit, cand_pos, q_pos[:, None], zero, unicomp)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "keep_hits"))
+def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
+                               is_zero, meta, eps2, *, c, tq, n_real,
+                               unicomp, keep_hits=True):
+    n_off, qp = win_start.shape
+    q_start = meta[0]
+    q_pos = q_start + jnp.arange(qp, dtype=jnp.int32)
+    eps2s = eps2[0, 0]
+
+    def per_offset(counts, xs):
+        ws, wc, zero = xs
+        hit = _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2s,
+                           c=c, n_real=n_real, unicomp=unicomp)
+        counts = counts + hit.sum(axis=1, dtype=jnp.int32)
+        out = hit.astype(jnp.int8) if keep_hits else jnp.zeros((), jnp.int8)
+        return counts, out
+
+    counts0 = jnp.zeros((qp,), jnp.int32)
+    counts, hits = jax.lax.scan(
+        per_offset, counts0, (win_start, win_count, is_zero))
+    if not keep_hits:
+        hits = jnp.zeros((1, qp, c), jnp.int8)
+    ctile = counts.reshape(-1, tq)
+    base = (jnp.cumsum(ctile, axis=1) - ctile).reshape(-1)
+    return hits, counts, base
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
+                    q_start, eps, *, c, n_real, unicomp,
+                    tq=TQ_DEFAULT, keep_hits=True,
+                    method=None, interpret=True):
+    """Fused gather-refine sweep over all stencil offsets in one launch.
+
+    Args:
+      points_pad: (N + tail, NP_PAD) ``pad_points`` output, tail >= c.
+      q_batch:    (Q_pad, NP_PAD) contiguous query slice of ``points_pad``
+                  starting at sorted position ``q_start``; Q_pad % tq == 0.
+      win_start / win_count: (n_off, Q_pad) int32 from
+                  ``grid.window_descriptors`` (count 0 for padding queries).
+      is_zero:    (n_off,) int32, 1 for the o = 0 offset (UNICOMP triangle).
+      q_start:    scalar int32, batch origin in sorted order.
+      eps:        scalar threshold; hits are d^2 <= eps^2.
+      c:          static window capacity (max_per_cell rounded up).
+      n_real:     static true dimensionality (reference path skips pad lanes).
+      unicomp:    static; triangle rule on o = 0 vs. full-stencil self mask.
+      keep_hits:  static; False = count-only (no O(n_off*Q*C) hits buffer).
+      method:     'kernel' | 'reference' | None (auto: kernel on TPU).
+
+    Returns (hits, counts, slot_base); hits is (1, Q_pad, c) scratch when
+    ``keep_hits`` is False.
+    """
+    if method is None:
+        method = "kernel" if jax.default_backend() == "tpu" else "reference"
+    meta = jnp.reshape(jnp.asarray(q_start, jnp.int32), (1,))
+    eps2 = jnp.reshape(jnp.asarray(eps, points_pad.dtype) ** 2, (1, 1))
+    if method == "kernel":
+        return _fused_join_hits_pallas(
+            points_pad, q_batch, win_start, win_count, is_zero, meta, eps2,
+            c=c, tq=tq, unicomp=unicomp, keep_hits=keep_hits,
+            interpret=interpret)
+    if method == "reference":
+        return _fused_join_hits_reference(
+            points_pad, q_batch, win_start, win_count, is_zero, meta, eps2,
+            c=c, tq=tq, n_real=n_real, unicomp=unicomp, keep_hits=keep_hits)
+    raise ValueError(f"unknown fused_join method {method!r}")
+
+
+def fused_window_hits(points_sorted, q, cand_pos, valid, eps):
+    """Positional drop-in for selfjoin._distance_hits_jnp without the gather.
+
+    (B, n) queries x (B, C) candidate *positions* -> (B, C) bool hits; the
+    compacted sweep (selfjoin._count_compact) uses this so distance_impl=
+    'fused' never materializes the (B, C, n) candidate tensor there either.
+    """
+    d2 = jnp.zeros(cand_pos.shape, q.dtype)
+    for dim in range(q.shape[1]):
+        cd = jnp.take(points_sorted[:, dim], cand_pos)
+        d2 = d2 + (q[:, dim][:, None] - cd) ** 2
+    return (d2 <= eps * eps) & valid

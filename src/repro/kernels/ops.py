@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import cell_join as _cell_join
 from repro.kernels import distance_tile as _distance_tile
+from repro.kernels import fused_join as _fused_join
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -45,4 +46,29 @@ def cell_join_hits(q, cand, valid, eps):
     dt = _kernel_dtype(q.dtype)
     return _cell_join.cell_join_hits(
         q.astype(dt), cand.astype(dt), valid, eps, interpret=_INTERPRET
+    )
+
+
+def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
+                    q_start, eps, *, c, n_real, unicomp,
+                    tq=_fused_join.TQ_DEFAULT, keep_hits=True, method=None):
+    """Fused gather-refine sweep (all offsets, one launch) -> hits/counts.
+
+    method=None dispatches the Mosaic kernel on TPU and the identical
+    reference lowering elsewhere; tests force method='kernel' to exercise
+    the Pallas path through the interpreter.
+    """
+    dt = _kernel_dtype(points_pad.dtype)
+    return _fused_join.fused_join_hits(
+        points_pad.astype(dt), q_batch.astype(dt), win_start, win_count,
+        is_zero, q_start, eps, c=c, n_real=n_real, unicomp=unicomp, tq=tq,
+        keep_hits=keep_hits, method=method, interpret=_INTERPRET,
+    )
+
+
+def fused_window_hits(points_sorted, q, cand_pos, valid, eps):
+    """Gather-free refine for the compacted sweep: positions, not coords."""
+    dt = _kernel_dtype(q.dtype)
+    return _fused_join.fused_window_hits(
+        points_sorted.astype(dt), q.astype(dt), cand_pos, valid, eps
     )

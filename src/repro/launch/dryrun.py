@@ -151,6 +151,13 @@ def lower_lm_cell(arch: str, cell: ShapeCell, mesh, cfg=None):
 # The full-depth compile (stage A) stays as the shardability/memory proof.
 # ---------------------------------------------------------------------------
 
+def _cost_dict(cost) -> dict:
+    """Normalize cost_analysis(): dict on current jax, [dict] on 0.4.x."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
 def _pattern_len(cfg):
     pat = 1
     if cfg.slstm_every:
@@ -186,7 +193,7 @@ def _lower_probe(cfg, cell: ShapeCell):
             lambda: model.init_caches(cell.global_batch, cell.seq_len))
         tshape = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
         lowered = jax.jit(model.decode_step).lower(pshapes, tshape, cshapes)
-    cost = lowered.cost_analysis() or {}
+    cost = _cost_dict(lowered.cost_analysis())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0))}
 
@@ -219,7 +226,7 @@ def _coll_counts(lowered):
     for c in colls:
         counts[_coll_key(dataclasses.asdict(c))] = counts.get(
             _coll_key(dataclasses.asdict(c)), 0) + 1
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled.cost_analysis())
     fused = {"flops": float(cost.get("flops", 0.0)),
              "bytes": float(cost.get("bytes accessed", 0.0))}
     return counts, fused
@@ -338,8 +345,7 @@ def analyze(lowered, cfg, cell, mesh, *, compile_s):
     except Exception as e:  # CPU backend may not implement it
         mem_info = {"error": str(e)}
     try:
-        cost = compiled.cost_analysis()
-        cost = dict(cost) if cost else {}
+        cost = _cost_dict(compiled.cost_analysis())
     except Exception as e:
         cost = {"error": str(e)}
     chips = mesh.devices.size

@@ -15,12 +15,24 @@ Self-join:    the paper's workload wants a 1-D spatial slab axis x an
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types (Auto/Explicit sharding modes)
+    from jax.sharding import AxisType
+except ImportError:  # older jax (e.g. 0.4.x): every axis is Auto already
+    AxisType = None
 
 
 def _mk(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_compat(shape, axes):
+    """Version-portable mesh constructor (tests and subprocess drivers use
+    this instead of touching jax.sharding.AxisType directly)."""
+    return _mk(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

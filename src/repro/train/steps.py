@@ -83,7 +83,9 @@ def make_train_step(model, opt_cfg: AdamWConfig, *, compress_pods: bool = False,
         pspecs = jax.tree.map(lambda _: P(), params)
         espisos = jax.tree.map(lambda _: P(), errors)
         batch_specs = jax.tree.map(lambda _: P("pod"), batch)
-        loss, aux, grads, new_errors = jax.shard_map(
+        from repro.compat import shard_map
+
+        loss, aux, grads, new_errors = shard_map(
             per_pod, mesh=mesh,
             in_specs=(pspecs, batch_specs, espisos),
             out_specs=(P(), jax.tree.map(lambda _: P(), aux_struct(model)),

@@ -74,9 +74,10 @@ def test_elastic_restore_subprocess(tmp_path):
     code = textwrap.dedent(f"""
         import jax, numpy as np
         import jax.numpy as jnp
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ckpt import restore_checkpoint
-        mesh = jax.make_mesh((4,), ('data',), axis_types=(AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4,), ('data',))
         like = {{"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}}
         got = restore_checkpoint({str(tmp_path)!r}, 7, like, mesh=mesh,
                                  specs={{"w": P('data', None)}})

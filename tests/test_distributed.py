@@ -15,6 +15,10 @@ import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# every test spawns an 8-placeholder-device subprocess and compiles
+# SPMD programs -- minutes of wall time; excluded from tier-1 default
+pytestmark = pytest.mark.slow
+
 
 def run_sub(code: str) -> str:
     env = dict(os.environ)
@@ -31,15 +35,14 @@ def test_distributed_count_matches_brute():
         import numpy as np, jax
         from repro.core.distributed import distributed_self_join_count
         from repro.core.brute import brute_force_count
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh_compat
         rng = np.random.default_rng(1)
         for n, eps in ((2, 0.8), (3, 1.0)):
             pts = rng.uniform(0, 10, size=(1500, n))
             bf = brute_force_count(pts, eps)
-            m1 = jax.make_mesh((8,), ('slab',), axis_types=(AxisType.Auto,))
+            m1 = make_mesh_compat((8,), ('slab',))
             c1 = distributed_self_join_count(pts, eps, m1, unicomp=True)
-            m2 = jax.make_mesh((4, 2), ('slab', 'model'),
-                               axis_types=(AxisType.Auto,) * 2)
+            m2 = make_mesh_compat((4, 2), ('slab', 'model'))
             c2 = distributed_self_join_count(pts, eps, m2, unicomp=True,
                                              model_axis='model')
             c3 = distributed_self_join_count(pts, eps, m2, unicomp=False,
@@ -57,7 +60,7 @@ def test_distributed_skewed_data_balanced():
         from repro.core.distributed import (distributed_self_join_count,
                                             partition_points_host)
         from repro.core.brute import brute_force_count
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh_compat
         rng = np.random.default_rng(2)
         # 90% of points clustered in 5% of the range
         a = rng.uniform(0, 0.5, size=(1800, 2))
@@ -66,7 +69,7 @@ def test_distributed_skewed_data_balanced():
         coords, gids, width = partition_points_host(pts, 8)
         counts = (gids >= 0).sum(axis=1)
         assert counts.max() - counts.min() <= 1, counts
-        m = jax.make_mesh((8,), ('slab',), axis_types=(AxisType.Auto,))
+        m = make_mesh_compat((8,), ('slab',))
         got = distributed_self_join_count(pts, 0.2, m)
         assert got == brute_force_count(pts, 0.2)
         print('OK')
@@ -77,13 +80,13 @@ def test_distributed_skewed_data_balanced():
 def test_halo_overflow_detected():
     out = run_sub(textwrap.dedent("""
         import numpy as np, jax
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh_compat
         from repro.core.distributed import (DistJoinConfig,
                                             make_distributed_count_step,
                                             partition_points_host)
         rng = np.random.default_rng(3)
         pts = rng.uniform(0, 1.0, size=(800, 2))  # eps >> slab width
-        mesh = jax.make_mesh((8,), ('slab',), axis_types=(AxisType.Auto,))
+        mesh = make_mesh_compat((8,), ('slab',))
         coords, gids, _ = partition_points_host(pts, 8)
         cfg = DistJoinConfig(pts_per_device=coords.shape[1], n_dims=2,
                              halo_capacity=4, max_per_cell=64,
@@ -104,15 +107,15 @@ def test_compressed_train_step_end_to_end():
     loss decreases and tracks the uncompressed step closely."""
     out = run_sub(textwrap.dedent("""
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh_compat
         from repro.configs import get_config
         from repro.models.lm import LMModel
         from repro.train.optimizer import AdamWConfig, adamw_init, opt_state_specs
         from repro.train.steps import make_train_step
         from repro.train.compression import init_error_state
 
-        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = make_mesh_compat((2, 2, 2), ('pod', 'data', 'model'))
         cfg = get_config('qwen1.5-0.5b', reduced=True)
         rng = np.random.default_rng(0)
         batch = {'tokens': jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32),
@@ -149,10 +152,10 @@ def test_compressed_crosspod_grads():
     carries the residual; exact for pod-identical gradients."""
     out = run_sub(textwrap.dedent("""
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh_compat
         from repro.train.compression import compressed_psum_mean
-        mesh = jax.make_mesh((2, 4), ('pod', 'data'),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((2, 4), ('pod', 'data'))
         rng = np.random.default_rng(0)
         g_global = rng.normal(size=(2, 64)).astype(np.float32)  # per-pod rows
 
@@ -160,10 +163,11 @@ def test_compressed_crosspod_grads():
             m, ne = compressed_psum_mean({'w': g}, {'w': e}, 'pod', 2)
             return m['w'], ne['w']
 
-        sm = jax.shard_map(f, mesh=mesh,
-                           in_specs=(P('pod'), P('pod')),
-                           out_specs=(P(), P('pod')),
-                           axis_names={'pod'}, check_vma=False)
+        from repro.compat import shard_map
+        sm = shard_map(f, mesh=mesh,
+                       in_specs=(P('pod'), P('pod')),
+                       out_specs=(P(), P('pod')),
+                       axis_names={'pod'}, check_vma=False)
         g = jax.device_put(g_global.reshape(-1),
                            NamedSharding(mesh, P('pod')))
         e = jnp.zeros_like(g)

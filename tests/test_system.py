@@ -10,6 +10,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
+@pytest.mark.slow
 def test_train_driver_end_to_end(tmp_path):
     from repro.launch.train import main
 
@@ -27,6 +28,7 @@ def test_train_driver_end_to_end(tmp_path):
     assert np.isfinite(loss2)
 
 
+@pytest.mark.slow
 def test_train_driver_with_dedup():
     from repro.launch.train import main
 
@@ -68,6 +70,7 @@ def test_registry_covers_assignment():
         assert r.param_count() < f.param_count() / 100
 
 
+@pytest.mark.slow
 def test_dryrun_cell_subprocess():
     """One real dry-run cell end to end (lower+compile on a 512-device
     placeholder topology + probes) in a fresh interpreter."""
@@ -81,6 +84,7 @@ def test_dryrun_cell_subprocess():
     assert "OK" in out.stdout and "bottleneck=" in out.stdout
 
 
+@pytest.mark.slow
 def test_examples_quickstart():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
