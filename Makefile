@@ -1,0 +1,18 @@
+# Developer entry points. `make verify` is the pre-merge gate: tier-1
+# tests plus the serving-path no-retrace smoke (scripts/ci.sh).
+.PHONY: verify test serve-smoke bench bench-serve
+
+verify:
+	bash scripts/ci.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+serve-smoke:
+	PYTHONPATH=src python -m repro.launch.serve --arch selfjoin --requests 4
+
+bench:
+	PYTHONPATH=src python benchmarks/bench_selfjoin.py
+
+bench-serve:
+	PYTHONPATH=src python benchmarks/bench_selfjoin.py --mode serve

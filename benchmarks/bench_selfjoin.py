@@ -1,12 +1,22 @@
-"""Self-join perf trajectory: count/fill across distance_impl variants.
+"""Self-join perf trajectory: count/fill across distance_impl variants,
+plus the serving path (--mode serve).
 
     PYTHONPATH=src python benchmarks/bench_selfjoin.py [--out BENCH_selfjoin.json]
+    PYTHONPATH=src python benchmarks/bench_selfjoin.py --mode serve
 
-Times ``self_join_count`` (count) and ``self_join`` (count+fill, unsorted --
-the paper reports the result sort separately) for n in {2, 4, 6} on uniform
-and clustered datasets, across distance_impl in {jnp, pallas, fused}, with
-the grid index prebuilt (index construction is shared by every impl and
-benchmarked in benchmarks/joins.py).
+--mode impl (default) times ``self_join_count`` (count) and ``self_join``
+(count+fill, unsorted -- the paper reports the result sort separately) for
+n in {2, 4, 6} on uniform and clustered datasets, across distance_impl in
+{jnp, pallas, fused}, with the grid index prebuilt (index construction is
+shared by every impl and benchmarked in benchmarks/joins.py).
+
+--mode serve times the external-query serving path (DESIGN.md S5) on the
+default serve workload: steady-state (post-warmup) request latency
+percentiles and requests/sec of launch.serve.JoinService against the
+LEGACY pre-PR-2 path, kept verbatim here as ``legacy_range_query_retrace``
+-- a per-request ``@jax.jit`` closure that re-traces and recompiles on
+every call. The acceptance claim is steady-state p50 >= 5x better than
+the legacy path.
 
 On this CPU container the 'pallas' impl runs the cell_join kernel through
 the interpreter and the 'fused' impl runs the reference lowering of
@@ -15,8 +25,9 @@ absolute times are machine-local, the IMPL-vs-IMPL ratios are the claim
 (interpret-mode CPU timing as proxy, ISSUE 1). The headline acceptance
 number is fused-vs-jnp on the 2-D uniform 100k workload.
 
-Writes BENCH_selfjoin.json (repo root by default) -- the first point of the
-perf trajectory; later PRs append runs, EXPERIMENTS.md tracks the history.
+Writes/updates BENCH_selfjoin.json (repo root by default): each mode
+rewrites its own section and preserves the other's, so the file holds the
+full perf trajectory; EXPERIMENTS.md tracks the history.
 """
 from __future__ import annotations
 
@@ -69,20 +80,160 @@ def best_of(fn, trials: int) -> float:
     return best
 
 
+def legacy_range_query_retrace(index, queries, deltas, max_per_cell):
+    """The pre-PR-2 serving path, kept VERBATIM as the regression baseline.
+
+    The ``@jax.jit`` closure below is a new function object on every call,
+    so each request pays a fresh trace + compile before executing; it also
+    gathers the (Q, C, n) candidate tensor the fused path eliminates and
+    can only return counts. core/query_join.py replaced it; this copy
+    exists only so --mode serve can keep measuring what the fix is worth.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import grid as grid_lib
+    from repro.core.grid import neighbor_rank
+
+    queries = jnp.asarray(queries)
+
+    @jax.jit
+    def run(index, queries):
+        qcoords = grid_lib.cell_coords(queries, index.grid_min, index.eps)
+        qcoords = jnp.clip(qcoords, 1, index.dims - 2)
+        qkeys = grid_lib.linearize(qcoords, index.dims)
+        eps2 = index.eps * index.eps
+
+        def body(counts, delta):
+            nbr = neighbor_rank(index, qkeys + delta)
+            nbr_c = jnp.maximum(nbr, 0)
+            start = index.cell_start[nbr_c]
+            count = jnp.where(nbr >= 0, index.cell_count[nbr_c], 0)
+            slots = jnp.arange(max_per_cell, dtype=jnp.int32)
+            pos = jnp.minimum(start[:, None] + slots[None, :],
+                              index.num_points - 1)
+            valid = slots[None, :] < count[:, None]
+            cand = index.points_sorted[pos]
+            d2 = jnp.sum((queries[:, None, :] - cand) ** 2, axis=-1)
+            hits = (d2 <= eps2) & valid
+            return counts + hits.sum(axis=1, dtype=jnp.int32), None
+
+        counts0 = jnp.zeros((queries.shape[0],), jnp.int32)
+        counts, _ = jax.lax.scan(body, counts0, deltas)
+        return counts
+
+    return np.asarray(run(index, queries))
+
+
+def bench_serve(args):
+    """Steady-state serving vs. the legacy re-tracing path."""
+    from repro.core.grid import build_grid_host
+    from repro.core.query_join import bucket_rows
+    from repro.core.selfjoin import _offset_tables, _round_up
+    from repro.launch.serve import JoinService
+
+    rng = np.random.default_rng(args.seed)
+    pts = rng.uniform(0, 100, (args.serve_points, args.serve_dims))
+    eps = args.serve_eps
+    B = args.serve_batch
+    index = build_grid_host(pts, eps)
+    deltas, _ = _offset_tables(index, unicomp=False)
+    c = _round_up(max(int(index.max_per_cell), 1), 8)
+
+    # legacy path: EVERY request re-traces (that is the point being measured)
+    lat_legacy = []
+    legacy_counts = legacy_q = None
+    for r in range(max(args.serve_requests_legacy, 1)):
+        q = rng.uniform(0, 100, (B, args.serve_dims))
+        t0 = time.perf_counter()
+        counts = legacy_range_query_retrace(index, q, deltas, c)
+        lat_legacy.append(1000 * (time.perf_counter() - t0))
+        legacy_counts, legacy_q = counts, q
+
+    # service path: warm once, measure steady state
+    svc = JoinService(pts, eps, index=index)
+    svc.warmup(B)
+    svc.mark_steady()
+    for r in range(args.serve_requests):
+        q = rng.uniform(0, 100, (B, args.serve_dims))
+        svc.query(q)
+    # parity gate: the service must answer the legacy path's last request
+    # identically before its timings count
+    parity = svc.prepared.counts(legacy_q)
+    assert np.array_equal(parity, legacy_counts), "serve parity failure"
+    svc.assert_no_retrace()
+    p50, p99 = svc.percentiles()
+    p50_legacy = float(np.percentile(lat_legacy, 50))
+    entry = {
+        "workload": (f"uniform-{args.serve_dims}d serve, "
+                     f"{args.serve_points} pts indexed, "
+                     f"batch {B} external queries/request"),
+        "n_points": int(args.serve_points),
+        "n_dims": int(args.serve_dims),
+        "eps": float(eps),
+        "request_batch": int(B),
+        "legacy_retrace": {
+            "requests": len(lat_legacy),
+            "p50_ms": p50_legacy,
+            "p99_ms": float(np.percentile(lat_legacy, 99)),
+            "note": "per-request @jax.jit closure: trace+compile every call",
+        },
+        "service": {
+            "requests": svc.requests,
+            "p50_ms": p50,
+            "p99_ms": p99,
+            "requests_per_sec": svc.requests_per_sec(),
+            "bucket_rows": int(bucket_rows(B)),
+            "note": "JoinService steady state (post-warmup), counts-only "
+                    "requests; no retrace (asserted)",
+        },
+        "speedup_service_vs_legacy_p50": p50_legacy / p50,
+    }
+    print(f"[bench-serve] legacy p50 {p50_legacy:9.1f} ms  "
+          f"service p50 {p50:7.2f} ms  "
+          f"speedup {entry['speedup_service_vs_legacy_p50']:.1f}x  "
+          f"({svc.requests_per_sec():.1f} req/s steady)")
+    return entry
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_selfjoin.json"))
+    ap.add_argument("--mode", default="impl", choices=("impl", "serve"))
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--points-2d", type=int, default=100_000)
     ap.add_argument("--points-4d", type=int, default=20_000)
     ap.add_argument("--points-6d", type=int, default=10_000)
     ap.add_argument("--trials", type=int, default=3)
     ap.add_argument("--impls", default=",".join(IMPLS),
                     help="comma-separated subset of %s" % (IMPLS,))
+    # --mode serve: the default serve workload (launch/serve.py defaults)
+    ap.add_argument("--serve-points", type=int, default=20_000)
+    ap.add_argument("--serve-dims", type=int, default=4)
+    ap.add_argument("--serve-eps", type=float, default=2.0)
+    ap.add_argument("--serve-batch", type=int, default=256)
+    ap.add_argument("--serve-requests", type=int, default=32)
+    ap.add_argument("--serve-requests-legacy", type=int, default=6)
     args = ap.parse_args(argv)
     impls = tuple(args.impls.split(","))
+    out = os.path.abspath(args.out)
+    existing = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            existing = json.load(f)
 
     import jax
+
+    if args.mode == "serve":
+        entry = bench_serve(args)
+        payload = existing or {"bench": "selfjoin-distance-impl"}
+        payload["backend"] = jax.default_backend()
+        payload["jax"] = jax.__version__
+        payload["serve"] = entry
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[bench] wrote {out}")
+        return payload
 
     results = []
     for name, pts, eps in workloads(args):
@@ -141,7 +292,8 @@ def main(argv=None):
         },
         "results": results,
     }
-    out = os.path.abspath(args.out)
+    if "serve" in existing:   # each mode preserves the other's section
+        payload["serve"] = existing["serve"]
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     if headline is not None:

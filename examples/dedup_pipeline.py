@@ -1,27 +1,39 @@
-"""The paper's technique as a data-pipeline operator: near-duplicate removal.
+"""The paper's technique as a data-pipeline operator: near-duplicate removal,
+then the deduped corpus served as an index for incoming documents.
 
-Documents are sketched into a 4-D embedding (hashed bigram counts + random
-projection -- exactly the low-dimensionality regime the paper targets) and
-the distance-similarity self-join finds all near-duplicate pairs; union-find
-keeps one representative per duplicate cluster.
+Stage 1 (self-join): documents are sketched into a 6-D embedding (hashed
+bigram counts + random projection -- exactly the low-dimensionality regime
+the paper targets) and the distance-similarity self-join finds all
+near-duplicate pairs; union-find keeps one representative per duplicate
+cluster.
+
+Stage 2 (external-query join, DESIGN.md S5): the deduped corpus becomes the
+INDEXED set; a later batch of incoming documents is screened against it with
+``core.query_join.epsilon_join`` -- counts say which incoming docs duplicate
+the corpus, pairs say WHICH corpus doc each one duplicates -- without ever
+re-joining the corpus against itself. This is the index-once/query-many
+serving regime (launch/serve.py runs it as a persistent service).
 """
 import numpy as np
 
 from repro.data.dedup import dedup_batch, embed_ngrams
+from repro.core.query_join import epsilon_join
 from repro.core.selfjoin import self_join
 
 rng = np.random.default_rng(0)
+N_DIMS = 6     # sketch dimensionality (the paper's <= 6-D regime)
+EPS = 0.1      # near-dup radius: above 1-2 token edits, below distinct docs
 
 # a batch of 64 "documents": 48 unique + 8 exact dups + 8 near-dups
 unique = rng.integers(0, 5000, (48, 256))
 dups = unique[:8].copy()
 near = unique[8:16].copy()
-near[:, ::17] += 1          # light token noise
+near[:, ::128] += 1         # light token noise (2 of 256 tokens)
 batch = np.concatenate([unique, dups, near])
 
-emb = embed_ngrams(batch, n_dims=4)
-pairs = self_join(emb, 0.05, unicomp=True)
-keep = dedup_batch(batch, eps=0.05)
+emb = embed_ngrams(batch, n_dims=N_DIMS)
+pairs = self_join(emb, EPS, unicomp=True)
+keep = dedup_batch(batch, eps=EPS, n_dims=N_DIMS)
 
 print(f"documents           : {batch.shape[0]}")
 print(f"duplicate pairs     : {pairs.shape[0] // 2} (unordered)")
@@ -29,3 +41,23 @@ print(f"kept after dedup    : {int(keep.sum())}")
 assert keep.sum() == 48, keep.sum()
 assert keep[:48].all() and not keep[48:].any()
 print("dedup kept exactly the 48 unique documents")
+
+# --- stage 2: screen an incoming stream against the kept corpus ----------
+corpus = batch[keep]
+corpus_emb = embed_ngrams(corpus, n_dims=N_DIMS)
+incoming = np.concatenate([
+    unique[20:24],                      # 4 near-dups of corpus docs
+    rng.integers(0, 5000, (4, 256)),    # 4 genuinely new docs
+])
+incoming[:4, ::128] += 1                # light noise on the dup half
+res = epsilon_join(embed_ngrams(incoming, n_dims=N_DIMS), corpus_emb, EPS)
+is_dup = res.counts > 0
+print(f"incoming screened   : {incoming.shape[0]} "
+      f"({int(is_dup.sum())} duplicate the corpus)")
+for qi, doc_id in res.pairs:
+    print(f"  incoming[{qi}] duplicates corpus doc {doc_id}")
+assert is_dup[:4].all() and not is_dup[4:].any(), is_dup
+# the pairs name the exact corpus representatives (unique[20:24] kept
+# their original positions 20..23 in the deduped corpus)
+assert np.array_equal(res.pairs[:, 1], np.arange(20, 24)), res.pairs
+print("external-query join flagged exactly the 4 incoming duplicates")

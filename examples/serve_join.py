@@ -1,8 +1,13 @@
-"""Self-join serving: index once, answer batched epsilon-range requests.
+"""Epsilon-join serving: index once, answer batched external-query requests.
 
-The DBSCAN-style usage the paper cites (SII): the grid index is built once
-over the dataset; request batches of query points are answered with the
-bounded adjacent-cell search. Run:  python examples/serve_join.py
+The index-once/query-many regime (DESIGN.md S5): launch.serve.JoinService
+builds the grid index over the dataset at startup, warms the request
+bucket's executables off the request path, and answers every request batch
+of EXTERNAL query points through the fused query-join (core/query_join.py)
+at steady-state execution cost -- no per-request trace/compile (asserted;
+the driver fails if a steady-state request recompiles).
+
+Run:  python examples/serve_join.py
 """
 from repro.launch.serve import main
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI entry point (`make verify`): tier-1 tests + the serving-path smoke.
+#
+# The smoke drives the real serve driver end-to-end; JoinService's
+# no-retrace assertion (launch/serve.py) makes it a hard failure if any
+# steady-state request traces or compiles, so the serving path can never
+# silently regress to per-request compilation again (ISSUE 2).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "[ci] tier-1: pytest"
+python -m pytest -x -q
+
+echo "[ci] serve smoke (steady state must not retrace)"
+timeout 120 python -m repro.launch.serve --arch selfjoin --requests 4
+
+echo "[ci] OK"

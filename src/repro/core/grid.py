@@ -298,6 +298,56 @@ def window_descriptors(
     return win_start, win_count
 
 
+def external_window_descriptors(
+    index: GridIndex,
+    offsets: jax.Array,
+    queries: jax.Array,
+    q_limit: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Candidate windows for EXTERNAL query points (core/query_join.py).
+
+    ``window_descriptors`` derives each query's cell from its position in
+    ``points_sorted``; here the cell comes from the query's own coordinates
+    under the dataset's grid geometry, so ``queries`` may be ANY point set --
+    inside the indexed volume, outside it, or duplicated.
+
+    Adjacency is resolved in COORDINATE space, not linearized-key space:
+    ``target = cell_coords(q) + o`` per stencil offset ``o`` (the (n_off, n)
+    int64 offset vectors, not their linearized deltas), masked where any
+    dimension leaves [0, dims). This supersedes the historical
+    ``clip(qcoords, 1, dims - 2)`` clamp, which inverted (hi < lo) on grids
+    with < 3 cells in a dimension and silently redirected every query to
+    cell 0; exact bounds masking has no such degenerate case, and it also
+    prevents linearized keys of out-of-range coordinates from aliasing into
+    other real cells (a double-count hazard the key-space probe has when a
+    dimension has < 3 cells).
+
+    A query farther than eps outside the volume has out-of-range coords in
+    some dimension for every offset -> all probes masked -> zero candidates,
+    which is the exact answer. A query within eps of the volume has coords
+    in [0, dims), and its true neighbors' cells are covered by the masked
+    stencil (real points occupy the interior band by construction).
+
+    Returns (win_start, win_count), each (n_off, Q) int32, count 0 for
+    masked probes, absent cells, and query rows >= ``q_limit`` (tile
+    padding).
+    """
+    qcoords = cell_coords(queries, index.grid_min, index.eps)   # (Q, n)
+    dims = index.dims.astype(jnp.int64)
+    target = qcoords[None, :, :] + offsets[:, None, :]          # (n_off, Q, n)
+    in_grid = jnp.all((target >= 0) & (target < dims), axis=-1)
+    keys = jnp.where(in_grid, linearize(target, index.dims), PAD_KEY)
+    nbr = neighbor_rank(index, keys)                            # (n_off, Q)
+    live = nbr >= 0
+    if q_limit is not None:
+        q_ok = jnp.arange(queries.shape[0], dtype=jnp.int32) < q_limit
+        live = live & q_ok[None, :]
+    nbr_c = jnp.maximum(nbr, 0)
+    win_start = jnp.where(live, index.cell_start[nbr_c], 0).astype(jnp.int32)
+    win_count = jnp.where(live, index.cell_count[nbr_c], 0).astype(jnp.int32)
+    return win_start, win_count
+
+
 def neighbor_rank(index: GridIndex, query_keys: jax.Array) -> jax.Array:
     """Vectorized membership lookup in B: rank of each key, or -1 if absent.
 

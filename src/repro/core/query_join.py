@@ -1,0 +1,299 @@
+"""External-query epsilon joins against a prebuilt grid index (DESIGN.md S5).
+
+The paper's self-join is the symmetric case of the operation a similarity
+*service* actually runs: an index-once/query-many epsilon join, where the
+indexed set D is built once (paper SIV) and request batches of EXTERNAL
+query points -- not members of D, possibly outside its volume, possibly
+duplicated -- are answered against it (the regime of Gowanlock's Hybrid
+KNN-Join and GTS). This module generalizes the fused gather-refine path
+(kernels/fused_join.py) to that workload:
+
+  * window descriptors come from each query's OWN cell coordinates under
+    D's grid geometry (``grid.external_window_descriptors``: coordinate-
+    space bounds masking, full 3^n stencil -- no UNICOMP, external queries
+    have no self-pair or triangle rule), and
+  * the same single-pass count -> fill driver returns per-query neighbor
+    COUNTS and neighbor PAIRS from one distance evaluation per candidate.
+
+Serving without re-tracing (the bug this subsystem fixes): every jitted
+function here is MODULE-LEVEL, so XLA executables are cached by input
+shape, and request batches are padded to a small set of static bucket
+shapes (``bucket_rows``: tile multiples growing by powers of two), so a
+service sees O(log max_batch) compilations total -- not one per request,
+which is what the old ``@jax.jit``-closure-per-call ``range_query`` paid.
+``TRACE_EVENTS`` / ``executable_cache_stats`` make that property observable
+(asserted by launch/serve.py's smoke and tests/test_query_join.py).
+
+Typical use:
+
+    index = build_grid_host(points, eps)     # once
+    pj = prepare(index)                      # once: pads, offset tables
+    res = pj.join(queries)                   # per request: counts + pairs
+
+``epsilon_join(queries, points, eps)`` is the one-shot convenience wrapper;
+``core.selfjoin.range_query`` delegates here for backward compatibility.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grid as grid_lib
+from repro.core.grid import GridIndex, build_grid_host
+from repro.core.stencil import stencil_offsets
+
+_TQ = 128      # query tile rows (kernel grid unit; bucket shapes are multiples)
+_C_ALIGN = 8   # window capacity alignment (lane unit, matches selfjoin)
+# Device-emit scatter capacity floor: result buffers round up to powers of
+# two with this minimum, so a service compiles O(log max_result) emit
+# executables over its lifetime instead of one per small result size.
+_EMIT_CAP_MIN = 1024
+
+# Trace-time event counters: the body of a jitted function executes only
+# while TRACING, so these increments count compilations, not calls. The
+# serve smoke and the no-retrace tests snapshot this dict across requests.
+TRACE_EVENTS: collections.Counter = collections.Counter()
+
+
+def _bump(name: str) -> None:
+    TRACE_EVENTS[name] += 1
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def bucket_rows(n_queries: int) -> int:
+    """Static padded row count for a request of ``n_queries`` queries.
+
+    Tile-multiple buckets growing by powers of two (128, 256, 512, ...), so
+    a service compiles O(log max_batch) executables across all request
+    sizes instead of one per distinct size.
+    """
+    n = max(int(n_queries), 1)
+    return _TQ * _next_pow2(-(-n // _TQ))
+
+
+@jax.jit
+def _external_windows(index: GridIndex, offsets: jax.Array,
+                      queries_pad: jax.Array, q_limit: jax.Array):
+    """Jitted descriptor computation; cached by (n_off, Q_pad) shape."""
+    _bump("external_windows")
+    n = index.grid_min.shape[0]
+    return grid_lib.external_window_descriptors(
+        index, offsets, queries_pad[:, :n], q_limit)
+
+
+@partial(jax.jit, static_argnames=("c", "tq", "capacity"))
+def _emit_pairs_device(order, hits, counts, slot_base, win_start, *,
+                       c: int, tq: int, capacity: int):
+    """Device fill: scatter (query row, point id) pairs from the count
+    pass's hit set -- no distances, same single-pass discipline as
+    ``selfjoin._emit_from_hits`` minus the self-join masking. Query-major
+    row order (per query: offsets in sweep order, slots in window order),
+    identical to the host emit."""
+    _bump("emit_pairs_device")
+    n_off, qp, _ = hits.shape
+    npts = order.shape[0]
+    h = hits.astype(bool).transpose(1, 0, 2).reshape(qp, n_off * c)
+    slots = jnp.arange(c, dtype=jnp.int32)
+    cand = win_start[:, :, None] + slots[None, None, :]
+    cp = jnp.minimum(cand.transpose(1, 0, 2).reshape(qp, n_off * c), npts - 1)
+    rank = jnp.cumsum(h, axis=1) - 1              # within-query hit rank
+    tile_tot = counts.reshape(-1, tq).sum(axis=1).astype(jnp.int64)
+    tile_base = jnp.cumsum(tile_tot) - tile_tot
+    qbase = jnp.repeat(tile_base, tq) + slot_base.astype(jnp.int64)
+    pos = qbase[:, None] + rank
+    qid = jnp.broadcast_to(jnp.arange(qp, dtype=jnp.int32)[:, None], h.shape)
+    cid = order[cp]
+    keys = jnp.full((capacity,), -1, jnp.int32)
+    vals = jnp.full((capacity,), -1, jnp.int32)
+    idx = jnp.where(h, pos, capacity)
+    keys = keys.at[idx].set(qid, mode="drop")
+    vals = vals.at[idx].set(cid, mode="drop")
+    return keys, vals
+
+
+def _emit_pairs_host(order_np: np.ndarray, hits, win_start,
+                     npts: int) -> np.ndarray:
+    """Host fill: one ``np.nonzero`` compaction of the hit bitmap (default
+    off-TPU, same rationale as ``selfjoin._emit_from_hits_host``)."""
+    h = np.asarray(hits).astype(bool).transpose(1, 0, 2)   # (Q, n_off, C)
+    ws = np.asarray(win_start)                             # (n_off, Q)
+    q, off, s = np.nonzero(h)
+    cand = np.minimum(ws[off, q] + s, npts - 1)
+    return np.stack([q.astype(np.int32), order_np[cand]], axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryJoinResult:
+    """One request's answer: per-query neighbor counts and (optionally)
+    the neighbor pairs as (query row, original point id) int32 rows."""
+
+    counts: np.ndarray                 # (Q,) int32
+    pairs: Optional[np.ndarray]        # (K, 2) int32, or None
+    n_offsets: int                     # stencil cells probed per query
+    bucket_rows: int                   # static padded batch shape used
+    emit: Optional[str]                # 'host' | 'device' | None (counts-only)
+    candidates_checked: Optional[int]  # total live window slots (with_stats)
+
+    @property
+    def total(self) -> int:
+        return int(self.counts.sum())
+
+
+class PreparedJoin:
+    """A grid index prepared for serving: offset tables and the padded
+    points copy are built ONCE; every per-request computation dispatches
+    into module-level jitted functions cached per bucket shape."""
+
+    def __init__(self, index: GridIndex):
+        from repro.kernels.fused_join import pad_points
+
+        self.index = index
+        self.n_dims = index.n_dims
+        self.eps = float(index.eps)
+        self.c = _round_up(max(int(index.max_per_cell), 1), _C_ALIGN)
+        offs = stencil_offsets(self.n_dims, unicomp=False)   # full 3^n
+        self.n_offsets = offs.shape[0]
+        self.offsets = jnp.asarray(offs)                     # (n_off, n)
+        self.is_zero = jnp.zeros((self.n_offsets,), jnp.int32)  # unused mask
+        self.points_pad = pad_points(index.points_sorted, self.c)
+        self.order_np = np.asarray(index.order)
+        self.dtype = np.dtype(index.points_sorted.dtype)
+        self.q_start0 = jnp.zeros((), jnp.int32)
+
+    def _pad_queries(self, q: np.ndarray) -> tuple[jax.Array, int]:
+        from repro.kernels.fused_join import NP_PAD
+
+        qp = bucket_rows(q.shape[0])
+        q_pad = np.zeros((qp, NP_PAD), self.dtype)
+        q_pad[: q.shape[0], : self.n_dims] = q
+        return jnp.asarray(q_pad), qp
+
+    def join(self, queries, *, eps: Optional[float] = None,
+             return_pairs: bool = True, sort_pairs: bool = True,
+             emit: Optional[str] = None, method: Optional[str] = None,
+             with_stats: bool = False) -> QueryJoinResult:
+        """Epsilon join of a query batch against the prepared index.
+
+        ``eps`` defaults to the index's build epsilon and may be smaller
+        (the +/-1-cell stencil only covers the build radius; a larger
+        radius needs a rebuilt grid). Counts include an indexed point that
+        exactly coincides with a query (external queries have no self).
+        """
+        from repro.kernels import ops
+
+        q = np.asarray(queries, self.dtype)
+        if q.ndim != 2 or q.shape[1] != self.n_dims:
+            raise ValueError(f"queries must be (Q, {self.n_dims}), "
+                             f"got {q.shape}")
+        if eps is None:
+            eps = self.eps
+        elif eps > self.eps * (1 + 1e-12):
+            raise ValueError(
+                f"query eps {eps} exceeds index build eps {self.eps}; the "
+                f"adjacent-cell stencil only covers the build radius")
+        n_queries = q.shape[0]
+        q_dev, qp = self._pad_queries(q)
+        ws, wc = _external_windows(
+            self.index, self.offsets, q_dev,
+            jnp.asarray(n_queries, jnp.int32))
+        hits, counts, base = ops.fused_join_hits(
+            self.points_pad, q_dev, ws, wc, self.is_zero, self.q_start0,
+            eps, c=self.c, n_real=self.n_dims, unicomp=False, external=True,
+            tq=_TQ, keep_hits=return_pairs, method=method)
+        counts_np = np.asarray(counts)[:n_queries]
+        pairs = None
+        if return_pairs:
+            if emit is None:
+                emit = ("device" if jax.default_backend() == "tpu"
+                        else "host")
+            if emit == "host":
+                pairs = _emit_pairs_host(
+                    self.order_np, hits, ws, self.index.num_points)
+            elif emit == "device":
+                total = int(counts_np.sum())
+                capacity = max(_next_pow2(total), _EMIT_CAP_MIN)
+                keys, vals = _emit_pairs_device(
+                    self.index.order, hits, counts, base, ws,
+                    c=self.c, tq=_TQ, capacity=capacity)
+                pairs = np.stack(
+                    [np.asarray(keys)[:total], np.asarray(vals)[:total]],
+                    axis=1)
+            else:
+                raise ValueError(f"unknown emit backend {emit!r}")
+            assert pairs.shape[0] == int(counts_np.sum())
+            if sort_pairs:
+                pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+        cands = int(np.asarray(wc).sum()) if with_stats else None
+        return QueryJoinResult(
+            counts=counts_np, pairs=pairs, n_offsets=self.n_offsets,
+            bucket_rows=qp, emit=emit if return_pairs else None,
+            candidates_checked=cands)
+
+    def counts(self, queries, *, eps: Optional[float] = None,
+               method: Optional[str] = None) -> np.ndarray:
+        """Counts-only fast path (no O(n_off * Q * C) hit buffer)."""
+        return self.join(queries, eps=eps, return_pairs=False,
+                         method=method).counts
+
+
+def prepare(index: GridIndex) -> PreparedJoin:
+    """Prepare a grid index for repeated external-query joins."""
+    return PreparedJoin(index)
+
+
+def epsilon_join(queries, points, eps: Optional[float] = None, *,
+                 index: Optional[GridIndex] = None,
+                 return_pairs: bool = True, sort_pairs: bool = True,
+                 emit: Optional[str] = None, method: Optional[str] = None,
+                 with_stats: bool = False) -> QueryJoinResult:
+    """One-shot external-query epsilon join: counts and pairs of all
+    indexed points within ``eps`` of each query.
+
+    Builds the grid over ``points`` unless ``index`` is supplied. Services
+    answering many requests against one dataset should hold a
+    ``prepare(index)`` object instead (launch/serve.py's JoinService does);
+    the underlying executables are shared either way -- this wrapper only
+    re-pays the cheap host-side preparation per call.
+    """
+    if index is None:
+        index = build_grid_host(np.asarray(points), float(eps))
+    return prepare(index).join(
+        queries, eps=eps, return_pairs=return_pairs, sort_pairs=sort_pairs,
+        emit=emit, method=method, with_stats=with_stats)
+
+
+def executable_cache_stats() -> dict:
+    """Compilation-cache observability for the serving path.
+
+    Returns per-function XLA executable-cache sizes plus the trace-event
+    counters; a healthy steady-state service shows these CONSTANT across
+    requests (asserted by launch/serve.py and tests/test_query_join.py).
+    """
+    from repro.kernels import fused_join as fj
+
+    def size(f) -> int:
+        try:
+            return int(f._cache_size())
+        except Exception:
+            return -1
+
+    return {
+        "external_windows": size(_external_windows),
+        "fused_reference": size(fj._fused_join_hits_reference),
+        "fused_pallas": size(fj._fused_join_hits_pallas),
+        "emit_pairs_device": size(_emit_pairs_device),
+        "trace_events": dict(TRACE_EVENTS),
+    }

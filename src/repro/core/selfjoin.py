@@ -46,7 +46,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import grid as grid_lib
 from repro.core.grid import GridIndex, PAD_KEY, build_grid_host, neighbor_rank
 from repro.core.stencil import stencil_offsets
 
@@ -59,6 +58,7 @@ class JoinStats:
     cells_visited: int        # non-empty adjacent cells evaluated
     candidates_checked: int   # candidate slots with a real point
     offsets: int              # stencil offsets swept
+    route: str = "dense"      # sweep chosen: 'dense' | 'compact' (auto-routed)
 
 
 def _strides(dims: jax.Array) -> jax.Array:
@@ -490,7 +490,48 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
         cells_visited=cells,
         candidates_checked=cands,
         offsets=int(deltas.shape[0]),
+        route="dense",
     )
+
+
+def _fused_count_route(index: GridIndex, n_off: int,
+                       backend: Optional[str] = None) -> str:
+    """Density heuristic: dense fused sweep vs. empty-neighbor compaction.
+
+    The dense sweep gathers a full C-slot window for every (query, offset)
+    probe; in the empty-neighbor regime (high dimensionality, sparse grid)
+    >90% of probes miss and that padding traffic makes fused count ~0.6x of
+    jnp (EXPERIMENTS.md SPerf, uniform-6d). The compacted counter packs
+    live queries before the gather, but pays an O(n_off * |D| log |D|)
+    packing sort -- only worth it when the window DMA traffic it saves is
+    the binding constraint, i.e. on the TPU kernel path. Off-TPU the
+    reference lowering's dense sweep is cache-resident and the packing
+    sort dominates instead: measured on the bench 6-D workloads, compact
+    LOSES to dense everywhere (EXPERIMENTS.md SServe note), so auto-routing
+    stays dense there and ``route='compact'`` remains an explicit override.
+
+    On TPU, cheap proxies from the host grid:
+
+      occupancy = num_cells / prod(dims)  ~ P(random adjacent cell is live)
+      n_off * occupancy                   ~ expected live probes per query
+      n_off * max_per_cell                ~ dense window slots per query
+
+    Route compact when expected live probes are few (< 3) and the dense
+    slot traffic is large enough (>= 256) to amortize the packing sort.
+    """
+    if backend is None:
+        backend = jax.default_backend()
+    if backend != "tpu":
+        return "dense"
+    ncells = max(int(index.num_cells), 1)
+    # float prod: a fine 6-D grid overflows int64, and the heuristic only
+    # needs a ratio
+    volume = max(float(np.prod(np.asarray(index.dims, dtype=np.float64))), 1.0)
+    occupancy = ncells / volume
+    c = max(int(index.max_per_cell), 1)
+    if n_off * occupancy < 3.0 and n_off * c >= 256:
+        return "compact"
+    return "dense"
 
 
 @partial(
@@ -616,6 +657,7 @@ def self_join_count_compact(
         cells_visited=0,
         candidates_checked=int(k0) + int(slots),
         offsets=int(deltas.shape[0]),
+        route="compact",
     )
 
 
@@ -627,10 +669,32 @@ def self_join_count(
     index: Optional[GridIndex] = None,
     distance_impl: str = "jnp",
     query_batch: Optional[int] = None,
+    route: Optional[str] = None,
 ) -> JoinStats:
-    """Total ordered-pair count + work counters (no materialized result)."""
+    """Total ordered-pair count + work counters (no materialized result).
+
+    With ``distance_impl='fused'`` the sweep is auto-routed: the dense
+    fused sweep by default, the empty-neighbor compacted counter
+    (``self_join_count_compact``) when the density heuristic
+    ``_fused_count_route`` detects the sparse/high-dimensional regime
+    where dense window gathers are mostly padding. The chosen path is
+    logged in ``JoinStats.route``; pass ``route='dense'``/``'compact'`` to
+    override. Compact reports no per-cell visit counter (cells_visited=0)
+    and checks fewer candidate slots by construction.
+    """
+    if route not in (None, "dense", "compact"):
+        raise ValueError(f"unknown route {route!r}; "
+                         f"expected None, 'dense', or 'compact'")
     index = _resolve_index(points, eps, index)
     if distance_impl == "fused":
+        if route is None:
+            n_off = stencil_offsets(index.n_dims, unicomp).shape[0]
+            route = ("dense" if query_batch is not None
+                     else _fused_count_route(index, n_off))
+        if route == "compact":
+            return self_join_count_compact(
+                points, eps, unicomp=unicomp, index=index,
+                distance_impl="fused")
         return _self_join_count_fused(
             index, unicomp=unicomp, query_batch=query_batch)
     npts = index.num_points
@@ -786,48 +850,35 @@ def range_query(
     eps,
     *,
     index: Optional[GridIndex] = None,
-) -> np.ndarray:
+    return_pairs: bool = False,
+):
     """Epsilon-range counts for EXTERNAL query points against an indexed set.
 
-    The serving-side building block (launch/serve.py): the grid is built once
-    over ``points``; each request batch of queries is answered by the same
-    bounded adjacent-cell sweep, with the query's cell derived from its
-    coordinates (queries need not belong to the dataset). Returns (Q,) int32
-    neighbor counts; the DBSCAN-style use the paper cites (SII).
+    Thin compatibility wrapper over ``core.query_join`` (DESIGN.md S5),
+    which this function's original implementation grew into. Two bugs of
+    that implementation are fixed by the delegation:
+
+      * it defined its ``@jax.jit`` closure per CALL, so every serve
+        request paid a fresh trace + compile; the query-join path uses
+        module-level jitted functions cached per static bucket shape, and
+      * it clamped query cell coordinates with ``clip(qcoords, 1,
+        dims - 2)``, whose bounds invert (hi < lo) on grids with < 3 cells
+        in a dimension, silently redirecting every query to cell 0; the
+        query-join descriptors mask out-of-grid probes exactly in
+        coordinate space instead (``grid.external_window_descriptors``).
+
+    Returns (Q,) int32 neighbor counts -- or ``(counts, pairs)`` with
+    ``return_pairs`` -- for the DBSCAN-style use the paper cites (SII).
+    Services answering sustained traffic should hold a
+    ``query_join.prepare(index)`` / ``launch.serve.JoinService`` instead.
     """
+    from repro.core.query_join import epsilon_join
+
     index = _resolve_index(points, eps, index)
-    queries = jnp.asarray(queries)
-    deltas, _ = _offset_tables(index, unicomp=False)
-    max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
-
-    @jax.jit
-    def run(index, queries):
-        # cell key of each query under the dataset's grid geometry
-        qcoords = grid_lib.cell_coords(queries, index.grid_min, index.eps)
-        # clamp into the grid (queries may fall outside the indexed volume)
-        qcoords = jnp.clip(qcoords, 1, index.dims - 2)
-        qkeys = grid_lib.linearize(qcoords, index.dims)
-        eps2 = index.eps * index.eps
-
-        def body(counts, delta):
-            nbr = neighbor_rank(index, qkeys + delta)      # (Q,)
-            nbr_c = jnp.maximum(nbr, 0)
-            start = index.cell_start[nbr_c]
-            count = jnp.where(nbr >= 0, index.cell_count[nbr_c], 0)
-            slots = jnp.arange(max_per_cell, dtype=jnp.int32)
-            pos = jnp.minimum(start[:, None] + slots[None, :],
-                              index.num_points - 1)
-            valid = slots[None, :] < count[:, None]
-            cand = index.points_sorted[pos]
-            d2 = jnp.sum((queries[:, None, :] - cand) ** 2, axis=-1)
-            hits = (d2 <= eps2) & valid
-            return counts + hits.sum(axis=1, dtype=jnp.int32), None
-
-        counts0 = jnp.zeros((queries.shape[0],), jnp.int32)
-        counts, _ = jax.lax.scan(body, counts0, deltas)
-        return counts
-
-    return np.asarray(run(index, queries))
+    res = epsilon_join(queries, None, index=index, return_pairs=return_pairs)
+    if return_pairs:
+        return res.counts, res.pairs
+    return res.counts
 
 
 def per_point_neighbor_counts(

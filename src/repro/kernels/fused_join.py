@@ -75,8 +75,17 @@ def pad_points(points_sorted: jax.Array, tail: int) -> jax.Array:
     return jnp.pad(points_sorted, ((0, tail), (0, max(NP_PAD - n, 0))))
 
 
-def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool):
-    """UNICOMP triangle / full-stencil self mask (same rule as the drivers)."""
+def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
+               external: bool = False):
+    """UNICOMP triangle / full-stencil self mask (same rule as the drivers).
+
+    ``external`` queries are not members of the indexed set: there is no
+    self-pair to drop and no triangle rule to apply (every epsilon-hit is a
+    result), so the mask is the identity. The self-join is the special case
+    ``external=False`` with the query batch sliced out of ``points_sorted``.
+    """
+    if external:
+        return hit
     if unicomp:
         return hit & jnp.where(zero != 0, cand_pos > q_pos, True)
     return hit & (cand_pos != q_pos)
@@ -88,7 +97,7 @@ def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool):
 
 def _fused_kernel(ws_ref, wc_ref, iz_ref, meta_ref, eps2_ref, q_ref, pts_ref,
                   hits_ref, counts_ref, base_ref, win_ref, sem_ref,
-                  *, c, tq, unicomp):
+                  *, c, tq, unicomp, external):
     i = pl.program_id(0)           # query tile
     j = pl.program_id(1)           # stencil offset (innermost: q tile resident)
     n_off = pl.num_programs(1)
@@ -119,7 +128,7 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, meta_ref, eps2_ref, q_ref, pts_ref,
         slots = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
         cand_pos = start + slots
         hit = (d2 <= eps2) & (slots < cnt)
-        hit = _mask_hits(hit, cand_pos, q_pos, zero, unicomp)
+        hit = _mask_hits(hit, cand_pos, q_pos, zero, unicomp, external)
         hits_ref[0, r, :] = hit.astype(jnp.int8)
         counts_ref[r, 0] = counts_ref[r, 0] + jnp.sum(hit).astype(jnp.int32)
         return 0
@@ -134,10 +143,11 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, meta_ref, eps2_ref, q_ref, pts_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("c", "tq", "unicomp", "keep_hits", "interpret"))
+    jax.jit, static_argnames=("c", "tq", "unicomp", "external", "keep_hits",
+                              "interpret"))
 def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
                             is_zero, meta, eps2, *, c, tq, unicomp,
-                            keep_hits=True, interpret=True):
+                            external=False, keep_hits=True, interpret=True):
     n_off, qp = win_start.shape
     if keep_hits:
         hits_shape, hits_map = (n_off, qp, c), (lambda i, j, *_: (j, i, 0))
@@ -164,7 +174,8 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
         ],
     )
     hits, counts, base = pl.pallas_call(
-        functools.partial(_fused_kernel, c=c, tq=tq, unicomp=unicomp),
+        functools.partial(_fused_kernel, c=c, tq=tq, unicomp=unicomp,
+                          external=external),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(hits_shape, jnp.int8),
@@ -181,7 +192,7 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
 # ---------------------------------------------------------------------------
 
 def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
-                 c, n_real, unicomp):
+                 c, n_real, unicomp, external=False):
     """Masked hits of every query against one offset's windows.
 
     Distances accumulate dimension-by-dimension over (Q, C) column gathers,
@@ -195,14 +206,15 @@ def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
         cd = jnp.take(points_pad[:, dim], cand_pos)
         d2 = d2 + (q_batch[:, dim][:, None] - cd) ** 2
     hit = (d2 <= eps2) & (slots[None, :] < wc[:, None])
-    return _mask_hits(hit, cand_pos, q_pos[:, None], zero, unicomp)
+    return _mask_hits(hit, cand_pos, q_pos[:, None], zero, unicomp, external)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "keep_hits"))
+    jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
+                              "keep_hits"))
 def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
                                is_zero, meta, eps2, *, c, tq, n_real,
-                               unicomp, keep_hits=True):
+                               unicomp, external=False, keep_hits=True):
     n_off, qp = win_start.shape
     q_start = meta[0]
     q_pos = q_start + jnp.arange(qp, dtype=jnp.int32)
@@ -211,7 +223,8 @@ def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
     def per_offset(counts, xs):
         ws, wc, zero = xs
         hit = _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2s,
-                           c=c, n_real=n_real, unicomp=unicomp)
+                           c=c, n_real=n_real, unicomp=unicomp,
+                           external=external)
         counts = counts + hit.sum(axis=1, dtype=jnp.int32)
         out = hit.astype(jnp.int8) if keep_hits else jnp.zeros((), jnp.int8)
         return counts, out
@@ -231,23 +244,32 @@ def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
 # ---------------------------------------------------------------------------
 
 def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
-                    q_start, eps, *, c, n_real, unicomp,
+                    q_start, eps, *, c, n_real, unicomp, external=False,
                     tq=TQ_DEFAULT, keep_hits=True,
                     method=None, interpret=True):
     """Fused gather-refine sweep over all stencil offsets in one launch.
 
     Args:
       points_pad: (N + tail, NP_PAD) ``pad_points`` output, tail >= c.
-      q_batch:    (Q_pad, NP_PAD) contiguous query slice of ``points_pad``
-                  starting at sorted position ``q_start``; Q_pad % tq == 0.
+      q_batch:    (Q_pad, NP_PAD) query coordinates, Q_pad % tq == 0. For the
+                  self-join this is a contiguous slice of ``points_pad``
+                  starting at sorted position ``q_start``; with ``external``
+                  it is ANY query set (zero-padded pad rows/lanes), and the
+                  window descriptors come from the queries' own cell
+                  coordinates (``grid.external_window_descriptors``).
       win_start / win_count: (n_off, Q_pad) int32 from
-                  ``grid.window_descriptors`` (count 0 for padding queries).
+                  ``grid.window_descriptors`` (self-join) or
+                  ``grid.external_window_descriptors`` (external queries);
+                  count 0 for padding queries / out-of-grid probes.
       is_zero:    (n_off,) int32, 1 for the o = 0 offset (UNICOMP triangle).
-      q_start:    scalar int32, batch origin in sorted order.
+      q_start:    scalar int32, batch origin in sorted order (self-join
+                  masking only; pass 0 with ``external``).
       eps:        scalar threshold; hits are d^2 <= eps^2.
       c:          static window capacity (max_per_cell rounded up).
       n_real:     static true dimensionality (reference path skips pad lanes).
       unicomp:    static; triangle rule on o = 0 vs. full-stencil self mask.
+      external:   static; True disables BOTH masks (queries are not members
+                  of the indexed set -- every epsilon-hit is a result).
       keep_hits:  static; False = count-only (no O(n_off*Q*C) hits buffer).
       method:     'kernel' | 'reference' | None (auto: kernel on TPU).
 
@@ -261,12 +283,13 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     if method == "kernel":
         return _fused_join_hits_pallas(
             points_pad, q_batch, win_start, win_count, is_zero, meta, eps2,
-            c=c, tq=tq, unicomp=unicomp, keep_hits=keep_hits,
-            interpret=interpret)
+            c=c, tq=tq, unicomp=unicomp, external=external,
+            keep_hits=keep_hits, interpret=interpret)
     if method == "reference":
         return _fused_join_hits_reference(
             points_pad, q_batch, win_start, win_count, is_zero, meta, eps2,
-            c=c, tq=tq, n_real=n_real, unicomp=unicomp, keep_hits=keep_hits)
+            c=c, tq=tq, n_real=n_real, unicomp=unicomp, external=external,
+            keep_hits=keep_hits)
     raise ValueError(f"unknown fused_join method {method!r}")
 
 

@@ -1,12 +1,21 @@
-"""Serving driver: batched epsilon-range queries against a grid-indexed set,
-or LM token decoding -- selected by --arch.
+"""Serving driver: a persistent external-query epsilon-join service over a
+grid-indexed set, or LM token decoding -- selected by --arch.
 
-Self-join service (the paper's operator as a long-running service):
+Epsilon-join service (the paper's operator in the index-once/query-many
+regime, DESIGN.md S5):
     python -m repro.launch.serve --arch selfjoin --points 20000 --dims 4 \
         --eps 1.0 --requests 8 --request-batch 256
-The dataset is indexed ONCE (grid build, paper SIV); each request batch of
-query points is answered with the bounded adjacent-cell sweep
-(core.selfjoin.range_query). Batch latency is reported per request.
+``JoinService`` builds the grid index ONCE (paper SIV) and prepares the
+fused external-query join path (core/query_join.py): offset tables and the
+padded points copy are computed at startup, request batches are padded to
+static bucket shapes, and every per-request computation dispatches into
+module-level jitted functions whose XLA executables are cached per bucket --
+so steady-state requests pay pure execution, never trace/compile (the bug
+the original ``range_query``-per-request loop had). The driver warms the
+request bucket, then reports p50/p99 latency and requests/sec over the
+steady-state window, and FAILS (exit code) if any steady-state request
+grew a compilation cache -- the no-retrace regression gate `make verify`
+runs.
 
 LM decode service:
     python -m repro.launch.serve --arch qwen1.5-0.5b --reduced --tokens 32
@@ -17,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,30 +37,123 @@ from repro.launch.mesh import make_smoke_mesh
 from repro.models.lm import LMModel
 
 
-def serve_selfjoin(args):
-    from repro.core.grid import build_grid_host
-    from repro.core.selfjoin import range_query
+class JoinService:
+    """Persistent epsilon-join service: index once, answer many requests.
 
+    Wraps ``core.query_join.prepare`` with the serving-side bookkeeping a
+    long-running process needs: bucket warmup (compile off the request
+    path), steady-state latency percentiles that reflect execution rather
+    than trace time, and a compilation-cache watchdog
+    (``assert_no_retrace``) so a regression back to per-request tracing
+    can never pass silently.
+    """
+
+    def __init__(self, points: np.ndarray, eps: float, *,
+                 index=None, return_pairs: bool = False):
+        from repro.core.grid import build_grid_host
+        from repro.core.query_join import prepare
+
+        t0 = time.perf_counter()
+        self.index = index if index is not None else build_grid_host(
+            np.asarray(points), float(eps))
+        self.prepared = prepare(self.index)
+        self.build_s = time.perf_counter() - t0
+        self.return_pairs = return_pairs
+        self.latencies_ms: list[float] = []   # steady-state only
+        self.total_neighbors = 0
+        self.requests = 0
+        self._warm_buckets: set[int] = set()
+        self._cache_mark: Optional[dict] = None
+
+    def warmup(self, batch_size: int) -> int:
+        """Compile the bucket serving ``batch_size``-query requests (off
+        the request path); returns the bucket's padded row count."""
+        from repro.core.query_join import bucket_rows
+
+        qp = bucket_rows(batch_size)
+        if qp not in self._warm_buckets:
+            n = self.prepared.n_dims
+            q = np.zeros((batch_size, n), self.prepared.dtype)
+            self.prepared.join(q, return_pairs=self.return_pairs)
+            self._warm_buckets.add(qp)
+        return qp
+
+    def mark_steady(self) -> None:
+        """Snapshot compilation caches; later requests must not grow them."""
+        from repro.core.query_join import executable_cache_stats
+
+        self._cache_mark = executable_cache_stats()
+
+    def query(self, queries: np.ndarray):
+        """Answer one request; records steady-state latency."""
+        t0 = time.perf_counter()
+        res = self.prepared.join(queries, return_pairs=self.return_pairs)
+        self.latencies_ms.append(1000 * (time.perf_counter() - t0))
+        self.requests += 1
+        self.total_neighbors += res.total
+        return res
+
+    def percentiles(self) -> tuple[float, float]:
+        lat = np.asarray(self.latencies_ms)
+        return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
+
+    def requests_per_sec(self) -> float:
+        total_s = sum(self.latencies_ms) / 1000
+        return self.requests / total_s if total_s > 0 else float("inf")
+
+    def assert_no_retrace(self) -> None:
+        """Raise if any request since ``mark_steady`` traced or compiled.
+
+        The device-emit scatter is exempt: its result-buffer capacity is a
+        static shape bucketed to powers of two (with a floor), so a
+        pair-serving service legitimately compiles O(log max_result) emit
+        executables on demand as larger results first appear -- warmup
+        cannot know result sizes in advance. The request-path functions
+        (window descriptors, fused sweep) must stay frozen; those are
+        what the per-request re-tracing bug burned."""
+        from repro.core.query_join import executable_cache_stats
+
+        def freeze(stats: dict) -> dict:
+            out = {k: v for k, v in stats.items()
+                   if k not in ("emit_pairs_device", "trace_events")}
+            out["trace_events"] = {
+                k: v for k, v in stats["trace_events"].items()
+                if k != "emit_pairs_device"}
+            return out
+
+        now = executable_cache_stats()
+        if (self._cache_mark is not None
+                and freeze(now) != freeze(self._cache_mark)):
+            raise RuntimeError(
+                "serve path recompiled during steady state: "
+                f"{freeze(self._cache_mark)} -> {freeze(now)}")
+
+
+def serve_selfjoin(args):
     rng = np.random.default_rng(args.seed)
     pts = rng.uniform(0, 100, size=(args.points, args.dims))
-    t0 = time.time()
-    index = build_grid_host(pts, args.eps)
-    print(f"[serve] indexed {args.points} pts in {time.time()-t0:.3f}s "
-          f"(|G|={int(index.num_cells)} non-empty cells)")
-    lat = []
-    total = 0
+    svc = JoinService(pts, args.eps, return_pairs=args.return_pairs)
+    print(f"[serve] indexed {args.points} pts in {svc.build_s:.3f}s "
+          f"(|G|={int(svc.index.num_cells)} non-empty cells, "
+          f"C={svc.prepared.c}, {svc.prepared.n_offsets} stencil offsets)")
+    t0 = time.perf_counter()
+    qp = svc.warmup(args.request_batch)
+    print(f"[serve] warmed bucket {qp} rows in "
+          f"{time.perf_counter()-t0:.3f}s (compile, off the request path)")
+    svc.mark_steady()
     for r in range(args.requests):
         q = rng.uniform(0, 100, size=(args.request_batch, args.dims))
-        t0 = time.time()
-        counts = range_query(q, pts, args.eps, index=index)
-        lat.append(time.time() - t0)
-        total += int(counts.sum())
-    lat_ms = 1000 * np.asarray(lat)
-    print(f"[serve] {args.requests} requests x {args.request_batch} queries: "
-          f"p50 {np.percentile(lat_ms, 50):.1f}ms "
-          f"p99 {np.percentile(lat_ms, 99):.1f}ms "
-          f"({total} neighbors found)")
-    return float(np.median(lat_ms))
+        svc.query(q)
+    p50, p99 = svc.percentiles()
+    print(f"[serve] {args.requests} requests x {args.request_batch} queries"
+          f"{' (+pairs)' if args.return_pairs else ''}: "
+          f"p50 {p50:.1f}ms p99 {p99:.1f}ms "
+          f"{svc.requests_per_sec():.1f} req/s "
+          f"({svc.total_neighbors} neighbors found)")
+    svc.assert_no_retrace()   # regression gate: steady state never compiles
+    print("[serve] no-retrace check passed: steady-state requests hit "
+          "cached executables only")
+    return p50
 
 
 def serve_lm(args):
@@ -96,6 +199,9 @@ def main(argv=None):
     ap.add_argument("--eps", type=float, default=2.0)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--request-batch", type=int, default=256)
+    ap.add_argument("--return-pairs", action="store_true",
+                    help="materialize neighbor pairs per request, not "
+                         "just counts")
     # lm service
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)

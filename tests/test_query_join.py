@@ -1,0 +1,258 @@
+"""External-query epsilon join (core/query_join.py, DESIGN.md S5).
+
+Parity oracle is the O(Q x N) brute-force distance matrix: counts AND
+sorted pairs must bit-match for queries inside the indexed volume, outside
+it, duplicated, and coinciding with indexed points. The serving property
+(no per-request trace/compile) is asserted through the executable-cache
+stats; the tiny-grid tests are the regression for the inverted
+``clip(qcoords, 1, dims - 2)`` clamp of the original ``range_query``
+(coordinate-space bounds masking in ``grid.external_window_descriptors``
+replaced it).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.grid import build_grid_host, build_grid_with_geometry
+from repro.core.query_join import (
+    PreparedJoin,
+    bucket_rows,
+    epsilon_join,
+    executable_cache_stats,
+    prepare,
+)
+from repro.core.selfjoin import range_query, self_join_count
+
+
+def brute(queries, pts, eps):
+    d2 = ((queries[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    hit = d2 <= eps * eps
+    counts = hit.sum(1).astype(np.int32)
+    q, p = np.nonzero(hit)
+    pairs = np.stack([q, p], 1).astype(np.int32)
+    return counts, pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+
+
+def workloads():
+    rng = np.random.default_rng(42)
+    pts2 = rng.uniform(0, 10, (500, 2))
+    yield "inside-2d", pts2, 0.6, rng.uniform(0, 10, (80, 2))
+    # queries straddling and far outside the indexed volume
+    yield "outside-3d", rng.uniform(0, 10, (300, 3)), 1.0, \
+        rng.uniform(-8, 18, (60, 3))
+    # high-dimensional sparse regime
+    yield "sparse-6d", rng.uniform(0, 40, (200, 6)), 6.0, \
+        rng.uniform(-5, 45, (40, 6))
+    # duplicate query points (identical rows must get identical answers)
+    qd = rng.uniform(0, 10, (20, 2))
+    yield "dup-queries-2d", pts2, 0.6, np.repeat(qd, 3, axis=0)
+    # queries that ARE indexed points: external join has no self-exclusion,
+    # so each query counts its coincident point
+    yield "coincident-2d", pts2, 0.6, pts2[::7].copy()
+
+
+def test_epsilon_join_matches_brute_force():
+    for name, pts, eps, q in workloads():
+        counts, pairs = brute(q, pts, eps)
+        res = epsilon_join(q, pts, eps, with_stats=True)
+        assert np.array_equal(res.counts, counts), name
+        assert np.array_equal(res.pairs, pairs), name
+        assert res.total == counts.sum(), name
+        assert res.bucket_rows == bucket_rows(q.shape[0]), name
+        # counts-only path agrees without materializing the hit set
+        assert np.array_equal(
+            epsilon_join(q, pts, eps, return_pairs=False).counts, counts), name
+
+
+def test_emit_backends_agree():
+    rng = np.random.default_rng(7)
+    pts = rng.uniform(0, 10, (400, 3))
+    q = rng.uniform(-1, 11, (70, 3))
+    index = build_grid_host(pts, 0.9)
+    pj = prepare(index)
+    h = pj.join(q, emit="host")
+    d = pj.join(q, emit="device")
+    assert np.array_equal(h.counts, d.counts)
+    assert np.array_equal(h.pairs, d.pairs)
+    # both emits are query-major: identical row order even unsorted
+    hu = pj.join(q, emit="host", sort_pairs=False)
+    du = pj.join(q, emit="device", sort_pairs=False)
+    assert np.array_equal(hu.pairs, du.pairs)
+
+
+def test_pallas_kernel_external_matches_reference():
+    """The Pallas kernel path (interpret off-TPU) with external=True."""
+    rng = np.random.default_rng(11)
+    pts = rng.uniform(0, 10, (300, 2))
+    q = rng.uniform(-1, 11, (50, 2))
+    index = build_grid_host(pts, 0.8)
+    pj = prepare(index)
+    ref = pj.join(q, method="reference")
+    ker = pj.join(q, method="kernel")
+    assert np.array_equal(ref.counts, ker.counts)
+    assert np.array_equal(ref.pairs, ker.pairs)
+    counts, pairs = brute(q, pts, 0.8)
+    assert np.array_equal(ker.counts, counts)
+    assert np.array_equal(ker.pairs, pairs)
+
+
+def test_eps_override_and_validation():
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 10, (300, 2))
+    q = rng.uniform(0, 10, (40, 2))
+    index = build_grid_host(pts, 1.0)
+    pj = prepare(index)
+    # a smaller query radius than the build radius is exact
+    counts, pairs = brute(q, pts, 0.5)
+    res = pj.join(q, eps=0.5)
+    assert np.array_equal(res.counts, counts)
+    assert np.array_equal(res.pairs, pairs)
+    # a larger radius cannot be served by the +/-1-cell stencil
+    with pytest.raises(ValueError):
+        pj.join(q, eps=1.5)
+    with pytest.raises(ValueError):
+        pj.join(q[:, :1])  # wrong dimensionality
+
+
+def test_tiny_grid_clip_regression():
+    """Grids with < 3 cells per dimension (regression for the inverted
+    ``clip(qcoords, 1, dims - 2)``: with dims=2 the bounds invert and,
+    key-space probing aside, offset deltas alias (radix-2 linearization),
+    double-counting adjacent-cell neighbors)."""
+    pts = np.array([[0.2, 0.2], [1.8, 0.3], [1.7, 1.6], [0.1, 1.9],
+                    [1.0, 1.0], [0.2, 1.6]])
+    for dims in ([2, 2], [2, 4], [4, 2]):
+        eps = 1.5
+        gmin = jnp.zeros(2, dtype=jnp.float64 if pts.dtype == np.float64
+                         else jnp.float32)
+        index = build_grid_with_geometry(
+            jnp.asarray(pts), eps, gmin, jnp.asarray(dims, jnp.int64))
+        q = np.array([[0.2, 1.2], [0.3, 0.3], [1.9, 1.9], [-0.5, 0.5],
+                      [2.4, 0.1], [5.0, 5.0], [1.0, 2.9]])
+        counts, pairs = brute(q, pts, eps)
+        res = prepare(index).join(q)
+        assert np.array_equal(res.counts, counts), dims
+        assert np.array_equal(res.pairs, pairs), dims
+        got = range_query(q, pts, eps, index=index)
+        assert np.array_equal(got, counts), dims
+
+
+def test_range_query_wrapper():
+    rng = np.random.default_rng(13)
+    pts = rng.uniform(0, 10, (400, 3))
+    eps = 0.9
+    q = rng.uniform(-1, 11, (50, 3))
+    counts, pairs = brute(q, pts, eps)
+    assert np.array_equal(range_query(q, pts, eps), counts)
+    got_counts, got_pairs = range_query(q, pts, eps, return_pairs=True)
+    assert np.array_equal(got_counts, counts)
+    assert np.array_equal(got_pairs, pairs)
+
+
+def test_bucket_rows():
+    assert bucket_rows(0) == 128
+    assert bucket_rows(1) == 128
+    assert bucket_rows(128) == 128
+    assert bucket_rows(129) == 256
+    assert bucket_rows(300) == 512
+    assert bucket_rows(512) == 512
+    assert bucket_rows(513) == 1024
+
+
+def test_no_retrace_across_requests():
+    """The serve-path regression gate: once a bucket shape is warm, further
+    requests (any size within the bucket, any query values, any eps <=
+    build eps) must hit cached executables only."""
+    rng = np.random.default_rng(5)
+    pts = rng.uniform(0, 10, (600, 2))
+    index = build_grid_host(pts, 0.7)
+    pj = prepare(index)
+    pj.join(rng.uniform(0, 10, (100, 2)))          # warm the 128-row bucket
+    pj.join(rng.uniform(0, 10, (100, 2)), emit="device")
+    pj.join(rng.uniform(0, 10, (100, 2)), return_pairs=False)
+    mark = executable_cache_stats()
+    assert mark["external_windows"] >= 1
+    for k in range(6):
+        q = rng.uniform(-2, 12, (17 + 13 * k, 2))  # all inside the bucket
+        pj.join(q)
+        pj.join(q, emit="device")
+        pj.join(q, return_pairs=False, eps=0.3 + 0.05 * k)
+    assert executable_cache_stats() == mark
+    # a NEW bucket shape compiles exactly once...
+    pj.join(rng.uniform(0, 10, (200, 2)))
+    grown = executable_cache_stats()
+    assert grown["external_windows"] == mark["external_windows"] + 1
+    # ...and is itself steady afterwards
+    pj.join(rng.uniform(0, 10, (150, 2)))
+    assert executable_cache_stats() == grown
+
+
+def test_join_service_steady_state():
+    from repro.launch.serve import JoinService
+
+    rng = np.random.default_rng(9)
+    pts = rng.uniform(0, 10, (800, 3))
+    svc = JoinService(pts, 0.8)
+    svc.warmup(64)
+    svc.mark_steady()
+    expect_total = 0
+    for _ in range(5):
+        q = rng.uniform(0, 10, (64, 3))
+        res = svc.query(q)
+        b, _ = brute(q, pts, 0.8)
+        assert np.array_equal(res.counts, b)
+        expect_total += int(b.sum())
+    svc.assert_no_retrace()   # raises on any steady-state compile
+    assert svc.total_neighbors == expect_total
+    p50, p99 = svc.percentiles()
+    assert 0 < p50 <= p99
+    assert svc.requests == 5
+
+
+def test_fused_count_auto_route():
+    """Satellite: self_join_count(distance_impl='fused') routes between
+    the dense sweep and the compacted counter, logging the choice.
+
+    The heuristic itself is backend-gated: on the TPU kernel path the
+    empty-neighbor regime routes compact (window-DMA traffic is the
+    binding constraint); off-TPU the packing sort dominates and the dense
+    sweep measured faster everywhere (EXPERIMENTS.md SServe note), so
+    auto stays dense on this container and compact is an explicit
+    override."""
+    from repro.core.selfjoin import _fused_count_route
+    from repro.core.stencil import stencil_offsets
+
+    rng = np.random.default_rng(21)
+    dense_pts = rng.uniform(0, 10, (400, 2))
+    sparse_pts = rng.uniform(0, 60, (250, 6))
+    dense_idx = build_grid_host(dense_pts, 0.6)
+    sparse_idx = build_grid_host(sparse_pts, 7.0)
+    n_off2 = stencil_offsets(2, True).shape[0]
+    n_off6 = stencil_offsets(6, True).shape[0]
+    # the regime detection (forced onto the TPU branch)
+    assert _fused_count_route(sparse_idx, n_off6, backend="tpu") == "compact"
+    assert _fused_count_route(dense_idx, n_off2, backend="tpu") == "dense"
+    # off-TPU (this container): auto never picks the slower compact path
+    assert _fused_count_route(sparse_idx, n_off6, backend="cpu") == "dense"
+    a = self_join_count(dense_pts, 0.6, distance_impl="fused")
+    assert a.route == "dense"
+    expect = self_join_count(sparse_pts, 7.0)
+    assert expect.route == "dense"   # non-fused impls never reroute
+    # explicit override runs the compacted counter and logs it
+    b = self_join_count(sparse_pts, 7.0, distance_impl="fused",
+                        route="compact")
+    assert b.route == "compact"
+    assert b.total_pairs == expect.total_pairs
+    forced = self_join_count(sparse_pts, 7.0, distance_impl="fused",
+                             route="dense")
+    assert forced.route == "dense"
+    assert forced.total_pairs == expect.total_pairs
+
+
+def test_epsilon_join_empty_query_batch():
+    rng = np.random.default_rng(2)
+    pts = rng.uniform(0, 10, (100, 2))
+    res = epsilon_join(np.zeros((0, 2)), pts, 0.5)
+    assert res.counts.shape == (0,)
+    assert res.pairs.shape == (0, 2)
