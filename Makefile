@@ -1,6 +1,6 @@
 # Developer entry points. `make verify` is the pre-merge gate: tier-1
 # tests plus the serving-path no-retrace smoke (scripts/ci.sh).
-.PHONY: verify test serve-smoke bench bench-serve
+.PHONY: verify test serve-smoke bench bench-serve bench-smoke
 
 verify:
 	bash scripts/ci.sh
@@ -16,3 +16,7 @@ bench:
 
 bench-serve:
 	PYTHONPATH=src python benchmarks/bench_selfjoin.py --mode serve
+
+# one tiny workload, seconds: bench harness + BENCH schema rot gate (CI)
+bench-smoke:
+	PYTHONPATH=src python benchmarks/bench_selfjoin.py --smoke

@@ -1,14 +1,21 @@
 """Self-join perf trajectory: count/fill across distance_impl variants,
-plus the serving path (--mode serve).
+plus the serving path (--mode serve) and a CI smoke (--smoke).
 
     PYTHONPATH=src python benchmarks/bench_selfjoin.py [--out BENCH_selfjoin.json]
     PYTHONPATH=src python benchmarks/bench_selfjoin.py --mode serve
+    PYTHONPATH=src python benchmarks/bench_selfjoin.py --smoke
 
 --mode impl (default) times ``self_join_count`` (count) and ``self_join``
 (count+fill, unsorted -- the paper reports the result sort separately) for
 n in {2, 4, 6} on uniform and clustered datasets, across distance_impl in
 {jnp, pallas, fused}, with the grid index prebuilt (index construction is
-shared by every impl and benchmarked in benchmarks/joins.py).
+shared by every impl and benchmarked in benchmarks/joins.py). The fused
+impl runs with autotuning enabled (kernels/autotune.py measures tiles and
+the count route once and persists the winners), records the chosen route
+and the window-capacity histogram that drives the occupancy buckets
+(DESIGN.md S6), and ASSERTS the routing floor: fused count must not lose
+to jnp on any workload (the uniform-6d regression this gate pins down;
+--no-assert-floor to disable).
 
 --mode serve times the external-query serving path (DESIGN.md S5) on the
 default serve workload: steady-state (post-warmup) request latency
@@ -17,6 +24,11 @@ LEGACY pre-PR-2 path, kept verbatim here as ``legacy_range_query_retrace``
 -- a per-request ``@jax.jit`` closure that re-traces and recompiles on
 every call. The acceptance claim is steady-state p50 >= 5x better than
 the legacy path.
+
+--smoke shrinks the impl sweep to one tiny workload (seconds), writes to a
+temp file by default, skips the floor assert (noise at this scale), and
+schema-validates the payload -- wired into scripts/ci.sh so the harness
+and the BENCH schema cannot rot between full runs.
 
 On this CPU container the 'pallas' impl runs the cell_join kernel through
 the interpreter and the 'fused' impl runs the reference lowering of
@@ -60,6 +72,12 @@ def clustered(n_points: int, n_dims: int, seed: int = 3) -> np.ndarray:
 
 
 def workloads(args):
+    if args.smoke:
+        # one tiny skewed workload: exercises the occupancy buckets and the
+        # full payload schema in seconds (CI harness-rot gate)
+        yield "uniform-2d", syn(4000, 2), 0.4
+        yield "clustered-2d", clustered(3000, 2), 0.4
+        return
     # eps tuned per dimensionality for paper-like selectivity (a handful of
     # neighbors per point on the uniform sets; denser on the clustered sets).
     yield "uniform-2d", syn(args.points_2d, 2), 0.4
@@ -68,6 +86,24 @@ def workloads(args):
     yield "clustered-4d", clustered(args.points_4d, 4), 3.0
     yield "uniform-6d", syn(args.points_6d, 6), 14.0
     yield "clustered-6d", clustered(args.points_6d, 6), 4.0
+
+
+def validate_schema(payload: dict) -> None:
+    """The BENCH_selfjoin.json contract consumed by EXPERIMENTS.md and the
+    acceptance gates; --smoke runs this in CI so it cannot rot."""
+    for key in ("bench", "backend", "jax", "results"):
+        assert key in payload, key
+    assert payload["headline"] is None or {
+        "workload", "n_points", "fused_over_jnp_join",
+        "fused_over_jnp_count"} <= set(payload["headline"])
+    for e in payload["results"]:
+        for key in ("workload", "n_points", "n_dims", "eps", "total_pairs",
+                    "max_per_cell", "window_caps_hist", "impls"):
+            assert key in e, (e.get("workload"), key)
+        for impl, t in e["impls"].items():
+            assert {"count_s", "join_s"} <= set(t), (e["workload"], impl)
+        if "fused" in e["impls"]:
+            assert "route" in e["impls"]["fused"], e["workload"]
 
 
 def best_of(fn, trials: int) -> float:
@@ -197,9 +233,21 @@ def bench_serve(args):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_selfjoin.json"))
+    ap.add_argument("--out", default=None)
     ap.add_argument("--mode", default="impl", choices=("impl", "serve"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny impl sweep + schema validation (CI gate); "
+                         "writes to a temp file unless --out is given")
+    ap.add_argument("--assert-floor", dest="assert_floor",
+                    action="store_true", default=None,
+                    help="fail if routed fused count loses to jnp "
+                         "(default: on for full impl runs, off for --smoke)")
+    ap.add_argument("--no-assert-floor", dest="assert_floor",
+                    action="store_false")
+    ap.add_argument("--no-autotune", dest="autotune", action="store_false",
+                    default=True,
+                    help="disable measured tile/route autotuning "
+                         "(kernels/autotune.py) for this run")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--points-2d", type=int, default=100_000)
     ap.add_argument("--points-4d", type=int, default=20_000)
@@ -215,7 +263,26 @@ def main(argv=None):
     ap.add_argument("--serve-requests", type=int, default=32)
     ap.add_argument("--serve-requests-legacy", type=int, default=6)
     args = ap.parse_args(argv)
+    if args.assert_floor is None:
+        args.assert_floor = args.mode == "impl" and not args.smoke
+    if args.smoke:
+        args.trials = 1
+        if args.impls == ",".join(IMPLS):
+            args.impls = "jnp,fused"   # interpreted pallas is minutes even
     impls = tuple(args.impls.split(","))
+    if args.out is None:
+        if args.smoke:
+            import tempfile
+
+            args.out = os.path.join(tempfile.gettempdir(),
+                                    "bench_selfjoin_smoke.json")
+        else:
+            args.out = os.path.join(
+                os.path.dirname(__file__), "..", "BENCH_selfjoin.json")
+    if args.autotune and args.mode == "impl" and not args.smoke:
+        # measured tile + route autotuning: winners persist in the cache
+        # next to kernels/autotune.py (or $REPRO_AUTOTUNE_CACHE)
+        os.environ.setdefault("REPRO_AUTOTUNE", "1")
     out = os.path.abspath(args.out)
     existing = {}
     if os.path.exists(out):
@@ -235,10 +302,13 @@ def main(argv=None):
         print(f"[bench] wrote {out}")
         return payload
 
+    from repro.core.grid import occupancy_plan
+
     results = []
     for name, pts, eps in workloads(args):
         index = build_grid_host(pts, eps)
         expect = self_join_count(pts, eps, index=index).total_pairs
+        plan = occupancy_plan(index)
         entry = {
             "workload": name,
             "n_points": int(pts.shape[0]),
@@ -246,6 +316,10 @@ def main(argv=None):
             "eps": float(eps),
             "total_pairs": int(expect),
             "max_per_cell": int(index.max_per_cell),
+            # per-query candidate-capacity histogram {class: rows} -- the
+            # skew that motivates the occupancy buckets (DESIGN.md S6)
+            "window_caps_hist": {str(k): v for k, v in
+                                 sorted(plan.hist.items())},
             "impls": {},
         }
         for impl in impls:
@@ -263,8 +337,11 @@ def main(argv=None):
                                   sort_result=False),
                 trials)
             entry["impls"][impl] = {"count_s": t_count, "join_s": t_join}
+            if impl == "fused":
+                entry["impls"][impl]["route"] = stats.route
             print(f"[bench] {name:14s} {impl:6s} "
-                  f"count {t_count*1e3:9.1f} ms   join {t_join*1e3:9.1f} ms",
+                  f"count {t_count*1e3:9.1f} ms   join {t_join*1e3:9.1f} ms"
+                  + (f"   route={stats.route}" if impl == "fused" else ""),
                   flush=True)
         j = entry["impls"]
         if "jnp" in j and "fused" in j:
@@ -272,6 +349,12 @@ def main(argv=None):
                 "count": j["jnp"]["count_s"] / j["fused"]["count_s"],
                 "join": j["jnp"]["join_s"] / j["fused"]["join_s"],
             }
+            if args.assert_floor:
+                r = entry["speedup_fused_vs_jnp"]["count"]
+                assert r >= 1.0, (
+                    f"routing floor violated on {name}: fused count {r:.2f}x "
+                    f"vs jnp (route={j['fused']['route']}) -- the routing "
+                    f"table must never pin a fused plan that loses to jnp")
         results.append(entry)
 
     headline = next((e for e in results
@@ -294,6 +377,11 @@ def main(argv=None):
     }
     if "serve" in existing:   # each mode preserves the other's section
         payload["serve"] = existing["serve"]
+    validate_schema(payload)
+    if args.smoke:
+        print("[bench] smoke: schema validated "
+              f"({len(results)} workloads, floor assert "
+              f"{'on' if args.assert_floor else 'off'})")
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     if headline is not None:

@@ -43,7 +43,7 @@ if __name__ == "__main__":
                 "--ckpt-dir", "/tmp/gpt100m_ckpt", "--ckpt-every", "100"]
     else:
         steps = args.steps or 200
-        argv = ["--arch", "qwen1.5-0.5b", "--reduced", "--steps", str(steps),
+        argv = ["--arch", "smoke-lm", "--reduced", "--steps", str(steps),
                 "--batch", "8", "--seq", "128", "--dedup",
                 "--ckpt-dir", "/tmp/lm_ckpt", "--ckpt-every", "100",
                 "--log-every", "20"]

@@ -16,4 +16,7 @@ python -m pytest -x -q
 echo "[ci] serve smoke (steady state must not retrace)"
 timeout 120 python -m repro.launch.serve --arch selfjoin --requests 4
 
+echo "[ci] bench smoke (harness + BENCH schema)"
+timeout 300 python benchmarks/bench_selfjoin.py --smoke
+
 echo "[ci] OK"

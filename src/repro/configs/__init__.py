@@ -1,45 +1,29 @@
-"""Architecture registry: the 10 assigned archs + the paper's own workload.
+"""Architecture registry: the paper's own workload + a generic LM smoke arch.
 
-Each ``configs/<arch>.py`` exports:
-    CONFIG   -- the exact published configuration (source tier in docstring)
+The seed's 10 published-LLM configs (qwen/grok/arctic/...) were unrelated
+to the self-join system and were pruned (PR 3); ``smoke_lm`` is the single
+generic stand-in that keeps the LM substrate (models/, train/, launch/)
+driver-testable. Each remaining ``configs/<arch>.py`` exports:
+
+    CONFIG   -- the arch's full configuration
     REDUCED  -- a small same-family config for CPU smoke tests
 
-Shape cells (LM family): seq_len x global_batch per the assignment;
-``decode_*``/``long_*`` lower ``serve_step`` (one token against a KV cache of
-seq_len), not ``train_step``. Skips (encoder-only decode, full-attention
-long_500k) are encoded in ``cell_plan`` and mirrored in EXPERIMENTS.md.
+``selfjoin`` (the paper's system) carries its own SHAPES/workloads; the LM
+shape-cell machinery (dry-run lowering grid) is retained for the smoke
+arch.
 """
 from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 ARCHS = [
-    "qwen2_72b",
-    "qwen1_5_0_5b",
-    "qwen2_5_32b",
-    "stablelm_12b",
-    "arctic_480b",
-    "grok_1_314b",
-    "xlstm_1_3b",
-    "hubert_xlarge",
-    "llava_next_34b",
-    "zamba2_1_2b",
+    "smoke_lm",
 ]
 
-# canonical ids from the assignment -> module names
+# canonical ids -> module names
 ALIASES = {
-    "qwen2-72b": "qwen2_72b",
-    "qwen1.5-0.5b": "qwen1_5_0_5b",
-    "qwen2.5-32b": "qwen2_5_32b",
-    "stablelm-12b": "stablelm_12b",
-    "arctic-480b": "arctic_480b",
-    "grok-1-314b": "grok_1_314b",
-    "xlstm-1.3b": "xlstm_1_3b",
-    "hubert-xlarge": "hubert_xlarge",
-    "llava-next-34b": "llava_next_34b",
-    "zamba2-1.2b": "zamba2_1_2b",
+    "smoke-lm": "smoke_lm",
     "selfjoin": "selfjoin",
 }
 
@@ -84,12 +68,10 @@ def cell_plan(arch: str):
 
 
 def all_cells():
-    """Every (arch, cell, skip) across the assignment (40 logical cells)."""
+    """Every (arch, cell, skip) across the registry."""
     out = []
+    canon = {v: k for k, v in ALIASES.items()}
     for arch in ARCHS:
-        a = arch.replace("_", "-")
-        # restore canonical spelling
-        canon = {v: k for k, v in ALIASES.items()}[arch]
         for cell, skip in cell_plan(arch):
-            out.append((canon, cell, skip))
+            out.append((canon[arch], cell, skip))
     return out

@@ -1,0 +1,21 @@
+"""smoke-lm: a tiny dense transformer config for LM-substrate smoke tests.
+
+The seed repo carried 10 published LLM configs (qwen/grok/arctic/...)
+unrelated to the paper's self-join system; they were pruned (PR 3) to cut
+test collection/runtime. This single generic config keeps the LM substrate
+(models/, train/, launch/train.py, launch/serve.py --arch) exercisable by
+the driver and distributed tests without re-importing that registry.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smoke-lm", family="dense",
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+    d_ff=1024, vocab=8192, qkv_bias=True,
+)
+
+REDUCED = ModelConfig(
+    name="smoke-lm-reduced", family="dense",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab=512, qkv_bias=True, attn_chunk=32, remat=False,
+)

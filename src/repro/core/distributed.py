@@ -46,7 +46,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import grid as grid_lib
-from repro.core.grid import build_grid_with_geometry
+from repro.core.grid import build_grid_with_geometry, row_major_strides
 from repro.core.selfjoin import _distance_hits_jnp, _gather_batch, _neighbor_ranks_for_delta
 from repro.core.stencil import stencil_offsets
 
@@ -203,10 +203,7 @@ def make_distributed_count_step(mesh: Mesh, cfg: DistJoinConfig):
         gid_sorted = cand_gids[index.order]
         cell_overflow = index.max_per_cell > C
 
-        strides = jnp.concatenate(
-            [jnp.cumprod(dims[::-1])[-2::-1], jnp.ones((1,), dims.dtype)]
-        )
-        deltas = offsets @ strides
+        deltas = offsets @ row_major_strides(dims)
         n_cand = P_loc + n_halo
 
         def body(total, xs):

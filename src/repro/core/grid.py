@@ -28,6 +28,7 @@ host path and subsumed by the searchsorted miss (-1) on the device path.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from functools import partial
 from typing import Optional
 
@@ -38,6 +39,26 @@ import numpy as np
 # Sentinel linear key for padding slots in B. Must compare greater than any
 # real key so searchsorted never matches it.
 PAD_KEY = jnp.iinfo(jnp.int64).max
+
+
+def _require_int64_keys() -> None:
+    """Refuse to build a grid whose keys would silently truncate to int32.
+
+    With ``jax_enable_x64`` off, ``jnp.asarray`` of an int64 host array and
+    every ``linearize`` result downcast to int32 without warning; on >=4-D
+    grids the linear key space exceeds 2^31 and distinct cells ALIAS to the
+    same key (and ``PAD_KEY`` wraps negative, so padding slots match real
+    searches). Importing ``repro`` enables x64 globally; this guard catches
+    grid builds from processes that bypassed that import.
+    """
+    if not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "epsilon-grid cell keys require int64, but jax_enable_x64 is "
+            "off: linearized keys (grid.linearize) and PAD_KEY would "
+            "silently truncate to int32 and alias distinct cells on "
+            "high-dimensional grids. Enable it with "
+            "jax.config.update('jax_enable_x64', True) -- importing the "
+            "`repro` package does this for you.")
 
 
 @jax.tree_util.register_dataclass
@@ -96,6 +117,21 @@ def linearize(coords: jax.Array, dims: jax.Array) -> jax.Array:
     return key
 
 
+def row_major_strides(dims: jax.Array) -> jax.Array:
+    """s_j = prod_{k>j} dims_k, the ``linearize`` convention -- so
+    key(c + o) = key(c) + o @ s for any offset vector o.
+
+    THE stride formula: the offset tables (selfjoin), the distributed slab
+    join, and the host-side occupancy planner (``cell_window_caps``) must
+    all agree with ``linearize`` bit-for-bit, or window capacities
+    undercount and the kernel silently truncates candidates. jnp, usable
+    under jit; host code converts with ``np.asarray``.
+    """
+    dims = jnp.asarray(dims).astype(jnp.int64)
+    rev = jnp.cumprod(dims[::-1])
+    return jnp.concatenate([rev[-2::-1], jnp.ones((1,), dims.dtype)])
+
+
 def grid_geometry(points: jax.Array, eps) -> tuple[jax.Array, jax.Array]:
     """grid_min (g_j^min) and dims (|g_j|) per paper SIV-B.
 
@@ -114,6 +150,7 @@ def grid_geometry(points: jax.Array, eps) -> tuple[jax.Array, jax.Array]:
 
 def build_grid_host(points: np.ndarray, eps: float) -> GridIndex:
     """Exact epsilon-grid build in numpy. Returns a device GridIndex."""
+    _require_int64_keys()
     points = np.asarray(points)
     npts, n = points.shape
     gmin = points.min(axis=0) - eps
@@ -206,6 +243,7 @@ def build_grid_with_geometry(
     points are unreachable as candidates. ``max_per_cell`` excludes the
     sentinel cell.
     """
+    _require_int64_keys()
     npts, _ = points.shape
     keys = linearize(cell_coords(points, gmin, eps), dims)
     sentinel = jnp.prod(dims.astype(jnp.int64))
@@ -285,7 +323,29 @@ def window_descriptors(
     if q_size is None:
         q_size = npts
     q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(q_size, dtype=jnp.int32)
-    q_ok = q_pos < npts
+    return window_descriptors_at(index, deltas, q_pos, q_pos < npts)
+
+
+def window_descriptors_at(
+    index: GridIndex,
+    deltas: jax.Array,
+    q_pos: jax.Array,
+    q_ok: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Candidate windows for EXPLICIT sorted positions (``q_pos``, (Q,)).
+
+    The occupancy-bucketed launch loop (DESIGN.md S6) partitions query rows
+    by candidate-capacity class, so a bucket's query rows are an ascending
+    but non-contiguous subset of sorted order; this variant resolves each
+    row's own cell from its position rather than a contiguous batch origin.
+    ``q_ok`` masks padding slots (window count forced to 0); candidate
+    windows themselves stay contiguous runs of ``points_sorted`` regardless
+    of the query partition.
+    """
+    npts = index.num_points
+    q_pos = q_pos.astype(jnp.int32)
+    if q_ok is None:
+        q_ok = q_pos < npts
     q_pos_c = jnp.minimum(q_pos, npts - 1)
     rank = index.point_cell_rank[q_pos_c]            # (Q,) rank of own cell
     own_key = index.cell_keys[rank]                  # (Q,) int64
@@ -358,3 +418,138 @@ def neighbor_rank(index: GridIndex, query_keys: jax.Array) -> jax.Array:
     pos = jnp.minimum(pos, index.num_points - 1)
     hit = index.cell_keys[pos] == query_keys
     return jnp.where(hit, pos, -1)
+
+
+# ---------------------------------------------------------------------------
+# Occupancy bucketing (DESIGN.md S6): partition query rows into candidate-
+# capacity classes so the fused kernel pads each window to its BUCKET's
+# capacity instead of the global max_per_cell. On skewed data the global max
+# is 5-10x the median cell, so a single-capacity launch spends most of its
+# window lanes on padding; per-bucket static capacities keep kernel shapes
+# static (one cached executable per class) while sizing the work to the data.
+# ---------------------------------------------------------------------------
+
+CAP_ALIGN = 8  # lane alignment of window capacities (matches the kernels)
+
+
+def round_up(x, m: int):
+    """Round up to a multiple of m (python ints and np arrays alike) --
+    THE capacity/tile alignment helper (selfjoin and query_join alias it)."""
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static partition of sorted query rows into capacity classes.
+
+    ``caps[k]`` is bucket k's window capacity (ascending, CAP_ALIGN-aligned,
+    the last equals the global capacity); ``sel[k]`` holds the bucket's
+    sorted positions in ascending A-order (``None`` for the single-bucket
+    plan, meaning "all rows, contiguous"). ``hist`` maps each capacity class
+    to its query count -- the window-length histogram that motivated the
+    classes (EXPERIMENTS.md SBuckets).
+    """
+
+    caps: tuple
+    sel: tuple
+    cap_global: int
+    hist: dict
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.caps)
+
+
+def capacity_classes(cap_global: int, align: int = CAP_ALIGN) -> tuple:
+    """Pow2-growing capacity ladder (align, 2*align, ...) capped at
+    ``cap_global`` (which is kept even when not a power of two)."""
+    cap_global = max(int(cap_global), align)
+    out = []
+    v = align
+    while v < cap_global:
+        out.append(v)
+        v *= 2
+    out.append(cap_global)
+    return tuple(out)
+
+
+def cell_window_caps(index: GridIndex) -> np.ndarray:
+    """Per non-empty cell: the largest adjacent-cell window any of its
+    points can see -- max over the FULL 3^n stencil of the neighbor cell's
+    count (own cell included). Host-side pure index arithmetic; an upper
+    bound for any sub-stencil (e.g. the UNICOMP half), so one plan serves
+    both sweep modes."""
+    from repro.core.stencil import stencil_offsets
+
+    ncells = int(index.num_cells)
+    keys = np.asarray(index.cell_keys[:ncells])
+    counts = np.asarray(index.cell_count[:ncells]).astype(np.int64)
+    strides = np.asarray(row_major_strides(index.dims))
+    deltas = stencil_offsets(index.n_dims, unicomp=False) @ strides
+    caps = np.zeros(ncells, np.int64)
+    for delta in deltas:
+        probe = keys + delta
+        pos = np.minimum(np.searchsorted(keys, probe), ncells - 1)
+        live = keys[pos] == probe
+        caps = np.maximum(caps, np.where(live, counts[pos], 0))
+    return caps.astype(np.int32)
+
+
+# Derived structures (bucket plans, lookup tables, route decisions) are
+# pure functions of the (immutable) index; cache them per live GridIndex so
+# repeated joins against the same index pay the host-side work once. Keyed
+# by (id, tag) with a weakref finalizer for eviction -- GridIndex holds jax
+# arrays and is itself unhashable.
+_INDEX_CACHE: dict = {}
+
+
+def index_cached(index: GridIndex, tag: str, build):
+    """Memoize ``build()`` on the index object under ``tag``."""
+    key = (id(index), tag)
+    if key in _INDEX_CACHE:
+        return _INDEX_CACHE[key]
+    value = build()
+    _INDEX_CACHE[key] = value
+    weakref.finalize(index, _INDEX_CACHE.pop, key, None)
+    return value
+
+
+def occupancy_plan(index: GridIndex, align: int = CAP_ALIGN) -> BucketPlan:
+    """Window-length histogram -> capacity classes -> query-row partition.
+
+    Rows keep ascending A-order inside every bucket (a cell's points share
+    a class, so selections are runs of whole cells) and each row appears in
+    exactly ONE bucket: per-bucket counts and slot bases compose back into
+    the single-pass count -> fill contract by concatenation.
+    """
+    return index_cached(index, f"plan/{align}",
+                        lambda: _build_occupancy_plan(index, align))
+
+
+def _build_occupancy_plan(index: GridIndex, align: int) -> BucketPlan:
+    npts = index.num_points
+    cap_global = round_up(max(int(index.max_per_cell), 1), align)
+    if cap_global <= align or npts == 0:
+        return BucketPlan(caps=(cap_global,), sel=(None,),
+                          cap_global=cap_global, hist={cap_global: npts})
+    classes = capacity_classes(cap_global, align)
+    caps = cell_window_caps(index)                       # (ncells,)
+    caps_aligned = np.minimum(
+        round_up(np.maximum(caps, 1), align), cap_global)
+    cls_of_cell = np.searchsorted(np.asarray(classes), caps_aligned)
+    rank = np.asarray(index.point_cell_rank)             # (npts,) cell of row
+    cls_of_row = cls_of_cell[rank]
+    hist, sels, kept = {}, [], []
+    for k, cap in enumerate(classes):
+        rows = np.flatnonzero(cls_of_row == k).astype(np.int32)
+        if rows.size:
+            hist[int(cap)] = int(rows.size)
+            sels.append(rows)
+            kept.append(int(cap))
+    if len(kept) == 1:
+        # one populated class: single contiguous launch at that capacity
+        return BucketPlan(caps=(kept[0],), sel=(None,),
+                          cap_global=cap_global, hist=hist)
+    return BucketPlan(caps=tuple(kept), sel=tuple(sels),
+                      cap_global=cap_global, hist=hist)
+

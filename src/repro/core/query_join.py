@@ -45,7 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import grid as grid_lib
-from repro.core.grid import GridIndex, build_grid_host
+from repro.core.grid import (GridIndex, build_grid_host,
+                             round_up as _round_up)
 from repro.core.stencil import stencil_offsets
 
 _TQ = 128      # query tile rows (kernel grid unit; bucket shapes are multiples)
@@ -65,23 +66,21 @@ def _bump(name: str) -> None:
     TRACE_EVENTS[name] += 1
 
 
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
 def _next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length()
 
 
-def bucket_rows(n_queries: int) -> int:
+def bucket_rows(n_queries: int, tile: int = _TQ) -> int:
     """Static padded row count for a request of ``n_queries`` queries.
 
     Tile-multiple buckets growing by powers of two (128, 256, 512, ...), so
     a service compiles O(log max_batch) executables across all request
-    sizes instead of one per distinct size.
+    sizes instead of one per distinct size. ``tile`` is the kernel grid
+    unit the rows must divide (a capacity class's query tile for the
+    occupancy buckets).
     """
     n = max(int(n_queries), 1)
-    return _TQ * _next_pow2(-(-n // _TQ))
+    return tile * _next_pow2(-(-n // tile))
 
 
 @jax.jit
@@ -92,6 +91,32 @@ def _external_windows(index: GridIndex, offsets: jax.Array,
     n = index.grid_min.shape[0]
     return grid_lib.external_window_descriptors(
         index, offsets, queries_pad[:, :n], q_limit)
+
+
+@jax.jit
+def _window_caps(wc: jax.Array) -> jax.Array:
+    """Per-query candidate capacity: max window length over all offsets.
+
+    The occupancy-bucketing analogue of ``grid.cell_window_caps`` for
+    EXTERNAL queries, whose capacity follows from their own neighborhoods
+    rather than the index's cells."""
+    _bump("window_caps")
+    return wc.max(axis=0)
+
+
+@jax.jit
+def _bucket_select(ws: jax.Array, wc: jax.Array, q_pad: jax.Array,
+                   sel: jax.Array, nsel: jax.Array):
+    """Gather one capacity class's rows out of the request batch.
+
+    ``sel`` is the class's (qp_b,) row selection (padded with 0); rows >=
+    ``nsel`` get zeroed window counts so bucket padding never contributes
+    candidates. Cached per (request, bucket) shape pair."""
+    _bump("bucket_select")
+    ok = jnp.arange(sel.shape[0], dtype=jnp.int32) < nsel
+    ws_b = ws[:, sel]
+    wc_b = jnp.where(ok[None, :], wc[:, sel], 0)
+    return ws_b, wc_b, q_pad[sel]
 
 
 @partial(jax.jit, static_argnames=("c", "tq", "capacity"))
@@ -153,11 +178,24 @@ class QueryJoinResult:
 
 
 class PreparedJoin:
-    """A grid index prepared for serving: offset tables and the padded
-    points copy are built ONCE; every per-request computation dispatches
-    into module-level jitted functions cached per bucket shape."""
+    """A grid index prepared for serving: offset tables, the padded points
+    copy, and the occupancy capacity classes (DESIGN.md S6) are built ONCE;
+    every per-request computation dispatches into module-level jitted
+    functions cached per bucket shape.
+
+    When the index is skewed (global window capacity above the smallest
+    class), each request batch is partitioned by PER-QUERY candidate
+    capacity (max window length over the stencil) and every class launches
+    the fused sweep at ITS static capacity -- the serving-side inheritance
+    of the self-join's occupancy bucketing. Rows with zero candidates are
+    dropped before any launch. The class set and the pow2 ladder of bucket
+    sizes are both known at prepare time, so ``warm()`` can compile every
+    steady-state executable off the request path.
+    """
 
     def __init__(self, index: GridIndex):
+        from repro.core.grid import capacity_classes
+        from repro.kernels import autotune
         from repro.kernels.fused_join import pad_points
 
         self.index = index
@@ -171,15 +209,48 @@ class PreparedJoin:
         self.points_pad = pad_points(index.points_sorted, self.c)
         self.order_np = np.asarray(index.order)
         self.dtype = np.dtype(index.points_sorted.dtype)
-        self.q_start0 = jnp.zeros((), jnp.int32)
+        self.classes = capacity_classes(self.c, _C_ALIGN)
+        # Per-class query tile from the measured table, clamped to the
+        # service's request-padding unit so bucket_rows stays the public
+        # shape contract (multiples of _TQ).
+        self.tiles = {cb: min(autotune.fused_tile(self.n_dims, cb), _TQ)
+                      for cb in self.classes}
+        self.bucketed = len(self.classes) > 1
+        self.q_pos0: dict = {}   # zeros (qp,) per launch shape (external)
 
     def _pad_queries(self, q: np.ndarray) -> tuple[jax.Array, int]:
         from repro.kernels.fused_join import NP_PAD
 
+        # _TQ is always the request padding unit: class tiles are clamped
+        # to _TQ at construction, so every launch divides it
         qp = bucket_rows(q.shape[0])
         q_pad = np.zeros((qp, NP_PAD), self.dtype)
         q_pad[: q.shape[0], : self.n_dims] = q
         return jnp.asarray(q_pad), qp
+
+    def _q_pos(self, qp: int) -> jax.Array:
+        """External queries have no sorted position; the kernel's q_pos
+        prefetch is a cached zeros array per launch shape."""
+        z = self.q_pos0.get(qp)
+        if z is None:
+            z = jnp.zeros((qp,), jnp.int32)
+            self.q_pos0[qp] = z
+        return z
+
+    def _emit(self, emit, hits, counts, base, ws, *, c: int, tq: int,
+              total: int) -> np.ndarray:
+        """One launch's fill: host bitmap compaction or device scatter."""
+        if emit == "host":
+            return _emit_pairs_host(
+                self.order_np, hits, ws, self.index.num_points)
+        if emit == "device":
+            capacity = max(_next_pow2(total), _EMIT_CAP_MIN)
+            keys, vals = _emit_pairs_device(
+                self.index.order, hits, counts, base, ws,
+                c=c, tq=tq, capacity=capacity)
+            return np.stack(
+                [np.asarray(keys)[:total], np.asarray(vals)[:total]], axis=1)
+        raise ValueError(f"unknown emit backend {emit!r}")
 
     def join(self, queries, *, eps: Optional[float] = None,
              return_pairs: bool = True, sort_pairs: bool = True,
@@ -191,6 +262,14 @@ class PreparedJoin:
         (the +/-1-cell stencil only covers the build radius; a larger
         radius needs a rebuilt grid). Counts include an indexed point that
         exactly coincides with a query (external queries have no self).
+
+        On a skewed index the batch is served through the occupancy
+        buckets: per-query capacities from the window descriptors, one
+        fused launch per populated class at its own static capacity,
+        counts scattered back to request rows and pair query-ids remapped.
+        The pair SET matches the single-capacity launch bit-for-bit after
+        sorting (row order across classes differs; ``sort_pairs``
+        canonicalizes).
         """
         from repro.kernels import ops
 
@@ -209,30 +288,54 @@ class PreparedJoin:
         ws, wc = _external_windows(
             self.index, self.offsets, q_dev,
             jnp.asarray(n_queries, jnp.int32))
-        hits, counts, base = ops.fused_join_hits(
-            self.points_pad, q_dev, ws, wc, self.is_zero, self.q_start0,
-            eps, c=self.c, n_real=self.n_dims, unicomp=False, external=True,
-            tq=_TQ, keep_hits=return_pairs, method=method)
-        counts_np = np.asarray(counts)[:n_queries]
-        pairs = None
+        if return_pairs and emit is None:
+            emit = "device" if jax.default_backend() == "tpu" else "host"
+        if not self.bucketed:
+            tile = self.tiles[self.c]
+            hits, counts, base = ops.fused_join_hits(
+                self.points_pad, q_dev, ws, wc, self.is_zero,
+                self._q_pos(qp), eps, c=self.c, n_real=self.n_dims,
+                unicomp=False, external=True, tq=tile,
+                keep_hits=return_pairs, method=method)
+            counts_np = np.asarray(counts)[:n_queries]
+            pairs = None
+            if return_pairs:
+                pairs = self._emit(emit, hits, counts, base, ws, c=self.c,
+                                   tq=tile, total=int(counts_np.sum()))
+        else:
+            caps = np.asarray(_window_caps(wc))[:n_queries]
+            caps_aligned = np.minimum(_round_up(caps, _C_ALIGN), self.c)
+            cls = np.searchsorted(np.asarray(self.classes), caps_aligned)
+            counts_np = np.zeros(n_queries, np.int32)
+            chunks = []
+            for k, cb in enumerate(self.classes):
+                rows = np.flatnonzero((cls == k) & (caps > 0))
+                if not rows.size:
+                    continue   # empty class (or all-miss rows: counts stay 0)
+                tile = self.tiles[cb]
+                qp_b = bucket_rows(rows.size, tile)
+                sel = np.zeros(qp_b, np.int32)
+                sel[:rows.size] = rows
+                ws_b, wc_b, q_b = _bucket_select(
+                    ws, wc, q_dev, jnp.asarray(sel),
+                    jnp.asarray(rows.size, jnp.int32))
+                hits, counts, base = ops.fused_join_hits(
+                    self.points_pad, q_b, ws_b, wc_b, self.is_zero,
+                    self._q_pos(qp_b), eps, c=cb, n_real=self.n_dims,
+                    unicomp=False, external=True, tq=tile,
+                    keep_hits=return_pairs, method=method)
+                counts_b = np.asarray(counts)[:rows.size]
+                counts_np[rows] = counts_b
+                if return_pairs:
+                    p = self._emit(emit, hits, counts, base, ws_b, c=cb,
+                                   tq=tile, total=int(counts_b.sum()))
+                    p[:, 0] = rows[p[:, 0]]    # bucket row -> request row
+                    chunks.append(p)
+            pairs = None
+            if return_pairs:
+                pairs = (np.concatenate(chunks, axis=0) if chunks
+                         else np.empty((0, 2), np.int32))
         if return_pairs:
-            if emit is None:
-                emit = ("device" if jax.default_backend() == "tpu"
-                        else "host")
-            if emit == "host":
-                pairs = _emit_pairs_host(
-                    self.order_np, hits, ws, self.index.num_points)
-            elif emit == "device":
-                total = int(counts_np.sum())
-                capacity = max(_next_pow2(total), _EMIT_CAP_MIN)
-                keys, vals = _emit_pairs_device(
-                    self.index.order, hits, counts, base, ws,
-                    c=self.c, tq=_TQ, capacity=capacity)
-                pairs = np.stack(
-                    [np.asarray(keys)[:total], np.asarray(vals)[:total]],
-                    axis=1)
-            else:
-                raise ValueError(f"unknown emit backend {emit!r}")
             assert pairs.shape[0] == int(counts_np.sum())
             if sort_pairs:
                 pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
@@ -247,6 +350,56 @@ class PreparedJoin:
         """Counts-only fast path (no O(n_off * Q * C) hit buffer)."""
         return self.join(queries, eps=eps, return_pairs=False,
                          method=method).counts
+
+    def warm(self, batch_size: int, *, return_pairs: Optional[bool] = None
+             ) -> int:
+        """Compile every steady-state executable for requests of up to
+        ``batch_size`` queries, OFF the request path.
+
+        The request-level shapes are warmed by dummy joins; on a skewed
+        index the per-class row partition of a future request is data-
+        dependent, but its SHAPE space is not: each class's bucket size is
+        a pow2 tile multiple bounded by the batch, so every (class, size)
+        executable is compiled here and ``assert_no_retrace`` can hold
+        over arbitrary steady-state request mixes. ``return_pairs=None``
+        (default) warms BOTH the pair-serving and counts-only sweeps.
+        Returns the request bucket's padded row count.
+        """
+        from repro.kernels import ops
+        from repro.kernels.fused_join import NP_PAD
+
+        n = max(int(batch_size), 1)
+        variants = ((True, False) if return_pairs is None
+                    else (bool(return_pairs),))
+        dummy = np.zeros((n, self.n_dims), self.dtype)
+        for keep in variants:
+            self.join(dummy, return_pairs=keep)
+        if self.bucketed:
+            qp = bucket_rows(n)
+            ws = jnp.zeros((self.n_offsets, qp), jnp.int32)
+            wc = jnp.zeros((self.n_offsets, qp), jnp.int32)
+            q_pad = jnp.zeros((qp, NP_PAD), self.dtype)
+            for cb in self.classes:
+                tile = self.tiles[cb]
+                s = tile
+                # ladder bound: ANY request landing in this request bucket
+                # (up to qp rows, not just n) may put all its rows in one
+                # class, so warm class launches up to bucket_rows(qp, tile)
+                while s <= bucket_rows(qp, tile):
+                    ws_b, wc_b, q_b = _bucket_select(
+                        ws, wc, q_pad, jnp.zeros((s,), jnp.int32),
+                        jnp.asarray(0, jnp.int32))
+                    for keep in variants:
+                        _, counts, _ = ops.fused_join_hits(
+                            self.points_pad, q_b, ws_b, wc_b, self.is_zero,
+                            self._q_pos(s), self.eps, c=cb,
+                            n_real=self.n_dims, unicomp=False,
+                            external=True, tq=tile, keep_hits=keep)
+                        np.asarray(counts)   # block: compile now, not later
+                    s *= 2
+        # single-class requests pad with _TQ too (class tiles are clamped
+        # to _TQ at construction, so _TQ is always the padding unit)
+        return bucket_rows(n)
 
 
 def prepare(index: GridIndex) -> PreparedJoin:
@@ -292,6 +445,8 @@ def executable_cache_stats() -> dict:
 
     return {
         "external_windows": size(_external_windows),
+        "window_caps": size(_window_caps),
+        "bucket_select": size(_bucket_select),
         "fused_reference": size(fj._fused_join_hits_reference),
         "fused_pallas": size(fj._fused_join_hits_pallas),
         "emit_pairs_device": size(_emit_pairs_device),

@@ -25,6 +25,12 @@ The candidate distance evaluation is the compute hot-spot; it is pluggable
               returns the masked hit set plus per-query counts and the
               per-tile exclusive-scan slot bases, so the fill phase only
               scatters (DESIGN.md S4). No (B, C, n) intermediate exists.
+              Launches are occupancy-bucketed (DESIGN.md S6): query rows
+              partition by candidate-capacity class (grid.occupancy_plan)
+              and each bucket sweeps at ITS static window capacity, so
+              skewed data stops paying the global max_per_cell per row;
+              tiles and the count route come from the measured tables in
+              kernels/autotune.py.
 
 Result emission replaces the paper's atomics with a two-phase
 count -> exclusive-scan -> scatter fill ('jnp'/'pallas'; every distance is
@@ -46,7 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grid import GridIndex, PAD_KEY, build_grid_host, neighbor_rank
+from repro.core.grid import (GridIndex, PAD_KEY, build_grid_host,
+                             neighbor_rank, round_up as _round_up)
 from repro.core.stencil import stencil_offsets
 
 
@@ -58,19 +65,20 @@ class JoinStats:
     cells_visited: int        # non-empty adjacent cells evaluated
     candidates_checked: int   # candidate slots with a real point
     offsets: int              # stencil offsets swept
-    route: str = "dense"      # sweep chosen: 'dense' | 'compact' (auto-routed)
-
-
-def _strides(dims: jax.Array) -> jax.Array:
-    """Row-major strides s_j = prod_{k>j} dims_k, so key(c+o)=key(c)+o.s."""
-    rev = jnp.cumprod(dims[::-1])          # d_{n-1}, d_{n-1}d_{n-2}, ...
-    return jnp.concatenate([rev[-2::-1], jnp.ones((1,), dims.dtype)])
+    # sweep chosen by the routing table (kernels/autotune.py):
+    #   'dense'   occupancy-bucketed fused sweep (full window per probe)
+    #   'compact' per-offset live-query packing before the gather (TPU)
+    #   'sparse'  probe-compacted counter (empty-neighbor regime, off-TPU)
+    #   'jnp'     reference dense counter (fused plan measured slower)
+    route: str = "dense"
 
 
 def _offset_tables(index: GridIndex, unicomp: bool):
     """Static offset list -> (deltas (n_off,), is_zero (n_off,)) device arrays."""
+    from repro.core.grid import row_major_strides
+
     offs = stencil_offsets(index.n_dims, unicomp)          # (n_off, n) np
-    deltas = jnp.asarray(offs) @ _strides(index.dims)      # (n_off,) int64
+    deltas = jnp.asarray(offs) @ row_major_strides(index.dims)  # (n_off,)
     is_zero = jnp.asarray(np.all(offs == 0, axis=1))
     return deltas, is_zero
 
@@ -257,19 +265,27 @@ def _resolve_index(points, eps, index: Optional[GridIndex]) -> GridIndex:
     return build_grid_host(np.asarray(points), float(eps))
 
 
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
 # ---------------------------------------------------------------------------
 # Fused path (distance_impl='fused'): single-pass count -> fill around
 # kernels/fused_join.py. One kernel launch sweeps every stencil offset; the
 # fill reuses the count pass's hit set / per-tile totals, so each candidate
 # distance is evaluated exactly once and the (B, C, n) gathered intermediate
 # of the unfused sweep never exists (DESIGN.md S4).
+#
+# Occupancy bucketing (DESIGN.md S6): instead of ONE launch padded to the
+# global max_per_cell, query rows are partitioned by candidate-capacity
+# class (grid.occupancy_plan) and each bucket launches with its own static
+# window capacity -- on skewed data most rows live in the small classes, so
+# the padding-lane distance evaluations of the single-capacity sweep
+# disappear. Per-bucket counts/slot bases compose back into the same
+# single-pass count -> fill contract; the query tile per (backend, n_dims,
+# capacity) class comes from the measured table in kernels/autotune.py.
 # ---------------------------------------------------------------------------
 
-_FUSED_TQ = 128  # query tile rows (kernel grid unit; batch sizes round up)
+def _fused_tile(index: GridIndex, c: int) -> int:
+    from repro.kernels import autotune
+
+    return autotune.fused_tile(index.n_dims, c)
 
 
 @partial(jax.jit, static_argnames=("qp", "q_limit"))
@@ -291,51 +307,93 @@ def _fused_prep(index: GridIndex, points_pad: jax.Array, deltas: jax.Array,
         wc = jnp.where(jnp.arange(qp, dtype=jnp.int32) < q_limit, wc, 0)
     q_batch = jax.lax.dynamic_slice(
         points_pad, (q_start, jnp.asarray(0, q_start.dtype)), (qp, NP_PAD))
-    return ws, wc, q_batch
+    q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(qp, dtype=jnp.int32)
+    return ws, wc, q_batch, q_pos
+
+
+@partial(jax.jit, static_argnames=("qp",))
+def _fused_bucket_prep(index: GridIndex, points_pad: jax.Array,
+                       deltas: jax.Array, sel: jax.Array, nsel: jax.Array,
+                       *, qp: int):
+    """Window descriptors + gathered query rows for one occupancy bucket.
+
+    ``sel`` is the bucket's (qp,) sorted-position selection (ascending
+    A-order, padded with any in-range value); rows >= ``nsel`` are padding
+    and get zeroed windows. The candidate windows stay contiguous runs of
+    ``points_sorted`` -- only the QUERY side is permuted.
+    """
+    from repro.core.grid import window_descriptors_at
+
+    q_ok = jnp.arange(qp, dtype=jnp.int32) < nsel
+    q_pos = jnp.minimum(sel.astype(jnp.int32), index.num_points - 1)
+    ws, wc = window_descriptors_at(index, deltas, q_pos, q_ok)
+    q_batch = points_pad[q_pos]
+    return ws, wc, q_batch, q_pos
 
 
 def _fused_pad(index: GridIndex, *, q_size: int, c: int,
-               q_start_max: int = 0):
+               q_start_max: int = 0, tq: int = 128):
     """One padded-points copy shared by every batch of a sweep. The tail
     covers the C-slot window reads and the worst batch's rounded-up query
     slice (``q_start_max`` = largest batch origin), so the per-batch
     dynamic_slice never clamps."""
     from repro.kernels.fused_join import pad_points
 
-    qp = _round_up(max(q_size, 1), _FUSED_TQ)
+    qp = _round_up(max(q_size, 1), tq)
     tail = max(c, q_start_max + qp - index.num_points)
     return pad_points(index.points_sorted, tail), qp
 
 
 def _fused_batch_run(index: GridIndex, points_pad, deltas, is_zero, q_start,
                      *, qp: int, q_size: int, c: int, unicomp: bool,
-                     keep_hits: bool, method: Optional[str] = None):
-    """One query batch through the fused kernel: descriptors -> sweep."""
+                     keep_hits: bool, method: Optional[str] = None,
+                     tq: int = 128):
+    """One contiguous query batch through the fused kernel."""
     from repro.kernels import ops
 
-    ws, wc, q_batch = _fused_prep(
+    ws, wc, q_batch, q_pos = _fused_prep(
         index, points_pad, deltas, jnp.asarray(q_start, jnp.int32), qp=qp,
         q_limit=max(q_size, 1))
     hits, counts, base = ops.fused_join_hits(
-        points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32),
-        jnp.asarray(q_start, jnp.int32), index.eps,
-        c=c, n_real=index.n_dims, unicomp=unicomp, tq=_FUSED_TQ,
+        points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
+        index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
         keep_hits=keep_hits, method=method)
-    return ws, wc, hits, counts, base
+    return ws, wc, hits, counts, base, q_pos
+
+
+def _fused_bucket_launch(index: GridIndex, points_pad, deltas, is_zero,
+                         sel: np.ndarray, *, qp: int, c: int, unicomp: bool,
+                         keep_hits: bool, method: Optional[str] = None,
+                         tq: int = 128):
+    """One occupancy bucket through the fused kernel at ITS capacity."""
+    from repro.kernels import ops
+
+    nsel = sel.shape[0]
+    sel_pad = np.zeros(qp, np.int32)
+    sel_pad[:nsel] = sel
+    ws, wc, q_batch, q_pos = _fused_bucket_prep(
+        index, points_pad, deltas, jnp.asarray(sel_pad),
+        jnp.asarray(nsel, jnp.int32), qp=qp)
+    hits, counts, base = ops.fused_join_hits(
+        points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
+        index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
+        keep_hits=keep_hits, method=method)
+    return ws, wc, hits, counts, base, q_pos
 
 
 @partial(jax.jit, static_argnames=("c", "tq", "unicomp", "capacity"))
 def _emit_from_hits(index: GridIndex, hits, counts, slot_base, win_start,
-                    q_start, *, c: int, tq: int, unicomp: bool,
+                    q_pos, *, c: int, tq: int, unicomp: bool,
                     capacity: int):
     """Fill phase of the fused path: scatter pairs from the count pass's hit
     set. No distances here -- positions come from the window descriptors and
     output slots from the kernel's per-tile exclusive scan (``slot_base``)
-    offset by the exclusive scan of the per-tile totals."""
+    offset by the exclusive scan of the per-tile totals. ``q_pos`` is the
+    launch's per-row sorted-position array (contiguous batch or occupancy
+    bucket selection)."""
     n_off, qp, _ = hits.shape
     npts = index.num_points
     orig = index.order
-    q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(qp, dtype=jnp.int32)
     q_pos_c = jnp.minimum(q_pos, npts - 1)
     slots = jnp.arange(c, dtype=jnp.int32)
     cand_pos = win_start[:, :, None] + slots[None, None, :]
@@ -373,21 +431,23 @@ def _next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length()
 
 
-def _emit_from_hits_host(order: np.ndarray, hits, win_start, q_start: int,
-                         npts: int, unicomp: bool) -> np.ndarray:
+def _emit_from_hits_host(order: np.ndarray, hits, win_start,
+                         q_pos: np.ndarray, npts: int,
+                         unicomp: bool) -> np.ndarray:
     """Host-side fill from the count pass's hit set (no distances, no device
     scatter). The result is host-bound anyway (the paper copies each batch
     off-device, SV-A), and compacting the (n_off, Q, C) hit bitmap with one
     ``np.nonzero`` beats an XLA scatter of mostly-dropped updates by orders
     of magnitude off-TPU; on TPU the device path ``_emit_from_hits`` keeps
-    the scatter close to the data."""
+    the scatter close to the data. ``q_pos`` maps launch rows to sorted
+    positions (contiguous batch or occupancy bucket selection)."""
     # query-major like the device emit, so both backends produce the SAME
     # row order (per query: offsets in sweep order, slots in window order)
     h = np.asarray(hits).astype(bool).transpose(1, 0, 2)   # (Q, n_off, C)
     ws = np.asarray(win_start)
     q, off, s = np.nonzero(h)
     cand_pos = ws[off, q] + s
-    qid = order[np.minimum(q_start + q, npts - 1)]
+    qid = order[np.minimum(q_pos[q], npts - 1)]
     cid = order[cand_pos]
     if unicomp:
         out = np.empty((2 * qid.shape[0], 2), np.int32)
@@ -400,62 +460,105 @@ def _emit_from_hits_host(order: np.ndarray, hits, win_start, q_start: int,
     return out
 
 
+def _fused_launches(index: GridIndex, *, n_batches: int,
+                    bucketed: Optional[bool]):
+    """The launch schedule of one fused sweep: occupancy buckets (each
+    chunked to the batching bound), or contiguous batches when the plan is
+    a single class. Returns (launches, points_pad, c_max) where every
+    launch is (sel|None, q_start, q_size, qp, c, tile)."""
+    from repro.core.grid import occupancy_plan
+
+    npts = index.num_points
+    c_glob = _round_up(max(int(index.max_per_cell), 1), 8)
+    n_batches = max(int(n_batches), 1)
+    batch_rows = -(-max(npts, 1) // n_batches)  # ceil
+    if bucketed is None:
+        bucketed = True
+    plan = occupancy_plan(index) if bucketed else None
+    launches = []
+    if plan is None or plan.sel[0] is None:
+        cap = c_glob if plan is None else plan.caps[0]
+        tile = _fused_tile(index, cap)
+        points_pad, qp = _fused_pad(
+            index, q_size=batch_rows, c=c_glob, tq=tile,
+            q_start_max=(n_batches - 1) * batch_rows)
+        for b in range(n_batches):
+            q_size = min(batch_rows, npts - b * batch_rows)
+            launches.append((None, b * batch_rows, q_size, qp, cap, tile))
+        return launches, points_pad, c_glob
+    points_pad, _ = _fused_pad(index, q_size=1, c=c_glob)
+    for cap, sel in zip(plan.caps, plan.sel):
+        tile = _fused_tile(index, cap)
+        for i in range(0, sel.shape[0], batch_rows):
+            piece = sel[i:i + batch_rows]
+            qp = _round_up(piece.shape[0], tile)
+            launches.append((piece, 0, piece.shape[0], qp, cap, tile))
+    return launches, points_pad, c_glob
+
+
 def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
                      n_batches: int = 1, method: Optional[str] = None,
-                     emit: Optional[str] = None):
+                     emit: Optional[str] = None,
+                     bucketed: Optional[bool] = None):
     """Single-pass count -> fill driver for distance_impl='fused'.
 
-    Per batch: one fused sweep produces the hit set + per-query counts; the
-    exact result size follows from the counts (sync point), and the fill is
-    a pure compaction/scatter over the same hit set -- no second distance
-    pass. ``emit`` selects the fill backend: 'device' (scatter sized by the
-    counts, with the kernel's per-tile slot bases; default on TPU) or 'host'
-    (np.nonzero compaction of the hit bitmap; default elsewhere). Device
-    capacities round to powers of two across batches so the emit scatter
-    compiles O(log) times, not per batch.
+    Per launch (an occupancy bucket chunk, or a contiguous batch when the
+    capacity plan collapses to one class): one fused sweep produces the hit
+    set + per-query counts; the exact result size follows from the counts
+    (sync point), and the fill is a pure compaction/scatter over the same
+    hit set -- no second distance pass. ``emit`` selects the fill backend:
+    'device' (scatter sized by the counts, with the kernel's per-tile slot
+    bases; default on TPU) or 'host' (np.nonzero compaction of the hit
+    bitmap; default elsewhere). Device capacities round to powers of two
+    across launches so the emit scatter compiles O(log) times, not per
+    launch. Bucketed and single-capacity schedules emit the same pair SET
+    (row order differs across buckets; ``sort_result`` canonicalizes).
     """
     if emit is None:
         emit = "device" if jax.default_backend() == "tpu" else "host"
     deltas, is_zero = _offset_tables(index, unicomp)
-    c = _round_up(max(int(index.max_per_cell), 1), 8)
     npts = index.num_points
     order_np = np.asarray(index.order)
-    n_batches = max(int(n_batches), 1)
-    q_size = -(-npts // n_batches)  # ceil
     mult = 2 if unicomp else 1
-    points_pad, qp = _fused_pad(index, q_size=q_size, c=c,
-                                q_start_max=(n_batches - 1) * q_size)
+    launches, points_pad, _ = _fused_launches(
+        index, n_batches=n_batches, bucketed=bucketed)
+    single = len(launches) == 1
 
     def finish(run):
-        """Drain one batch: blocks on ITS buffers only, so the next batch's
-        kernel (already dispatched, JAX async) overlaps the transfer --
-        the paper's SV-A compute/copy overlap, kept on the fused path."""
-        q_start, ws, hits, counts, base = run
+        """Drain one launch: blocks on ITS buffers only, so the next
+        launch's kernel (already dispatched, JAX async) overlaps the
+        transfer -- the paper's SV-A compute/copy overlap, kept on the
+        fused path."""
+        ws, hits, counts, base, q_pos, cap, tile = run
         if emit == "host":
             pairs = _emit_from_hits_host(
-                order_np, hits, ws, q_start, npts, unicomp)
+                order_np, hits, ws, np.asarray(q_pos), npts, unicomp)
             assert pairs.shape[0] == mult * int(counts.sum(dtype=jnp.int64))
             return pairs
         ordered = mult * int(counts.sum(dtype=jnp.int64))
-        capacity = max(ordered if n_batches == 1 else _next_pow2(ordered), 1)
+        capacity = max(ordered if single else _next_pow2(ordered), 1)
         keys, vals, cnt = _emit_from_hits(
-            index, hits, counts, base, ws, jnp.asarray(q_start, jnp.int32),
-            c=c, tq=_FUSED_TQ, unicomp=unicomp, capacity=capacity)
+            index, hits, counts, base, ws, q_pos,
+            c=cap, tq=tile, unicomp=unicomp, capacity=capacity)
         assert int(cnt) == ordered, (int(cnt), ordered)
         return np.stack(
             [np.asarray(keys)[:ordered], np.asarray(vals)[:ordered]], axis=1)
 
     chunks = []
     prev = None
-    for b in range(n_batches):
-        q_start = b * q_size
-        ws, _, hits, counts, base = _fused_batch_run(
-            index, points_pad, deltas, is_zero, q_start, qp=qp,
-            q_size=q_size, c=c, unicomp=unicomp, keep_hits=True,
-            method=method)
+    for sel, q_start, q_size, qp, cap, tile in launches:
+        if sel is None:
+            ws, _, hits, counts, base, q_pos = _fused_batch_run(
+                index, points_pad, deltas, is_zero, q_start, qp=qp,
+                q_size=q_size, c=cap, unicomp=unicomp, keep_hits=True,
+                method=method, tq=tile)
+        else:
+            ws, _, hits, counts, base, q_pos = _fused_bucket_launch(
+                index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
+                unicomp=unicomp, keep_hits=True, method=method, tq=tile)
         if prev is not None:
             chunks.append(finish(prev))
-        prev = (q_start, ws, hits, counts, base)
+        prev = (ws, hits, counts, base, q_pos, cap, tile)
     if prev is not None:
         chunks.append(finish(prev))
     out = (np.concatenate(chunks, axis=0) if chunks
@@ -467,21 +570,42 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
 
 def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
                            query_batch: Optional[int] = None,
-                           method: Optional[str] = None) -> JoinStats:
-    """Count-only fused sweep (keep_hits=False: no O(n_off*Q*C) buffer)."""
+                           method: Optional[str] = None,
+                           bucketed: Optional[bool] = None) -> JoinStats:
+    """Count-only fused sweep (keep_hits=False: no O(n_off*Q*C) buffer).
+
+    Occupancy-bucketed by default; each bucket launch counts at ITS window
+    capacity and the per-launch totals/work counters sum to exactly the
+    single-capacity sweep's (every query row is in exactly one bucket).
+    An explicit ``query_batch`` keeps the contiguous batched sweep (the
+    paper's SV-A memory bound) at the global capacity.
+    """
     deltas, is_zero = _offset_tables(index, unicomp)
-    c = _round_up(max(int(index.max_per_cell), 1), 8)
     npts = index.num_points
-    q_size = int(query_batch) if query_batch else npts
     mult = 2 if unicomp else 1
-    points_pad, qp = _fused_pad(index, q_size=q_size, c=c,
-                                q_start_max=((npts - 1) // q_size) * q_size)
+    if query_batch:
+        c = _round_up(max(int(index.max_per_cell), 1), 8)
+        tile = _fused_tile(index, c)
+        q_size = int(query_batch)
+        points_pad, qp = _fused_pad(
+            index, q_size=q_size, c=c, tq=tile,
+            q_start_max=((npts - 1) // q_size) * q_size)
+        launches = [(None, q_start, min(q_size, npts - q_start), qp, c, tile)
+                    for q_start in range(0, npts, q_size)]
+    else:
+        launches, points_pad, _ = _fused_launches(
+            index, n_batches=1, bucketed=bucketed)
     total = cells = cands = 0
-    for q_start in range(0, npts, q_size):
-        _, wc, _, counts, _ = _fused_batch_run(
-            index, points_pad, deltas, is_zero, q_start, qp=qp,
-            q_size=q_size, c=c, unicomp=unicomp, keep_hits=False,
-            method=method)
+    for sel, q_start, q_size, qp, cap, tile in launches:
+        if sel is None:
+            _, wc, _, counts, _, _ = _fused_batch_run(
+                index, points_pad, deltas, is_zero, q_start, qp=qp,
+                q_size=q_size, c=cap, unicomp=unicomp, keep_hits=False,
+                method=method, tq=tile)
+        else:
+            _, wc, _, counts, _, _ = _fused_bucket_launch(
+                index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
+                unicomp=unicomp, keep_hits=False, method=method, tq=tile)
         total += mult * int(counts.sum(dtype=jnp.int64))
         cells += int((wc > 0).sum())
         cands += int(wc.sum(dtype=jnp.int64))
@@ -494,44 +618,227 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
     )
 
 
-def _fused_count_route(index: GridIndex, n_off: int,
-                       backend: Optional[str] = None) -> str:
-    """Density heuristic: dense fused sweep vs. empty-neighbor compaction.
+@partial(jax.jit, static_argnames=("qp",))
+def _rank_plane_search(keys, rank_arr, deltas, *, qp: int):
+    """(n_off, qp) rank-in-B of every (query, offset) probe; -1 = miss.
 
-    The dense sweep gathers a full C-slot window for every (query, offset)
-    probe; in the empty-neighbor regime (high dimensionality, sparse grid)
-    >90% of probes miss and that padding traffic makes fused count ~0.6x of
-    jnp (EXPERIMENTS.md SPerf, uniform-6d). The compacted counter packs
-    live queries before the gather, but pays an O(n_off * |D| log |D|)
-    packing sort -- only worth it when the window DMA traffic it saves is
-    the binding constraint, i.e. on the TPU kernel path. Off-TPU the
-    reference lowering's dense sweep is cache-resident and the packing
-    sort dominates instead: measured on the bench 6-D workloads, compact
-    LOSES to dense everywhere (EXPERIMENTS.md SServe note), so auto-routing
-    stays dense there and ``route='compact'`` remains an explicit override.
-
-    On TPU, cheap proxies from the host grid:
-
-      occupancy = num_cells / prod(dims)  ~ P(random adjacent cell is live)
-      n_off * occupancy                   ~ expected live probes per query
-      n_off * max_per_cell                ~ dense window slots per query
-
-    Route compact when expected live probes are few (< 3) and the dense
-    slot traffic is large enough (>= 256) to amortize the packing sort.
+    Searchsorted formulation (any key-space size): one batched binary
+    search over the probe plane and NOTHING else -- window start/count
+    gathers are deferred to the packed live probes, so the mostly-dead
+    plane never materializes beyond one int32 rank array.
     """
-    if backend is None:
-        backend = jax.default_backend()
-    if backend != "tpu":
-        return "dense"
+    npts = keys.shape[0]
+    q_pos = jnp.arange(qp, dtype=jnp.int32)
+    q_ok = q_pos < npts
+    own = keys[rank_arr[jnp.minimum(q_pos, npts - 1)]]
+    qk = own[None, :] + deltas[:, None]
+    pos = jnp.minimum(jnp.searchsorted(keys, qk).astype(jnp.int32), npts - 1)
+    hit = (keys[pos] == qk) & q_ok[None, :]
+    return jnp.where(hit, pos, -1)
+
+
+@partial(jax.jit, static_argnames=("qp",))
+def _rank_plane_table(table, cell_keys, rank_arr, deltas32, *, qp: int):
+    """Rank plane via a dense key -> rank lookup table: a pure GATHER.
+
+    The paper binary-searches B precisely to avoid O(prod(dims)) memory;
+    when the key space is small (fine low-volume grids, the uniform-6d
+    bench regime) a dense int32 table costs a few MB and replaces the
+    probe plane's dominant cost -- 3.7M binary searches on uniform-6d --
+    with one gather (measured ~80x faster on this container).
+    """
+    vol = table.shape[0]
+    npts = rank_arr.shape[0]
+    q_pos = jnp.arange(qp, dtype=jnp.int32)
+    own = cell_keys[rank_arr[jnp.minimum(q_pos, npts - 1)]].astype(jnp.int32)
+    own = jnp.where(q_pos < npts, own, -(1 << 30))
+    qk = own[None, :] + deltas32[:, None]
+    ok = (qk >= 0) & (qk < vol)
+    return jnp.where(ok, table[jnp.clip(qk, 0, vol - 1)], -1)
+
+
+# Dense-lookup budget: prod(dims) at or below this many cells (x4 bytes)
+# buys the table path; beyond it, binary search (the paper's trade) wins.
+_LOOKUP_MAX_CELLS = 1 << 23   # 32 MB
+
+
+def _sparse_lookup(index: GridIndex):
+    """Cached per index: ('table', dense key->rank table) when the key
+    space fits the budget, else ('keys', int32-or-int64 B).
+
+    The int32 downcast of B applies when every probe key ``own + delta``
+    fits (prod(dims) < 2^30): the PAD_KEY sentinel maps to int32 max,
+    preserving sort order and never matching a probe; int32 halves the
+    binary search's bandwidth.
+    """
+    from repro.core.grid import index_cached
+
+    def build():
+        volume = float(np.prod(np.asarray(index.dims, dtype=np.float64)))
+        ncells = int(index.num_cells)
+        if volume <= _LOOKUP_MAX_CELLS:
+            keys = np.asarray(index.cell_keys[:ncells])
+            table = np.full(int(volume), -1, np.int32)
+            # a padded build (build_grid_with_geometry valid=...) carries a
+            # sentinel cell with key == prod(dims) (== table length), and
+            # out-of-geometry points can produce keys outside [0, volume);
+            # keep those cells out of the scatter -- probes to them miss,
+            # and padding points were never reachable as candidates anyway
+            ok = (keys >= 0) & (keys < int(volume))
+            table[keys[ok]] = np.arange(ncells, dtype=np.int32)[ok]
+            return ("table", jnp.asarray(table))
+        if volume < float(1 << 30):
+            k = np.asarray(index.cell_keys).copy()
+            k[k == np.iinfo(np.int64).max] = np.iinfo(np.int32).max
+            return ("keys", jnp.asarray(k.astype(np.int32)))
+        return ("keys", index.cell_keys)
+
+    return index_cached(index, "sparse_lookup", build)
+
+
+@partial(jax.jit, static_argnames=("c", "unicomp"))
+def _count_probes(points_sorted, eps, cell_start, cell_count, p_nbr,
+                  p_qpos, p_zero, *, c: int, unicomp: bool):
+    """Distance evaluation over a PACKED probe list (live windows only).
+
+    Probes carry the neighbor cell's RANK; the window start/count gathers
+    happen here, over the packed list, not over the full plane. Padding
+    probes carry rank -1 -> zero-length windows."""
+    npts = points_sorted.shape[0]
+    nbr_c = jnp.maximum(p_nbr, 0)
+    start = cell_start[nbr_c]
+    cnt = jnp.where(p_nbr >= 0, cell_count[nbr_c], 0)
+    slots = jnp.arange(c, dtype=jnp.int32)
+    cand_pos = jnp.minimum(start[:, None] + slots[None, :], npts - 1)
+    valid = slots[None, :] < cnt[:, None]
+    q = points_sorted[jnp.minimum(p_qpos, npts - 1)]
+    d2 = jnp.zeros(cand_pos.shape, points_sorted.dtype)
+    for dim in range(points_sorted.shape[1]):
+        cd = jnp.take(points_sorted[:, dim], cand_pos)
+        d2 = d2 + (q[:, dim][:, None] - cd) ** 2
+    hit = (d2 <= eps * eps) & valid
+    if unicomp:
+        tri = cand_pos > p_qpos[:, None]
+        hit = hit & jnp.where(p_zero[:, None] != 0, tri, True)
+    else:
+        hit = hit & (cand_pos != p_qpos[:, None])
+    return hit.sum(dtype=jnp.int64)
+
+
+def _self_join_count_sparse(index: GridIndex, *, unicomp: bool,
+                            method: Optional[str] = None) -> JoinStats:
+    """Probe-compacted counter for the empty-neighbor regime (route
+    'sparse').
+
+    In high dimensionality >90% of (query, offset) probes hit an EMPTY
+    neighbor cell, yet the dense sweep still evaluates a full capacity-C
+    window of padding for each -- the uniform-6d regression (fused count
+    0.67x of jnp before this route existed). Three moves make this route
+    beat even the jnp scan there: the descriptor pass shrinks to a bare
+    rank plane (a dense key->rank lookup table when prod(dims) fits the
+    memory budget -- one gather instead of 3.7M binary searches -- else one
+    batched searchsorted with int32 keys when they fit), the plane is
+    compacted ONCE on the host (``np.nonzero`` -- the count is host-driven
+    anyway), and distances + window gathers run only over the packed live
+    probes, so eval work scales with actual candidate volume. Work
+    counters match the dense sweep's by construction (same probe plane).
+    Unlike 'compact' (per-offset argsort packing, a TPU-only win), the
+    single flat compaction amortizes across the whole stencil.
+    """
+    del method  # probe evaluation is a jnp op; no kernel variant yet
+    deltas, is_zero = _offset_tables(index, unicomp)
+    c = _round_up(max(int(index.max_per_cell), 1), 8)
+    npts = index.num_points
+    mult = 2 if unicomp else 1
+    qp = _round_up(max(npts, 1), 128)
+    kind, lookup = _sparse_lookup(index)
+    if kind == "table":
+        nbr = np.asarray(_rank_plane_table(
+            lookup, index.cell_keys, index.point_cell_rank,
+            deltas.astype(jnp.int32), qp=qp))
+    else:
+        nbr = np.asarray(_rank_plane_search(
+            lookup, index.point_cell_rank, deltas.astype(lookup.dtype),
+            qp=qp))
+    off, q = np.nonzero(nbr >= 0)
+    n_live = off.shape[0]
+    cc_np = np.asarray(index.cell_count)
+    total = 0
+    cands = 0
+    if n_live:
+        is_zero_np = np.asarray(is_zero).astype(np.int32)
+        chunk = 1 << 17   # bounds the (P, C) eval; pow2 pads bound compiles
+        for i in range(0, n_live, chunk):
+            o_c, q_c = off[i:i + chunk], q[i:i + chunk]
+            m = o_c.shape[0]
+            cap = min(chunk, max(_next_pow2(m), 128))
+            p_nbr = np.full(cap, -1, np.int32)
+            p_qpos = np.zeros(cap, np.int32)
+            p_zero = np.zeros(cap, np.int32)
+            p_nbr[:m] = nbr[o_c, q_c]
+            p_qpos[:m] = q_c
+            p_zero[:m] = is_zero_np[o_c]
+            cands += int(cc_np[p_nbr[:m]].sum(dtype=np.int64))
+            total += int(_count_probes(
+                index.points_sorted, index.eps, index.cell_start,
+                index.cell_count, jnp.asarray(p_nbr), jnp.asarray(p_qpos),
+                jnp.asarray(p_zero), c=c, unicomp=unicomp))
+    return JoinStats(
+        total_pairs=mult * total,
+        cells_visited=n_live,
+        candidates_checked=cands,
+        offsets=int(deltas.shape[0]),
+        route="sparse",
+    )
+
+
+def _route_features(index: GridIndex, deltas) -> dict:
+    """Cheap host-side workload features for the routing table.
+
+    ``occupancy`` is the global live-cell fraction (the PR-2 proxy, kept
+    for the TPU rule); ``live_frac`` is the SAMPLED per-query live-probe
+    fraction under the actual stencil -- occupancy is a poor estimator on
+    clustered data, where a query's probes concentrate in its own (live)
+    neighborhood.
+    """
     ncells = max(int(index.num_cells), 1)
     # float prod: a fine 6-D grid overflows int64, and the heuristic only
     # needs a ratio
     volume = max(float(np.prod(np.asarray(index.dims, dtype=np.float64))), 1.0)
     occupancy = ncells / volume
     c = max(int(index.max_per_cell), 1)
-    if n_off * occupancy < 3.0 and n_off * c >= 256:
-        return "compact"
-    return "dense"
+    npts = index.num_points
+    live_frac = 0.0
+    if npts and ncells:
+        keys = np.asarray(index.cell_keys[:ncells])
+        rank = np.asarray(index.point_cell_rank)
+        sample = rank[::-(-npts // 1024)][:1024]   # ceil stride: spans all
+                                                   # of sorted key order
+        probe = keys[sample][None, :] + np.asarray(deltas)[:, None]
+        pos = np.minimum(np.searchsorted(keys, probe), ncells - 1)
+        live_frac = float((keys[pos] == probe).mean())
+    return {"occupancy": occupancy, "live_frac": live_frac, "c": c}
+
+
+def _fused_count_route(index: GridIndex, n_off: int,
+                       backend: Optional[str] = None, *,
+                       unicomp: bool = True) -> str:
+    """Heuristic route for the fused counter (no cache consulted).
+
+    The measured routing table (kernels/autotune.py, consulted by
+    ``self_join_count``) supersedes this wherever it has been populated;
+    this function is the deterministic fallback and the unit-testable
+    regime detector. See ``autotune.route_heuristic`` for the rules.
+    """
+    from repro.kernels import autotune
+
+    deltas, _ = _offset_tables(index, unicomp)
+    feats = _route_features(index, deltas)
+    if backend is None:
+        backend = jax.default_backend()
+    return autotune.route_heuristic(
+        backend, index.n_dims, n_off, feats["c"], feats["occupancy"],
+        feats["live_frac"])
 
 
 @partial(
@@ -635,12 +942,13 @@ def self_join_count_compact(
     cap_q = _round_up(compact_cap(index, unicomp), 128)
     # o = 0 dense pass (every query is live in its own cell)
     if distance_impl == "fused":
+        tile = _fused_tile(index, max_per_cell)
         points_pad, qp = _fused_pad(
-            index, q_size=index.num_points, c=max_per_cell)
-        _, wc0, _, counts0, _ = _fused_batch_run(
+            index, q_size=index.num_points, c=max_per_cell, tq=tile)
+        _, wc0, _, counts0, _, _ = _fused_batch_run(
             index, points_pad, deltas[:1], is_zero[:1], 0, qp=qp,
             q_size=index.num_points, c=max_per_cell, unicomp=unicomp,
-            keep_hits=False)
+            keep_hits=False, tq=tile)
         t0 = (2 if unicomp else 1) * int(counts0.sum(dtype=jnp.int64))
         k0 = int(wc0.sum(dtype=jnp.int64))
     else:
@@ -670,33 +978,51 @@ def self_join_count(
     distance_impl: str = "jnp",
     query_batch: Optional[int] = None,
     route: Optional[str] = None,
+    bucketed: Optional[bool] = None,
 ) -> JoinStats:
     """Total ordered-pair count + work counters (no materialized result).
 
-    With ``distance_impl='fused'`` the sweep is auto-routed: the dense
-    fused sweep by default, the empty-neighbor compacted counter
-    (``self_join_count_compact``) when the density heuristic
-    ``_fused_count_route`` detects the sparse/high-dimensional regime
-    where dense window gathers are mostly padding. The chosen path is
-    logged in ``JoinStats.route``; pass ``route='dense'``/``'compact'`` to
-    override. Compact reports no per-cell visit counter (cells_visited=0)
-    and checks fewer candidate slots by construction.
+    With ``distance_impl='fused'`` the sweep is auto-routed through the
+    measured routing table (kernels/autotune.py): a cached measured winner
+    for the workload class when one exists, a timed pass over the live
+    candidates when tuning is enabled ($REPRO_AUTOTUNE=1), the occupancy
+    heuristic otherwise. Routes: 'dense' (occupancy-bucketed fused sweep),
+    'compact' (per-offset live-query packing, TPU), 'sparse' (probe-
+    compacted counter for the empty-neighbor regime), 'jnp' (reference
+    dense counter -- the floor: routing can never pin a fused plan that
+    measures slower than the baseline). The chosen path is logged in
+    ``JoinStats.route``; pass ``route=`` to override. 'dense'/'sparse'/
+    'jnp' report identical work counters; 'compact' reports no per-cell
+    visit counter (cells_visited=0) and checks fewer candidate slots by
+    construction. ``bucketed=False`` forces the single-capacity dense
+    sweep (parity/debug knob).
     """
-    if route not in (None, "dense", "compact"):
-        raise ValueError(f"unknown route {route!r}; "
-                         f"expected None, 'dense', or 'compact'")
+    if route not in (None, "dense", "compact", "sparse", "jnp"):
+        raise ValueError(f"unknown route {route!r}; expected None, 'dense', "
+                         f"'compact', 'sparse', or 'jnp'")
     index = _resolve_index(points, eps, index)
+    route_label = "dense"
     if distance_impl == "fused":
         if route is None:
-            n_off = stencil_offsets(index.n_dims, unicomp).shape[0]
-            route = ("dense" if query_batch is not None
-                     else _fused_count_route(index, n_off))
+            if query_batch is not None:
+                route = "dense"
+            else:
+                route = _auto_route(index, unicomp=unicomp,
+                                    bucketed=bucketed)
         if route == "compact":
             return self_join_count_compact(
                 points, eps, unicomp=unicomp, index=index,
                 distance_impl="fused")
-        return _self_join_count_fused(
-            index, unicomp=unicomp, query_batch=query_batch)
+        if route == "sparse":
+            return _self_join_count_sparse(index, unicomp=unicomp)
+        if route == "dense":
+            return _self_join_count_fused(
+                index, unicomp=unicomp, query_batch=query_batch,
+                bucketed=bucketed)
+        # route == 'jnp': the fused plan measured slower than the reference
+        # dense counter for this workload class -- run that, log the route.
+        distance_impl = "jnp"
+        route_label = "jnp"
     npts = index.num_points
     deltas, is_zero = _offset_tables(index, unicomp)
     max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
@@ -721,7 +1047,52 @@ def self_join_count(
         cells_visited=cells,
         candidates_checked=cands,
         offsets=int(deltas.shape[0]),
+        route=route_label,
     )
+
+
+def _auto_route(index: GridIndex, *, unicomp: bool,
+                bucketed: Optional[bool] = None) -> str:
+    """Consult the routing table; measure the live candidates if tuning is
+    enabled; fall back to the occupancy heuristic. The decision is a pure
+    function of the index + sweep mode, so it is cached per index object:
+    steady-state fused counts pay a dict lookup, not the sampled feature
+    probe."""
+    from repro.core.grid import index_cached
+
+    return index_cached(
+        index, f"route/{unicomp}/{bucketed}",
+        lambda: _auto_route_uncached(index, unicomp=unicomp,
+                                     bucketed=bucketed))
+
+
+def _auto_route_uncached(index: GridIndex, *, unicomp: bool,
+                         bucketed: Optional[bool] = None) -> str:
+    from repro.kernels import autotune
+
+    deltas, _ = _offset_tables(index, unicomp)
+    n_off = int(deltas.shape[0])
+    feats = _route_features(index, deltas)
+    candidates = None
+    if autotune.measure_enabled():
+        candidates = {
+            "dense": lambda: _self_join_count_fused(
+                index, unicomp=unicomp, bucketed=bucketed),
+            "sparse": lambda: _self_join_count_sparse(
+                index, unicomp=unicomp),
+            "jnp": lambda: self_join_count(
+                index.points_sorted, index.eps, unicomp=unicomp,
+                index=index, distance_impl="jnp"),
+        }
+        if jax.default_backend() == "tpu":
+            candidates["compact"] = lambda: self_join_count_compact(
+                index.points_sorted, index.eps, unicomp=unicomp,
+                index=index, distance_impl="fused")
+    route, _src = autotune.count_route(
+        n_dims=index.n_dims, n_off=n_off, c=feats["c"],
+        occupancy=feats["occupancy"], live_frac=feats["live_frac"],
+        candidates=candidates)
+    return route
 
 
 def self_join(
@@ -732,18 +1103,21 @@ def self_join(
     index: Optional[GridIndex] = None,
     distance_impl: str = "jnp",
     sort_result: bool = True,
+    bucketed: Optional[bool] = None,
 ):
     """Single-batch self-join. Returns (pairs (K,2) int32 np.ndarray).
 
     Two-phase: exact count, then fill with exactly-sized capacity
-    ('jnp'/'pallas'); single-pass count -> fill for 'fused'. For the
-    incremental / overlapped execution the paper uses, see
-    ``self_join_batched``.
+    ('jnp'/'pallas'); single-pass count -> fill for 'fused', occupancy-
+    bucketed by default (``bucketed=False`` forces the single-capacity
+    launch; both produce the same pair set). For the incremental /
+    overlapped execution the paper uses, see ``self_join_batched``.
     """
     index = _resolve_index(points, eps, index)
     if distance_impl == "fused":
         return _self_join_fused(
-            index, unicomp=unicomp, sort_result=sort_result)
+            index, unicomp=unicomp, sort_result=sort_result,
+            bucketed=bucketed)
     stats = self_join_count(
         points, eps, unicomp=unicomp, index=index, distance_impl=distance_impl
     )
@@ -777,6 +1151,7 @@ def self_join_batched(
     index: Optional[GridIndex] = None,
     distance_impl: str = "jnp",
     sort_result: bool = True,
+    bucketed: Optional[bool] = None,
 ):
     """The paper's batching scheme (SV-A): >= 3 query batches, each batch's
     result copied to the host while the next batch computes (JAX async
@@ -790,7 +1165,7 @@ def self_join_batched(
     if distance_impl == "fused":
         return _self_join_fused(
             index, unicomp=unicomp, sort_result=sort_result,
-            n_batches=n_batches)
+            n_batches=n_batches, bucketed=bucketed)
     npts = index.num_points
     n_batches = max(int(n_batches), 1)
     q_size = -(-npts // n_batches)  # ceil

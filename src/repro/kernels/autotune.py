@@ -1,0 +1,246 @@
+"""Measured tile + route autotuning for the fused join (DESIGN.md S6).
+
+Two hard-coded decisions of the pre-S6 code are replaced by a measured,
+persisted table:
+
+  * the fused kernel's query tile ``TQ`` was a global constant (128). The
+    right tile depends on the backend, the dimensionality, and -- with
+    occupancy bucketing -- the bucket's window capacity ``C`` (a C=64
+    bucket holds 8x the VMEM per row of a C=8 bucket). ``fused_tile``
+    returns the tile for a (backend, n_dims, C) class, timing the
+    candidate tiles ONCE on a synthetic descriptor workload when
+    measurement is enabled, and caching the winner.
+  * ``self_join_count``'s dense-vs-compact routing was a TPU-gated density
+    heuristic. ``count_route`` folds it into a single table: a cached
+    measured winner per workload class when available, a measured pass
+    over the live candidates when tuning is enabled, and the (extended)
+    occupancy heuristic otherwise. Candidate routes now include 'sparse'
+    (the probe-compacted counter for the empty-neighbor regime) and 'jnp'
+    (the reference dense counter), so routing can never be forced into a
+    fused plan that measures slower than the baseline: the chosen route is
+    logged in ``JoinStats.route``.
+
+The cache is a small JSON file. Resolution order: ``$REPRO_AUTOTUNE_CACHE``
+if set, else ``autotune_cache.json`` next to this module (a pre-measured
+table for this container's backend ships with the repo). Measurement is
+enabled by ``$REPRO_AUTOTUNE=1`` (benchmarks/bench_selfjoin.py sets it) or
+an explicit ``measure=True``; without it, cache misses fall back to
+deterministic defaults so tests and production paths never pay a timing
+pass they did not ask for. Writes are atomic and best-effort (a read-only
+install keeps the table in memory only).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+DEFAULT_TQ = 128
+TQ_CANDIDATES = (64, 128, 256)
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+_ENV_MEASURE = "REPRO_AUTOTUNE"
+
+
+def cache_path() -> str:
+    return os.environ.get(_ENV_CACHE) or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "autotune_cache.json")
+
+
+def measure_enabled() -> bool:
+    return os.environ.get(_ENV_MEASURE, "").lower() in ("1", "true", "yes")
+
+
+class _Cache:
+    """Lazy-loaded JSON key -> entry store with best-effort persistence."""
+
+    def __init__(self):
+        self._data: Optional[dict] = None
+        self._path: Optional[str] = None
+
+    def _load(self) -> dict:
+        path = cache_path()
+        if self._data is None or path != self._path:
+            self._path = path
+            try:
+                with open(path) as f:
+                    self._data = json.load(f)
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: str):
+        return self._load().get(key)
+
+    def put(self, key: str, entry: dict) -> None:
+        data = self._load()
+        data[key] = entry
+        try:
+            tmp = self._path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self._path)
+        except OSError:
+            pass  # read-only install: keep the entry in memory only
+
+    def reset(self) -> None:  # test hook
+        self._data = None
+
+
+_CACHE = _Cache()
+
+
+def _backend(backend: Optional[str]) -> str:
+    if backend is not None:
+        return backend
+    import jax
+
+    return jax.default_backend()
+
+
+def _pow2_class(x: float) -> int:
+    """Coarse pow2 bucketing for cache keys (1, 2, 4, ...; min 1)."""
+    v = 1
+    while v < x:
+        v *= 2
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Query-tile (TQ) selection
+# ---------------------------------------------------------------------------
+
+def tile_key(backend: str, n_dims: int, c: int) -> str:
+    return f"tile/{backend}/{n_dims}d/c{c}"
+
+
+def fused_tile(n_dims: int, c: int, *, backend: Optional[str] = None,
+               measure: Optional[bool] = None) -> int:
+    """Query tile for a fused launch of window capacity ``c``.
+
+    Cached measurement per (backend, n_dims, c); ``DEFAULT_TQ`` on a cache
+    miss with measurement disabled.
+    """
+    backend = _backend(backend)
+    key = tile_key(backend, int(n_dims), int(c))
+    entry = _CACHE.get(key)
+    if entry is not None:
+        return int(entry["tq"])
+    if measure is None:
+        measure = measure_enabled()
+    if not measure:
+        return DEFAULT_TQ
+    tq, timings = _measure_fused_tile(n_dims, int(c))
+    _CACHE.put(key, {"tq": tq, "ms": timings})
+    return tq
+
+
+def _measure_fused_tile(n_dims: int, c: int, *, qp: int = 1024,
+                        npts: int = 4096, trials: int = 3):
+    """Time the candidate tiles on a synthetic descriptor workload.
+
+    Windows and queries are random but FIXED across candidates, so the
+    comparison isolates the tile; keep_hits=False keeps the measurement on
+    the count path (the fill pass is dominated by the same sweep).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.fused_join import NP_PAD
+
+    n_off = min(3 ** n_dims, 27)
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.uniform(0, 1, (npts + c, NP_PAD)))
+    qb = pts[:qp]
+    ws = jnp.asarray(rng.integers(0, npts, (n_off, qp)), jnp.int32)
+    wc = jnp.asarray(rng.integers(0, c + 1, (n_off, qp)), jnp.int32)
+    iz = np.zeros(n_off, np.int32)
+    iz[0] = 1
+    iz = jnp.asarray(iz)
+    qpos = jnp.arange(qp, dtype=jnp.int32)
+    timings = {}
+    for tq in TQ_CANDIDATES:
+        if qp % tq:
+            continue
+
+        def run(tq=tq):
+            _, counts, _ = ops.fused_join_hits(
+                pts, qb, ws, wc, iz, qpos, 0.05, c=c, n_real=n_dims,
+                unicomp=True, tq=tq, keep_hits=False)
+            return np.asarray(counts)
+
+        run()  # compile, excluded
+        best = min(_timed(run) for _ in range(trials))
+        timings[str(tq)] = 1000 * best
+    winner = min(timings, key=timings.get)
+    return int(winner), timings
+
+
+def _timed(fn: Callable) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# Count-route table
+# ---------------------------------------------------------------------------
+
+def route_key(backend: str, n_dims: int, n_off: int, c_class: int,
+              live_class: int) -> str:
+    return f"route/{backend}/{n_dims}d/off{n_off}/c{c_class}/live{live_class}"
+
+
+def route_heuristic(backend: str, n_dims: int, n_off: int, c: int,
+                    occupancy: float, live_frac: float) -> str:
+    """The deterministic fallback when no measurement is cached.
+
+    TPU keeps the PR-2 rule (window-DMA traffic binds -> compact in the
+    empty-neighbor regime). Off-TPU the per-offset packing sort made
+    'compact' lose everywhere (EXPERIMENTS.md SServe note); the
+    probe-compacted 'sparse' counter replaces it there: one flat
+    compaction over the whole (offset, query) plane, worth it only when
+    nearly all dense window slots are padding.
+    """
+    if backend == "tpu":
+        if n_off * occupancy < 3.0 and n_off * c >= 256:
+            return "compact"
+        return "dense"
+    if live_frac < 0.06 and n_off * c >= 512:
+        return "sparse"
+    return "dense"
+
+
+def count_route(*, n_dims: int, n_off: int, c: int, occupancy: float,
+                live_frac: float, backend: Optional[str] = None,
+                candidates: Optional[dict] = None,
+                measure: Optional[bool] = None) -> tuple:
+    """Route for ``self_join_count(distance_impl='fused')``.
+
+    Returns ``(route, source)`` with source in {'cache', 'measured',
+    'heuristic'}. ``candidates`` maps route name -> zero-arg callable
+    running that counter on the live workload; when measurement is enabled
+    they are each warmed once and timed (best of 2), and the winner is
+    cached under the workload's class key -- the "measured routing table"
+    that replaces the density heuristic wherever it has been populated.
+    """
+    backend = _backend(backend)
+    key = route_key(backend, int(n_dims), int(n_off),
+                    _pow2_class(c), _pow2_class(live_frac * n_off))
+    entry = _CACHE.get(key)
+    if entry is not None:
+        return str(entry["route"]), "cache"
+    if measure is None:
+        measure = measure_enabled()
+    if measure and candidates:
+        timings = {}
+        for name, fn in candidates.items():
+            fn()  # warm: compile time must not decide the route
+            timings[name] = 1000 * min(_timed(fn), _timed(fn))
+        winner = min(timings, key=timings.get)
+        _CACHE.put(key, {"route": winner, "ms": timings})
+        return winner, "measured"
+    return route_heuristic(backend, n_dims, n_off, c, occupancy,
+                           live_frac), "heuristic"

@@ -95,13 +95,12 @@ def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(ws_ref, wc_ref, iz_ref, meta_ref, eps2_ref, q_ref, pts_ref,
+def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
                   hits_ref, counts_ref, base_ref, win_ref, sem_ref,
                   *, c, tq, unicomp, external):
     i = pl.program_id(0)           # query tile
     j = pl.program_id(1)           # stencil offset (innermost: q tile resident)
     n_off = pl.num_programs(1)
-    q_start = meta_ref[0]
     eps2 = eps2_ref[0, 0]
     zero = iz_ref[j]
 
@@ -111,7 +110,7 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, meta_ref, eps2_ref, q_ref, pts_ref,
 
     def row(r, _):
         qg = i * tq + r                       # row in the query batch
-        q_pos = q_start + qg                  # global sorted position
+        q_pos = qpos_ref[qg]                  # global sorted position
         start = ws_ref[j, qg]
         cnt = wc_ref[j, qg]
         # The fused gather: candidate window HBM->VMEM scratch via explicit
@@ -146,7 +145,7 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, meta_ref, eps2_ref, q_ref, pts_ref,
     jax.jit, static_argnames=("c", "tq", "unicomp", "external", "keep_hits",
                               "interpret"))
 def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
-                            is_zero, meta, eps2, *, c, tq, unicomp,
+                            is_zero, q_pos, eps2, *, c, tq, unicomp,
                             external=False, keep_hits=True, interpret=True):
     n_off, qp = win_start.shape
     if keep_hits:
@@ -183,7 +182,7 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
             jax.ShapeDtypeStruct((qp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(win_start, win_count, is_zero, meta, eps2, q_batch, points_pad)
+    )(win_start, win_count, is_zero, q_pos, eps2, q_batch, points_pad)
     return hits, counts[:, 0], base[:, 0]
 
 
@@ -213,11 +212,9 @@ def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
     jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
                               "keep_hits"))
 def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
-                               is_zero, meta, eps2, *, c, tq, n_real,
+                               is_zero, q_pos, eps2, *, c, tq, n_real,
                                unicomp, external=False, keep_hits=True):
     n_off, qp = win_start.shape
-    q_start = meta[0]
-    q_pos = q_start + jnp.arange(qp, dtype=jnp.int32)
     eps2s = eps2[0, 0]
 
     def per_offset(counts, xs):
@@ -244,7 +241,7 @@ def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
 # ---------------------------------------------------------------------------
 
 def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
-                    q_start, eps, *, c, n_real, unicomp, external=False,
+                    q_pos, eps, *, c, n_real, unicomp, external=False,
                     tq=TQ_DEFAULT, keep_hits=True,
                     method=None, interpret=True):
     """Fused gather-refine sweep over all stencil offsets in one launch.
@@ -252,20 +249,26 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     Args:
       points_pad: (N + tail, NP_PAD) ``pad_points`` output, tail >= c.
       q_batch:    (Q_pad, NP_PAD) query coordinates, Q_pad % tq == 0. For the
-                  self-join this is a contiguous slice of ``points_pad``
-                  starting at sorted position ``q_start``; with ``external``
-                  it is ANY query set (zero-padded pad rows/lanes), and the
-                  window descriptors come from the queries' own cell
-                  coordinates (``grid.external_window_descriptors``).
+                  self-join these are rows of ``points_pad`` at sorted
+                  positions ``q_pos`` -- a contiguous batch OR an
+                  occupancy-bucket selection (DESIGN.md S6); with
+                  ``external`` it is ANY query set (zero-padded pad
+                  rows/lanes), and the window descriptors come from the
+                  queries' own cell coordinates
+                  (``grid.external_window_descriptors``).
       win_start / win_count: (n_off, Q_pad) int32 from
-                  ``grid.window_descriptors`` (self-join) or
-                  ``grid.external_window_descriptors`` (external queries);
-                  count 0 for padding queries / out-of-grid probes.
+                  ``grid.window_descriptors`` / ``window_descriptors_at``
+                  (self-join) or ``grid.external_window_descriptors``
+                  (external queries); count 0 for padding queries /
+                  out-of-grid probes.
       is_zero:    (n_off,) int32, 1 for the o = 0 offset (UNICOMP triangle).
-      q_start:    scalar int32, batch origin in sorted order (self-join
-                  masking only; pass 0 with ``external``).
+      q_pos:      (Q_pad,) int32 global sorted position of every query row,
+                  prefetched as a scalar array (self-join masking only;
+                  pass zeros with ``external``). Padding rows may carry any
+                  in-range value -- their windows are count-0.
       eps:        scalar threshold; hits are d^2 <= eps^2.
-      c:          static window capacity (max_per_cell rounded up).
+      c:          static window capacity (the launch's bucket capacity; the
+                  global ``max_per_cell`` rounded up in the unbucketed case).
       n_real:     static true dimensionality (reference path skips pad lanes).
       unicomp:    static; triangle rule on o = 0 vs. full-stencil self mask.
       external:   static; True disables BOTH masks (queries are not members
@@ -278,16 +281,16 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     """
     if method is None:
         method = "kernel" if jax.default_backend() == "tpu" else "reference"
-    meta = jnp.reshape(jnp.asarray(q_start, jnp.int32), (1,))
+    q_pos = jnp.asarray(q_pos, jnp.int32)
     eps2 = jnp.reshape(jnp.asarray(eps, points_pad.dtype) ** 2, (1, 1))
     if method == "kernel":
         return _fused_join_hits_pallas(
-            points_pad, q_batch, win_start, win_count, is_zero, meta, eps2,
+            points_pad, q_batch, win_start, win_count, is_zero, q_pos, eps2,
             c=c, tq=tq, unicomp=unicomp, external=external,
             keep_hits=keep_hits, interpret=interpret)
     if method == "reference":
         return _fused_join_hits_reference(
-            points_pad, q_batch, win_start, win_count, is_zero, meta, eps2,
+            points_pad, q_batch, win_start, win_count, is_zero, q_pos, eps2,
             c=c, tq=tq, n_real=n_real, unicomp=unicomp, external=external,
             keep_hits=keep_hits)
     raise ValueError(f"unknown fused_join method {method!r}")

@@ -50,19 +50,21 @@ def cell_join_hits(q, cand, valid, eps):
 
 
 def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
-                    q_start, eps, *, c, n_real, unicomp, external=False,
+                    q_pos, eps, *, c, n_real, unicomp, external=False,
                     tq=_fused_join.TQ_DEFAULT, keep_hits=True, method=None):
     """Fused gather-refine sweep (all offsets, one launch) -> hits/counts.
 
-    method=None dispatches the Mosaic kernel on TPU and the identical
-    reference lowering elsewhere; tests force method='kernel' to exercise
-    the Pallas path through the interpreter. ``external=True`` serves
-    queries that are not members of the indexed set (core/query_join.py).
+    ``q_pos`` is the (Q_pad,) per-row sorted-position array (zeros for
+    external queries). method=None dispatches the Mosaic kernel on TPU and
+    the identical reference lowering elsewhere; tests force method='kernel'
+    to exercise the Pallas path through the interpreter. ``external=True``
+    serves queries that are not members of the indexed set
+    (core/query_join.py).
     """
     dt = _kernel_dtype(points_pad.dtype)
     return _fused_join.fused_join_hits(
         points_pad.astype(dt), q_batch.astype(dt), win_start, win_count,
-        is_zero, q_start, eps, c=c, n_real=n_real, unicomp=unicomp,
+        is_zero, q_pos, eps, c=c, n_real=n_real, unicomp=unicomp,
         external=external, tq=tq,
         keep_hits=keep_hits, method=method, interpret=_INTERPRET,
     )

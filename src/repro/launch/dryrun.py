@@ -13,7 +13,7 @@ Per cell:
     from optimized HLO) -> roofline terms (launch/roofline.py).
 
 Usage:
-    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --arch smoke-lm --shape train_4k --mesh single
     python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
     python -m repro.launch.dryrun --arch selfjoin --shape syn6d2m --mesh single
 """

@@ -18,7 +18,7 @@ grew a compilation cache -- the no-retrace regression gate `make verify`
 runs.
 
 LM decode service:
-    python -m repro.launch.serve --arch qwen1.5-0.5b --reduced --tokens 32
+    python -m repro.launch.serve --arch smoke-lm --reduced --tokens 32
 Prefills a prompt batch and decodes tokens autoregressively with the KV
 cache, reporting per-token latency.
 """
@@ -66,15 +66,16 @@ class JoinService:
         self._cache_mark: Optional[dict] = None
 
     def warmup(self, batch_size: int) -> int:
-        """Compile the bucket serving ``batch_size``-query requests (off
-        the request path); returns the bucket's padded row count."""
+        """Compile the executables serving ``batch_size``-query requests
+        (off the request path): the request bucket AND, on a skewed index,
+        every (capacity class, bucket size) launch a steady-state request
+        mix can need (``PreparedJoin.warm``). Returns the request bucket's
+        padded row count."""
         from repro.core.query_join import bucket_rows
 
         qp = bucket_rows(batch_size)
         if qp not in self._warm_buckets:
-            n = self.prepared.n_dims
-            q = np.zeros((batch_size, n), self.prepared.dtype)
-            self.prepared.join(q, return_pairs=self.return_pairs)
+            self.prepared.warm(batch_size, return_pairs=self.return_pairs)
             self._warm_buckets.add(qp)
         return qp
 

@@ -1,6 +1,6 @@
 """Training driver: elastic, fault-tolerant, with the paper's dedup pipeline.
 
-    python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
+    python -m repro.launch.train --arch smoke-lm --reduced \
         --steps 100 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
 
 Wires together: configs registry -> LMModel -> AdamW -> jitted step with
@@ -55,7 +55,7 @@ def build(args):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--arch", default="smoke-lm")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)

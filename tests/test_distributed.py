@@ -116,7 +116,7 @@ def test_compressed_train_step_end_to_end():
         from repro.train.compression import init_error_state
 
         mesh = make_mesh_compat((2, 2, 2), ('pod', 'data', 'model'))
-        cfg = get_config('qwen1.5-0.5b', reduced=True)
+        cfg = get_config('smoke-lm', reduced=True)
         rng = np.random.default_rng(0)
         batch = {'tokens': jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32),
                  'labels': jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)), jnp.int32)}

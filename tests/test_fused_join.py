@@ -64,21 +64,26 @@ def test_fused_count_matches_jnp():
             b = self_join_count(pts, eps, unicomp=unicomp,
                                 distance_impl="fused")
             assert a.total_pairs == b.total_pairs, name
-            if b.route == "dense":
+            if b.route == "compact":
+                # compacted counter: fewer slots checked by construction,
+                # no per-cell visit counter
+                assert b.candidates_checked <= a.candidates_checked, name
+            else:
+                # 'dense' (bucketed), 'sparse', and 'jnp' all report
+                # counter-for-counter parity with the reference sweep
+                assert b.route in ("dense", "sparse", "jnp"), (name, b.route)
                 assert a.cells_visited == b.cells_visited, name
                 assert a.candidates_checked == b.candidates_checked, name
-            else:
-                # auto-routed to the compacted counter: fewer slots checked
-                # by construction, no per-cell visit counter
-                assert name == "sparse-6d", name
-                assert b.candidates_checked <= a.candidates_checked, name
             assert a.offsets == b.offsets, name
-            # forcing the dense route restores counter-for-counter parity
-            d = self_join_count(pts, eps, unicomp=unicomp,
-                                distance_impl="fused", route="dense")
-            assert d.route == "dense" and d.total_pairs == a.total_pairs
-            assert d.cells_visited == a.cells_visited, name
-            assert d.candidates_checked == a.candidates_checked, name
+            # every explicit route override agrees on the total; the
+            # counter-parity routes also agree counter-for-counter
+            for route in ("dense", "sparse", "jnp"):
+                d = self_join_count(pts, eps, unicomp=unicomp,
+                                    distance_impl="fused", route=route)
+                assert d.route == route and d.total_pairs == a.total_pairs
+                assert d.cells_visited == a.cells_visited, (name, route)
+                assert d.candidates_checked == a.candidates_checked, \
+                    (name, route)
 
 
 def test_fused_batched_matches_jnp():
@@ -207,3 +212,129 @@ def test_pallas_kernel_join_end_to_end():
     b = _self_join_fused(index, unicomp=True, sort_result=True,
                          method="kernel")
     assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Occupancy bucketing (DESIGN.md S6)
+# ---------------------------------------------------------------------------
+
+def skewed(seed=31, n_dims=2, n_bg=500, n_cl=260):
+    """Heavy cluster + sparse background: guaranteed multi-class plan."""
+    rng = np.random.default_rng(seed)
+    bg = rng.uniform(0, 10, (n_bg, n_dims))
+    cl = rng.normal(5.0, 0.12, (n_cl, n_dims))
+    return np.concatenate([bg, cl])
+
+
+def test_occupancy_plan_partitions_rows():
+    from repro.core.grid import occupancy_plan
+
+    pts = skewed()
+    index = build_grid_host(pts, 0.5)
+    plan = occupancy_plan(index)
+    assert plan.n_buckets > 1, "workload must exercise multiple classes"
+    assert plan.caps == tuple(sorted(plan.caps))
+    assert plan.caps[-1] == plan.cap_global
+    assert plan.cap_global == _round_up(int(index.max_per_cell), 8)
+    # every sorted row in exactly one bucket, ascending within each
+    allsel = np.concatenate(plan.sel)
+    assert np.array_equal(np.sort(allsel), np.arange(index.num_points))
+    for s in plan.sel:
+        assert np.all(np.diff(s) > 0)
+    assert sum(plan.hist.values()) == index.num_points
+    # plan is cached per index object
+    assert occupancy_plan(index) is plan
+    # per-bucket capacity really bounds every member row's windows
+    from repro.core.grid import cell_window_caps
+    caps = cell_window_caps(index)
+    rank = np.asarray(index.point_cell_rank)
+    for cap, s in zip(plan.caps, plan.sel):
+        assert caps[rank[s]].max() <= cap
+
+
+@pytest.mark.parametrize("unicomp", [True, False])
+def test_bucketed_join_bit_identical_to_single_capacity(unicomp):
+    """Satellite gate: bucketed and single-capacity fused joins produce
+    bit-identical sorted pair sets (and match the jnp oracle)."""
+    for n_dims, eps in ((2, 0.5), (3, 0.9)):
+        pts = skewed(seed=41 + n_dims, n_dims=n_dims)
+        index = build_grid_host(pts, eps)
+        from repro.core.grid import occupancy_plan
+
+        assert occupancy_plan(index).n_buckets > 1
+        a = self_join(pts, eps, unicomp=unicomp, distance_impl="jnp",
+                      index=index)
+        b = self_join(pts, eps, unicomp=unicomp, distance_impl="fused",
+                      index=index)                      # bucketed (auto)
+        s = self_join(pts, eps, unicomp=unicomp, distance_impl="fused",
+                      index=index, bucketed=False)      # single capacity
+        assert np.array_equal(b, s), (n_dims, unicomp)
+        assert np.array_equal(a, b), (n_dims, unicomp)
+        # counts: bucketed and single-capacity report identical work
+        cb = self_join_count(pts, eps, unicomp=unicomp, index=index,
+                             distance_impl="fused", route="dense")
+        cs = self_join_count(pts, eps, unicomp=unicomp, index=index,
+                             distance_impl="fused", route="dense",
+                             bucketed=False)
+        assert (cb.total_pairs, cb.cells_visited, cb.candidates_checked) \
+            == (cs.total_pairs, cs.cells_visited, cs.candidates_checked)
+
+
+def test_bucketed_join_batched_and_emits():
+    """Bucketed launches compose with the batching scheme and both fill
+    backends."""
+    pts = skewed(seed=77)
+    index = build_grid_host(pts, 0.5)
+    a = self_join(pts, 0.5, distance_impl="jnp", index=index)
+    for nb in (2, 4):
+        b = self_join_batched(pts, 0.5, n_batches=nb,
+                              distance_impl="fused", index=index)
+        assert np.array_equal(a, b), nb
+    h = _self_join_fused(index, unicomp=True, sort_result=True, emit="host")
+    d = _self_join_fused(index, unicomp=True, sort_result=True,
+                         emit="device")
+    assert np.array_equal(h, d)
+    assert np.array_equal(h, a)
+    k = _self_join_fused(index, unicomp=True, sort_result=True,
+                         method="kernel")
+    assert np.array_equal(k, a)
+
+
+def test_autotune_tile_and_route_cache(tmp_path, monkeypatch):
+    """kernels/autotune.py: defaults on a cold cache, measured winners
+    persisted and re-read."""
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    autotune._CACHE.reset()
+    # cold cache, measurement off: deterministic default
+    assert autotune.fused_tile(2, 16) == autotune.DEFAULT_TQ
+    # measured: winner is a candidate, persisted, and re-read from disk
+    tq = autotune.fused_tile(2, 16, measure=True)
+    assert tq in autotune.TQ_CANDIDATES
+    autotune._CACHE.reset()
+    assert autotune.fused_tile(2, 16) == tq
+    import json
+
+    data = json.loads((tmp_path / "autotune.json").read_text())
+    assert any(k.startswith("tile/") and k.endswith("/2d/c16")
+               for k in data)
+    # route: heuristic fallback, measured winner cached under the class key
+    route, src = autotune.count_route(
+        n_dims=6, n_off=365, c=3, occupancy=0.005, live_frac=0.005,
+        backend="cpu")
+    assert (route, src) == ("sparse", "heuristic")
+    calls = []
+    cands = {"dense": lambda: calls.append("dense"),
+             "jnp": lambda: calls.append("jnp")}
+    route, src = autotune.count_route(
+        n_dims=6, n_off=365, c=3, occupancy=0.005, live_frac=0.005,
+        backend="cpu", candidates=cands, measure=True)
+    assert src == "measured" and route in cands and calls
+    cached, src = autotune.count_route(
+        n_dims=6, n_off=365, c=3, occupancy=0.005, live_frac=0.005,
+        backend="cpu")
+    assert (cached, src) == (route, "cache")
+    autotune._CACHE.reset()

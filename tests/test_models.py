@@ -1,9 +1,11 @@
-"""Per-arch smoke tests (REDUCED configs) + full-config structural checks.
+"""LM-substrate smoke tests (the generic ``smoke-lm`` arch) + family unit
+tests.
 
-Every assigned architecture: one forward/train step on CPU, finite loss and
-gradients; decode consistency against teacher-forced prefill logits; the
-FULL configs are only shape-checked (abstract init vs analytic param count)
--- full-size lowering is exercised by the dry-run.
+The seed's 10-arch registry (and its ~40 per-arch parametrized tests) was
+pruned with the unrelated LLM configs (PR 3); one train-step and one
+decode-consistency smoke over ``smoke-lm`` keeps the LM stack (models/,
+train/) covered, and the family-level unit tests (MoE dispatch, gated
+linear scan) are registry-independent and stay.
 """
 import jax
 import jax.numpy as jnp
@@ -53,17 +55,10 @@ def test_reduced_train_step(arch):
                for l in leaves), arch
 
 
-@pytest.mark.parametrize("arch", [a for a in ARCHS
-                                  if get_config(CANON[a]).has_decode])
+@pytest.mark.parametrize("arch", ARCHS)
 def test_reduced_decode_matches_forward(arch):
     """Prefill then decode-one vs teacher-forced forward: same logits."""
-    import dataclasses
-
     cfg = get_config(CANON[arch], reduced=True)
-    if cfg.n_experts:
-        # capacity dropping makes decode legitimately diverge from the
-        # teacher-forced forward; lift the cap for the consistency check
-        cfg = dataclasses.replace(cfg, capacity_factor=100.0)
     model = LMModel(cfg)
     params, _ = model.init(jax.random.PRNGKey(1))
     B, S = 2, 16
@@ -114,38 +109,13 @@ def test_reduced_decode_matches_forward(arch):
 @pytest.mark.parametrize("arch", ARCHS)
 def test_full_config_param_count(arch):
     """Abstract init (no allocation) matches the analytic parameter count
-    within 3% -- guards config drift against the published sizes."""
+    within 3% -- guards config drift."""
     cfg = get_config(CANON[arch])
     model = LMModel(cfg)
     shapes, specs = model.abstract_params()
     total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
     analytic = cfg.param_count()
     assert abs(total - analytic) / analytic < 0.03, (arch, total, analytic)
-
-
-@pytest.mark.parametrize("arch", ARCHS)
-def test_full_config_spec_divisibility(arch):
-    """Every sharded dim divides its mesh axes on the production mesh."""
-    cfg = get_config(CANON[arch])
-    sizes = {"pod": 2, "data": 16, "model": 16}
-    from repro.models.layers import ShardCtx
-    ctx = ShardCtx(fsdp_axis="data", tp_axis="model", fsdp_size=16,
-                   tp_size=16)
-    model = LMModel.__new__(LMModel)
-    model.cfg, model.mesh, model.ctx = cfg, None, ctx
-    shapes, specs = model.abstract_params()
-    flat_s, _ = jax.tree_util.tree_flatten_with_path(
-        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
-    flat_a = jax.tree.leaves(shapes)
-    specs_list = [s for _, s in flat_s]
-    assert len(specs_list) == len(flat_a)
-    for sds, spec in zip(flat_a, specs_list):
-        for dim, ax in zip(sds.shape, tuple(spec)):
-            if ax is None:
-                continue
-            axes = ax if isinstance(ax, tuple) else (ax,)
-            n = int(np.prod([sizes[a] for a in axes]))
-            assert dim % n == 0, (arch, sds.shape, spec)
 
 
 def test_moe_dispatch_exactness():

@@ -210,19 +210,26 @@ def test_join_service_steady_state():
     assert svc.requests == 5
 
 
-def test_fused_count_auto_route():
-    """Satellite: self_join_count(distance_impl='fused') routes between
-    the dense sweep and the compacted counter, logging the choice.
+def test_fused_count_auto_route(tmp_path, monkeypatch):
+    """Satellite: self_join_count(distance_impl='fused') routes through
+    the autotune table (measured winner when cached, occupancy heuristic
+    otherwise), logging the choice in JoinStats.route.
 
-    The heuristic itself is backend-gated: on the TPU kernel path the
-    empty-neighbor regime routes compact (window-DMA traffic is the
-    binding constraint); off-TPU the packing sort dominates and the dense
-    sweep measured faster everywhere (EXPERIMENTS.md SServe note), so
-    auto stays dense on this container and compact is an explicit
-    override."""
+    The repo ships a measured cache (kernels/autotune_cache.json); this
+    test pins the HEURISTIC tier, so it isolates itself from any cache.
+
+    The heuristic regimes: TPU routes the empty-neighbor regime to the
+    compacted counter (window-DMA traffic binds); off-TPU that regime goes
+    to the probe-compacted 'sparse' counter (the per-offset packing sort
+    of 'compact' measured slower everywhere off-TPU, EXPERIMENTS.md),
+    while dense neighborhoods stay on the bucketed dense sweep."""
     from repro.core.selfjoin import _fused_count_route
     from repro.core.stencil import stencil_offsets
+    from repro.kernels import autotune
 
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "empty.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    autotune._CACHE.reset()
     rng = np.random.default_rng(21)
     dense_pts = rng.uniform(0, 10, (400, 2))
     sparse_pts = rng.uniform(0, 60, (250, 6))
@@ -233,21 +240,25 @@ def test_fused_count_auto_route():
     # the regime detection (forced onto the TPU branch)
     assert _fused_count_route(sparse_idx, n_off6, backend="tpu") == "compact"
     assert _fused_count_route(dense_idx, n_off2, backend="tpu") == "dense"
-    # off-TPU (this container): auto never picks the slower compact path
-    assert _fused_count_route(sparse_idx, n_off6, backend="cpu") == "dense"
+    # off-TPU: the empty-neighbor regime routes to the flat probe
+    # compaction once the dense slot volume is large enough (full stencil
+    # guarantees it here), never to the per-offset packing sort
+    assert _fused_count_route(dense_idx, n_off2, backend="cpu") == "dense"
+    assert _fused_count_route(
+        sparse_idx, 3 ** 6, backend="cpu", unicomp=False) == "sparse"
     a = self_join_count(dense_pts, 0.6, distance_impl="fused")
     assert a.route == "dense"
     expect = self_join_count(sparse_pts, 7.0)
     assert expect.route == "dense"   # non-fused impls never reroute
-    # explicit override runs the compacted counter and logs it
-    b = self_join_count(sparse_pts, 7.0, distance_impl="fused",
-                        route="compact")
-    assert b.route == "compact"
-    assert b.total_pairs == expect.total_pairs
-    forced = self_join_count(sparse_pts, 7.0, distance_impl="fused",
-                             route="dense")
-    assert forced.route == "dense"
-    assert forced.total_pairs == expect.total_pairs
+    # explicit overrides run the named counter and log it
+    for route in ("compact", "dense", "sparse", "jnp"):
+        b = self_join_count(sparse_pts, 7.0, distance_impl="fused",
+                            route=route)
+        assert b.route == route
+        assert b.total_pairs == expect.total_pairs, route
+    with pytest.raises(ValueError):
+        self_join_count(sparse_pts, 7.0, distance_impl="fused",
+                        route="nope")
 
 
 def test_epsilon_join_empty_query_batch():
@@ -256,3 +267,120 @@ def test_epsilon_join_empty_query_batch():
     res = epsilon_join(np.zeros((0, 2)), pts, 0.5)
     assert res.counts.shape == (0,)
     assert res.pairs.shape == (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Occupancy-bucketed serving (DESIGN.md S6): a skewed index routes request
+# batches through per-capacity-class launches; answers must stay
+# bit-identical to brute force and the steady state must stay retrace-free
+# across arbitrary class mixes.
+# ---------------------------------------------------------------------------
+
+def skewed_index(seed=3, n_dims=2, eps=0.5):
+    rng = np.random.default_rng(seed)
+    bg = rng.uniform(0, 10, (500, n_dims))
+    cl = rng.normal(5.0, 0.12, (260, n_dims))
+    pts = np.concatenate([bg, cl])
+    return pts, build_grid_host(pts, eps)
+
+
+def test_bucketed_serving_matches_brute_force():
+    pts, index = skewed_index()
+    pj = prepare(index)
+    assert pj.bucketed and len(pj.classes) > 1
+    rng = np.random.default_rng(8)
+    # mixes: inside the cluster (big class), background, outside the volume
+    q = np.concatenate([rng.normal(5.0, 0.2, (30, 2)),
+                        rng.uniform(-1, 11, (40, 2))])
+    counts, pairs = brute(q, pts, 0.5)
+    for kwargs in ({}, {"emit": "device"}, {"method": "kernel"}):
+        res = pj.join(q, **kwargs)
+        assert np.array_equal(res.counts, counts), kwargs
+        assert np.array_equal(res.pairs, pairs), kwargs
+    assert np.array_equal(pj.join(q, return_pairs=False).counts, counts)
+    # host and device emits agree per class (sorted output is canonical)
+    h = pj.join(q, emit="host")
+    d = pj.join(q, emit="device")
+    assert np.array_equal(h.pairs, d.pairs)
+    # smaller query eps flows through the bucketed launches
+    c2, p2 = brute(q, pts, 0.3)
+    r2 = pj.join(q, eps=0.3)
+    assert np.array_equal(r2.counts, c2)
+    assert np.array_equal(r2.pairs, p2)
+
+
+def test_bucketed_serving_no_retrace():
+    """Once warmed, steady-state requests must not compile regardless of
+    which capacity classes each request happens to populate. The device-
+    emit scatter is exempt (result-size-bucketed, same rule as
+    JoinService.assert_no_retrace)."""
+
+    def freeze(stats):
+        out = {k: v for k, v in stats.items()
+               if k not in ("emit_pairs_device", "trace_events")}
+        out["trace_events"] = {k: v for k, v in stats["trace_events"].items()
+                               if k != "emit_pairs_device"}
+        return out
+
+    pts, index = skewed_index(seed=11)
+    pj = prepare(index)
+    assert pj.bucketed
+    pj.warm(128)
+    mark = executable_cache_stats()
+    assert mark["window_caps"] >= 1
+    rng = np.random.default_rng(5)
+    for k in range(6):
+        # different sizes, different class mixes (cluster-only,
+        # background-only, mixed, all-miss)
+        qs = [rng.normal(5.0, 0.1, (9 + 11 * k, 2)),
+              rng.uniform(0, 10, (17 + 13 * k, 2)),
+              rng.uniform(20, 30, (5, 2))]
+        for q in qs:
+            pj.join(q)
+            pj.join(q, return_pairs=False, eps=0.3 + 0.02 * k)
+            pj.join(q, emit="device")
+    assert freeze(executable_cache_stats()) == freeze(mark)
+
+
+def test_warm_covers_full_request_bucket():
+    """Regression: warm(n) must cover EVERY request that lands in the same
+    request bucket as n -- including one whose rows all fall in a single
+    capacity class, which needs a class launch at the full bucket size
+    (larger than any class launch a size-n request can need)."""
+
+    def freeze(stats):
+        out = {k: v for k, v in stats.items()
+               if k not in ("emit_pairs_device", "trace_events")}
+        out["trace_events"] = {k: v for k, v in stats["trace_events"].items()
+                               if k != "emit_pairs_device"}
+        return out
+
+    pts, index = skewed_index(seed=23)
+    pj = prepare(index)
+    assert pj.bucketed
+    pj.warm(64)                      # request bucket: 128 rows
+    mark = executable_cache_stats()
+    rng = np.random.default_rng(7)
+    # 128 queries, every one inside the cluster -> one class at qp_b=128
+    q = rng.normal(5.0, 0.1, (128, 2))
+    pj.join(q)
+    pj.join(q, return_pairs=False)
+    assert freeze(executable_cache_stats()) == freeze(mark)
+
+
+def test_bucketed_join_service_steady_state():
+    from repro.launch.serve import JoinService
+
+    pts, index = skewed_index(seed=17)
+    svc = JoinService(pts, 0.5, index=index)
+    assert svc.prepared.bucketed
+    svc.warmup(64)
+    svc.mark_steady()
+    rng = np.random.default_rng(19)
+    for _ in range(4):
+        q = np.concatenate([rng.normal(5.0, 0.15, (20, 2)),
+                            rng.uniform(0, 10, (44, 2))])
+        res = svc.query(q)
+        b, _ = brute(q, pts, 0.5)
+        assert np.array_equal(res.counts, b)
+    svc.assert_no_retrace()

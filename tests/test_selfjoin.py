@@ -204,6 +204,59 @@ def test_compact_sweep_matches_dense():
         assert compact_cap(idx, True) <= 3000
 
 
+def test_per_point_counts_prebuilt_index_and_degenerates():
+    """Satellite coverage: per_point_neighbor_counts against the oracle
+    with a PREBUILT index, on skewed data, and in the no-neighbor case."""
+    rng = np.random.default_rng(29)
+    bg = rng.uniform(0, 10, (300, 2))
+    cl = rng.normal(5.0, 0.1, (150, 2))
+    pts = np.concatenate([bg, cl])
+    eps = 0.5
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    hit = d2 <= eps * eps
+    np.fill_diagonal(hit, False)
+    idx = build_grid_host(pts, eps)
+    got = per_point_neighbor_counts(pts, eps, index=idx)
+    assert np.array_equal(got, hit.sum(1))
+    assert got.sum() == self_join_count(pts, eps, index=idx).total_pairs
+    # isolated points: every degree is zero
+    iso = np.array([[0.0, 0.0], [5.0, 5.0], [9.0, 9.0]])
+    assert np.array_equal(per_point_neighbor_counts(iso, 1.0), [0, 0, 0])
+    # coincident points count each other but never themselves
+    dup = np.zeros((4, 3))
+    assert np.array_equal(per_point_neighbor_counts(dup, 0.1), [3, 3, 3, 3])
+
+
+def test_build_grid_requires_int64_keys():
+    """Regression (satellite): with jax_enable_x64 off, linearized cell
+    keys and PAD_KEY silently truncate to int32 (6-D key spaces alias);
+    the builders must refuse instead."""
+    import jax
+    import jax.numpy as jnp
+    import pytest
+
+    from repro.core.grid import build_grid_with_geometry, grid_geometry
+
+    rng = np.random.default_rng(7)
+    pts = rng.uniform(0, 100, (64, 6))
+    jax.config.update("jax_enable_x64", False)
+    try:
+        with pytest.raises(RuntimeError, match="int64"):
+            build_grid_host(pts, 5.0)
+        with pytest.raises(RuntimeError, match="jax_enable_x64"):
+            gmin = jnp.asarray(pts.min(0) - 5.0, jnp.float32)
+            dims = jnp.full((6,), 23, jnp.int32)
+            build_grid_with_geometry(jnp.asarray(pts, jnp.float32), 5.0,
+                                     gmin, dims)
+    finally:
+        jax.config.update("jax_enable_x64", True)
+    # restored: the guarded builders work again and keys really are int64
+    idx = build_grid_host(pts, 5.0)
+    assert np.asarray(idx.cell_keys).dtype == np.int64
+    g = grid_geometry(jnp.asarray(pts), 5.0)
+    assert np.asarray(g[1]).dtype == np.int64
+
+
 def test_pallas_impl_through_join():
     rng = np.random.default_rng(17)
     pts = rng.uniform(0, 10, (300, 2))

@@ -14,7 +14,7 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 def test_train_driver_end_to_end(tmp_path):
     from repro.launch.train import main
 
-    loss = main(["--arch", "qwen1.5-0.5b", "--reduced", "--steps", "6",
+    loss = main(["--arch", "smoke-lm", "--reduced", "--steps", "6",
                  "--batch", "4", "--seq", "32", "--log-every", "3",
                  "--ckpt-dir", str(tmp_path), "--ckpt-every", "3"])
     assert np.isfinite(loss)
@@ -22,7 +22,7 @@ def test_train_driver_end_to_end(tmp_path):
 
     assert latest_step(str(tmp_path)) == 6
     # restart resumes from the checkpoint and continues
-    loss2 = main(["--arch", "qwen1.5-0.5b", "--reduced", "--steps", "8",
+    loss2 = main(["--arch", "smoke-lm", "--reduced", "--steps", "8",
                   "--batch", "4", "--seq", "32", "--log-every", "3",
                   "--ckpt-dir", str(tmp_path)])
     assert np.isfinite(loss2)
@@ -32,7 +32,7 @@ def test_train_driver_end_to_end(tmp_path):
 def test_train_driver_with_dedup():
     from repro.launch.train import main
 
-    loss = main(["--arch", "qwen1.5-0.5b", "--reduced", "--steps", "3",
+    loss = main(["--arch", "smoke-lm", "--reduced", "--steps", "3",
                  "--batch", "4", "--seq", "32", "--dedup"])
     assert np.isfinite(loss)
 
@@ -48,26 +48,32 @@ def test_serve_selfjoin_driver():
 def test_serve_lm_driver():
     from repro.launch.serve import main
 
-    lat = main(["--arch", "qwen1.5-0.5b", "--reduced",
+    lat = main(["--arch", "smoke-lm", "--reduced",
                 "--request-batch", "2", "--prompt-len", "16",
                 "--tokens", "4"])
     assert lat > 0
 
 
-def test_registry_covers_assignment():
-    from repro.configs import ARCHS, all_cells, get_config
+def test_registry_after_prune():
+    """The LM config registry holds only the generic smoke arch (the
+    seed's 10 published-LLM configs were unrelated to the paper and were
+    pruned, PR 3); selfjoin resolves through the alias table."""
+    import pytest
+    from repro.configs import ARCHS, ALIASES, all_cells, get_config
 
-    assert len(ARCHS) == 10
+    assert ARCHS == ["smoke_lm"]
+    assert set(ALIASES) == {"smoke-lm", "selfjoin"}
     cells = all_cells()
-    assert len(cells) == 40  # 10 archs x 4 shapes
-    runnable = [c for c in cells if c[2] is None]
-    # encoder-only decode skips (2) + pure-full-attention long_500k (7)
-    assert len(runnable) == 31
-    for arch in ARCHS:
-        r = get_config(arch, reduced=True)
-        f = get_config(arch)
-        assert r.family == f.family
-        assert r.param_count() < f.param_count() / 100
+    assert len(cells) == 4  # 1 arch x 4 shapes
+    # dense transformer: long_500k is skipped, the rest runnable
+    assert [c[2] is None for c in cells] == [True, True, True, False]
+    r = get_config("smoke-lm", reduced=True)
+    f = get_config("smoke-lm")
+    assert r.family == f.family == "dense"
+    assert r.param_count() < f.param_count()
+    from repro.configs.selfjoin import CONFIG as SJ  # noqa: F401  (kept)
+    with pytest.raises(ModuleNotFoundError):
+        get_config("qwen1.5-0.5b")  # pruned arch stays pruned
 
 
 @pytest.mark.slow
@@ -78,7 +84,7 @@ def test_dryrun_cell_subprocess():
     env["PYTHONPATH"] = SRC
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",
-         "qwen1.5-0.5b", "--shape", "decode_32k", "--mesh", "single"],
+         "smoke-lm", "--shape", "decode_32k", "--mesh", "single"],
         env=env, capture_output=True, text=True, timeout=560, cwd=ROOT)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "OK" in out.stdout and "bottleneck=" in out.stdout
