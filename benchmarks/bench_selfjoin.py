@@ -7,15 +7,19 @@ plus the serving path (--mode serve) and a CI smoke (--smoke).
 
 --mode impl (default) times ``self_join_count`` (count) and ``self_join``
 (count+fill, unsorted -- the paper reports the result sort separately) for
-n in {2, 4, 6} on uniform and clustered datasets, across distance_impl in
-{jnp, pallas, fused}, with the grid index prebuilt (index construction is
-shared by every impl and benchmarked in benchmarks/joins.py). The fused
-impl runs with autotuning enabled (kernels/autotune.py measures tiles and
-the count route once and persists the winners), records the chosen route
-and the window-capacity histogram that drives the occupancy buckets
-(DESIGN.md S6), and ASSERTS the routing floor: fused count must not lose
-to jnp on any workload (the uniform-6d regression this gate pins down;
---no-assert-floor to disable).
+n in {2, 3, 4, 6} on uniform, clustered, and exponentially skewed
+datasets, across distance_impl in {jnp, pallas, fused}, with the grid
+index prebuilt (index construction is shared by every impl and benchmarked
+in benchmarks/joins.py). The fused impl sweeps the merged-range 3^(n-1)
+stencil by default (--no-merge times the per-cell 3^n oracle; --smoke
+asserts pair-set parity between the two on every workload -- the CI
+parity gate) and runs with autotuning enabled (kernels/autotune.py
+measures tiles and the count route once and persists the winners), records
+the chosen route, the offsets swept (n_offsets_swept), and the per-cell +
+merged window-capacity histograms that drive the occupancy buckets
+(DESIGN.md S6/S7), and ASSERTS the routing floor: fused count must not
+lose to jnp on any workload (the uniform-6d regression this gate pins
+down; --no-assert-floor to disable).
 
 --mode serve times the external-query serving path (DESIGN.md S5) on the
 default serve workload: steady-state (post-warmup) request latency
@@ -71,17 +75,29 @@ def clustered(n_points: int, n_dims: int, seed: int = 3) -> np.ndarray:
     return pts + rng.normal(0, 1.5, pts.shape)
 
 
+def expo(n_points: int, n_dims: int, seed: int = 5,
+         scale: float = 10.0) -> np.ndarray:
+    """Exponentially distributed coordinates (the paper's expo datasets):
+    density concentrates near the origin, producing the long-tailed
+    per-cell occupancy skew that exercises the capacity classes hardest."""
+    rng = np.random.default_rng(seed)
+    return rng.exponential(scale, (n_points, n_dims))
+
+
 def workloads(args):
     if args.smoke:
-        # one tiny skewed workload: exercises the occupancy buckets and the
-        # full payload schema in seconds (CI harness-rot gate)
+        # tiny skewed workloads: exercise the occupancy buckets, the
+        # merged-vs-unmerged parity oracle, and the full payload schema in
+        # seconds (CI harness-rot gate)
         yield "uniform-2d", syn(4000, 2), 0.4
         yield "clustered-2d", clustered(3000, 2), 0.4
+        yield "expo-3d", expo(3000, 3), 1.2
         return
     # eps tuned per dimensionality for paper-like selectivity (a handful of
     # neighbors per point on the uniform sets; denser on the clustered sets).
     yield "uniform-2d", syn(args.points_2d, 2), 0.4
     yield "clustered-2d", clustered(args.points_2d, 2), 0.4
+    yield "expo-3d", expo(args.points_3d, 3), 1.2
     yield "uniform-4d", syn(args.points_4d, 4), 6.0
     yield "clustered-4d", clustered(args.points_4d, 4), 3.0
     yield "uniform-6d", syn(args.points_6d, 6), 14.0
@@ -98,12 +114,14 @@ def validate_schema(payload: dict) -> None:
         "fused_over_jnp_count"} <= set(payload["headline"])
     for e in payload["results"]:
         for key in ("workload", "n_points", "n_dims", "eps", "total_pairs",
-                    "max_per_cell", "window_caps_hist", "impls"):
+                    "max_per_cell", "window_caps_hist",
+                    "merged_window_caps_hist", "impls"):
             assert key in e, (e.get("workload"), key)
         for impl, t in e["impls"].items():
             assert {"count_s", "join_s"} <= set(t), (e["workload"], impl)
         if "fused" in e["impls"]:
             assert "route" in e["impls"]["fused"], e["workload"]
+            assert "n_offsets_swept" in e["impls"]["fused"], e["workload"]
 
 
 def best_of(fn, trials: int) -> float:
@@ -248,8 +266,14 @@ def main(argv=None):
                     default=True,
                     help="disable measured tile/route autotuning "
                          "(kernels/autotune.py) for this run")
+    ap.add_argument("--no-merge", action="store_true",
+                    help="time the per-cell 3^n sweep instead of the "
+                         "merged-range 3^(n-1) sweep (parity oracle, "
+                         "DESIGN.md S7); --smoke asserts pair-set parity "
+                         "between both regardless")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--points-2d", type=int, default=100_000)
+    ap.add_argument("--points-3d", type=int, default=30_000)
     ap.add_argument("--points-4d", type=int, default=20_000)
     ap.add_argument("--points-6d", type=int, default=10_000)
     ap.add_argument("--trials", type=int, default=3)
@@ -304,11 +328,31 @@ def main(argv=None):
 
     from repro.core.grid import occupancy_plan
 
+    merge = not args.no_merge
     results = []
     for name, pts, eps in workloads(args):
         index = build_grid_host(pts, eps)
         expect = self_join_count(pts, eps, index=index).total_pairs
         plan = occupancy_plan(index)
+        mplan = occupancy_plan(index, merged=True)
+        if args.smoke:
+            # CI parity oracle (DESIGN.md S7): the merged-range sweep and
+            # the per-cell sweep must emit identical sorted pair sets --
+            # exercised on every build, not just under pytest. The driver
+            # is called with the sweep PINNED (not through the public
+            # merge_last_dim default) so a measured 'dense-flat' route
+            # verdict can never silently turn this into oracle-vs-oracle.
+            from repro.core.selfjoin import _self_join_fused
+
+            pm = _self_join_fused(index, unicomp=True, sort_result=True,
+                                  merged=True)
+            pf = _self_join_fused(index, unicomp=True, sort_result=True,
+                                  merged=False)
+            assert np.array_equal(pm, pf), (
+                f"merged-range sweep pair-set mismatch vs per-cell oracle "
+                f"on {name}: {pm.shape} vs {pf.shape}")
+            print(f"[bench] {name:14s} merged/unmerged pair-set parity OK "
+                  f"({pm.shape[0]} pairs)", flush=True)
         entry = {
             "workload": name,
             "n_points": int(pts.shape[0]),
@@ -320,28 +364,36 @@ def main(argv=None):
             # skew that motivates the occupancy buckets (DESIGN.md S6)
             "window_caps_hist": {str(k): v for k, v in
                                  sorted(plan.hist.items())},
+            # same histogram over MERGED range-window capacities: what the
+            # merged sweep's buckets actually launch at (DESIGN.md S7)
+            "merged_window_caps_hist": {str(k): v for k, v in
+                                        sorted(mplan.hist.items())},
             "impls": {},
         }
         for impl in impls:
-            stats = self_join_count(pts, eps, index=index, distance_impl=impl)
+            stats = self_join_count(pts, eps, index=index, distance_impl=impl,
+                                    merge_last_dim=merge)
             assert stats.total_pairs == expect, (name, impl, stats)
             # the interpreted cell_join kernel is ~100x slower than its
             # Mosaic build; one timed trial keeps the sweep tractable
             trials = 1 if impl == "pallas" else args.trials
             t_count = best_of(
                 lambda: self_join_count(pts, eps, index=index,
-                                        distance_impl=impl),
+                                        distance_impl=impl,
+                                        merge_last_dim=merge),
                 trials)
             t_join = best_of(
                 lambda: self_join(pts, eps, index=index, distance_impl=impl,
-                                  sort_result=False),
+                                  sort_result=False, merge_last_dim=merge),
                 trials)
             entry["impls"][impl] = {"count_s": t_count, "join_s": t_join}
             if impl == "fused":
                 entry["impls"][impl]["route"] = stats.route
+                entry["impls"][impl]["n_offsets_swept"] = stats.n_offsets
             print(f"[bench] {name:14s} {impl:6s} "
                   f"count {t_count*1e3:9.1f} ms   join {t_join*1e3:9.1f} ms"
-                  + (f"   route={stats.route}" if impl == "fused" else ""),
+                  + (f"   route={stats.route} n_off={stats.n_offsets}"
+                     if impl == "fused" else ""),
                   flush=True)
         j = entry["impls"]
         if "jnp" in j and "fused" in j:

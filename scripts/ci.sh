@@ -16,7 +16,10 @@ python -m pytest -x -q
 echo "[ci] serve smoke (steady state must not retrace)"
 timeout 120 python -m repro.launch.serve --arch selfjoin --requests 4
 
-echo "[ci] bench smoke (harness + BENCH schema)"
+echo "[ci] bench smoke, merged-range sweep (harness + BENCH schema + merged-vs-unmerged pair-set parity)"
 timeout 300 python benchmarks/bench_selfjoin.py --smoke
+
+echo "[ci] bench smoke, per-cell sweep oracle (--no-merge; parity asserted again)"
+timeout 300 python benchmarks/bench_selfjoin.py --smoke --no-merge
 
 echo "[ci] OK"

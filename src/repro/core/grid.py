@@ -358,6 +358,167 @@ def window_descriptors_at(
     return win_start, win_count
 
 
+def _rank_to_point(index: GridIndex, rank: jax.Array) -> jax.Array:
+    """Sorted-point position of a cell RANK's window start; ranks >=
+    ``num_cells`` map to ``num_points`` (the exclusive end of real points).
+
+    The bridge between key-rank space and point space that makes merged
+    range windows work: consecutive ranks in B own consecutive runs of
+    ``points_sorted``, so the span of ranks [lo, hi) is exactly the point
+    span [_rank_to_point(lo), _rank_to_point(hi)).
+    """
+    npts = index.num_points
+    rank_c = jnp.minimum(rank, npts - 1)
+    return jnp.where(rank < index.num_cells,
+                     index.cell_start[rank_c], npts).astype(jnp.int32)
+
+
+def range_window_descriptors_at(
+    index: GridIndex,
+    deltas: jax.Array,
+    lo_off: jax.Array,
+    hi_off: jax.Array,
+    q_pos: jax.Array,
+    q_ok: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """MERGED candidate windows for explicit sorted positions (DESIGN.md S7).
+
+    For each reduced stencil offset (``deltas`` = linearized first-(n-1)-
+    coordinate offsets, last coordinate 0) the three cells differing only
+    in the last coordinate occupy adjacent key ranks, so their windows are
+    ONE contiguous span of ``points_sorted``. Per (offset, query) this
+    resolves the span [base + lo_off, base + hi_off] in key space with one
+    searchsorted pair (left on the low key, right on the high key) and
+    converts ranks to point positions via ``_rank_to_point``.
+
+    The last-dimension span is clamped to the grid row: a query whose cell
+    sits at last coordinate 0 (or dims-1) must not let the range probe
+    wrap into the previous (next) row of the grid -- keys are dense across
+    row boundaries, so an unclamped [base-1, base+1] would silently pull a
+    wrapped cell's points into the window. Natural grid geometry keeps
+    every point's coordinates in [1, dims-2] (paper SIV-B eps margins) so
+    the clamp is a no-op there, but externally supplied geometry
+    (``build_grid_with_geometry``) can place points on the row edge; the
+    fused kernel's last-dimension boundary mask (kernels/fused_join.py)
+    backstops the same hazard candidate-by-candidate.
+
+    Returns (win_start, win_count, win_cells), each (n_off, Q) int32;
+    ``win_cells`` is the number of non-empty cells inside each merged
+    window -- the per-cell work counter the unmerged sweep reported as its
+    live-probe count, preserved so merged and unmerged JoinStats match
+    counter-for-counter.
+    """
+    npts = index.num_points
+    q_pos = q_pos.astype(jnp.int32)
+    if q_ok is None:
+        q_ok = q_pos < npts
+    q_pos_c = jnp.minimum(q_pos, npts - 1)
+    rank = index.point_cell_rank[q_pos_c]            # (Q,) rank of own cell
+    own_key = index.cell_keys[rank]                  # (Q,) int64
+    dim_last = index.dims.astype(jnp.int64)[-1]
+    q_last = own_key % dim_last                      # (Q,) last-dim coord
+    base = own_key[None, :] + deltas[:, None]        # (n_off, Q) int64
+    lo = jnp.maximum(lo_off[:, None], -q_last[None, :])
+    hi = jnp.minimum(hi_off[:, None], dim_last - 1 - q_last[None, :])
+    lo_rank = jnp.searchsorted(index.cell_keys, base + lo,
+                               side="left").astype(jnp.int32)
+    hi_rank = jnp.searchsorted(index.cell_keys, base + hi,
+                               side="right").astype(jnp.int32)
+    live = (hi_rank > lo_rank) & q_ok[None, :]
+    start = _rank_to_point(index, lo_rank)
+    end = _rank_to_point(index, hi_rank)
+    win_start = jnp.where(live, start, 0).astype(jnp.int32)
+    win_count = jnp.where(live, end - start, 0).astype(jnp.int32)
+    win_cells = jnp.where(live, hi_rank - lo_rank, 0).astype(jnp.int32)
+    return win_start, win_count, win_cells
+
+
+def range_window_descriptors(
+    index: GridIndex,
+    deltas: jax.Array,
+    lo_off: jax.Array,
+    hi_off: jax.Array,
+    q_start: jax.Array | int = 0,
+    q_size: Optional[int] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Merged-range windows for a contiguous query batch (see
+    ``range_window_descriptors_at``)."""
+    npts = index.num_points
+    if q_size is None:
+        q_size = npts
+    q_pos = (jnp.asarray(q_start, jnp.int32)
+             + jnp.arange(q_size, dtype=jnp.int32))
+    return range_window_descriptors_at(
+        index, deltas, lo_off, hi_off, q_pos, q_pos < npts)
+
+
+def external_range_descriptors(
+    index: GridIndex,
+    offsets: jax.Array,
+    lo_off: jax.Array,
+    hi_off: jax.Array,
+    queries: jax.Array,
+    q_limit: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Merged-range windows for EXTERNAL query points (DESIGN.md S7).
+
+    The merged analogue of ``external_window_descriptors``: adjacency on
+    the first n-1 coordinates is resolved in coordinate space with exact
+    bounds masking (no key aliasing on tiny grids), and the last dimension
+    becomes a per-query key-span [q_last + lo_off, q_last + hi_off]
+    clamped to [0, dims-1] -- which also handles queries up to one cell
+    OUTSIDE the volume in the last dimension (q_last = -1 probes row 0
+    only; q_last = dims probes row dims-1 only; farther out the clamped
+    span inverts and the probe is dead, the exact answer).
+
+    Returns (win_start, win_count, win_cells), each (n_off, Q) int32.
+    """
+    qcoords = cell_coords(queries, index.grid_min, index.eps)   # (Q, n)
+    dims = index.dims.astype(jnp.int64)
+    n = qcoords.shape[1]
+    row = qcoords[None, :, :-1] + offsets[:, None, :-1]   # (n_off, Q, n-1)
+    row_ok = jnp.all((row >= 0) & (row < dims[:-1]), axis=-1) if n > 1 \
+        else jnp.ones(row.shape[:2], bool)
+    q_last = qcoords[:, -1]                               # (Q,) int64
+    lo_last = jnp.maximum(q_last[None, :] + lo_off[:, None], 0)
+    hi_last = jnp.minimum(q_last[None, :] + hi_off[:, None], dims[-1] - 1)
+    live = row_ok & (lo_last <= hi_last)
+    row_c = jnp.clip(row, 0, dims[:-1] - 1)               # safe linearize
+    # append an explicit zero last coordinate: row_c is width n-1, which
+    # is 0 for 1-D data, so zeros_like(row_c[..., :1]) would stay empty
+    zero_last = jnp.zeros(row_c.shape[:-1] + (1,), row_c.dtype)
+    base = linearize(jnp.concatenate([row_c, zero_last], axis=-1),
+                     index.dims)
+    lo_key = jnp.where(live, base + lo_last, PAD_KEY)
+    hi_key = jnp.where(live, base + hi_last, PAD_KEY - 1)
+    lo_rank = jnp.searchsorted(index.cell_keys, lo_key,
+                               side="left").astype(jnp.int32)
+    hi_rank = jnp.searchsorted(index.cell_keys, hi_key,
+                               side="right").astype(jnp.int32)
+    if q_limit is not None:
+        q_ok = jnp.arange(queries.shape[0], dtype=jnp.int32) < q_limit
+        live = live & q_ok[None, :]
+    live = live & (hi_rank > lo_rank)
+    start = _rank_to_point(index, lo_rank)
+    end = _rank_to_point(index, hi_rank)
+    win_start = jnp.where(live, start, 0).astype(jnp.int32)
+    win_count = jnp.where(live, end - start, 0).astype(jnp.int32)
+    win_cells = jnp.where(live, hi_rank - lo_rank, 0).astype(jnp.int32)
+    return win_start, win_count, win_cells
+
+
+def point_last_coords(index: GridIndex) -> jax.Array:
+    """Last-dimension cell coordinate of every sorted point, int32.
+
+    Derived EXACTLY from the int64 cell keys (key mod dims[-1]), never
+    from float coordinates -- the fused kernel's merged boundary mask
+    compares these as (exactly representable) floats, so a TPU f32
+    downcast can never disagree with the build-time cell assignment.
+    """
+    keys = index.cell_keys[index.point_cell_rank]
+    return (keys % index.dims.astype(jnp.int64)[-1]).astype(jnp.int32)
+
+
 def external_window_descriptors(
     index: GridIndex,
     offsets: jax.Array,
@@ -473,25 +634,58 @@ def capacity_classes(cap_global: int, align: int = CAP_ALIGN) -> tuple:
     return tuple(out)
 
 
-def cell_window_caps(index: GridIndex) -> np.ndarray:
-    """Per non-empty cell: the largest adjacent-cell window any of its
-    points can see -- max over the FULL 3^n stencil of the neighbor cell's
-    count (own cell included). Host-side pure index arithmetic; an upper
-    bound for any sub-stencil (e.g. the UNICOMP half), so one plan serves
-    both sweep modes."""
-    from repro.core.stencil import stencil_offsets
+def starts_ext(index: GridIndex) -> np.ndarray:
+    """Host-side rank -> point-span bridge: ``cell_start`` of each valid
+    rank with ``num_points`` appended as the exclusive end, so the point
+    span of ranks [lo, hi) is ``starts_ext[lo] : starts_ext[hi]``. THE one
+    copy of that convention -- the merged capacity planners (here) and the
+    sparse counter (core/selfjoin.py) must agree with
+    ``_rank_to_point`` bit-for-bit or window capacities undercount."""
+    ncells = int(index.num_cells)
+    return np.concatenate(
+        [np.asarray(index.cell_start[:ncells]),
+         np.asarray([index.num_points])]).astype(np.int64)
+
+
+def cell_window_caps(index: GridIndex, merged: bool = False) -> np.ndarray:
+    """Per non-empty cell: the largest candidate window any of its points
+    can see. Host-side pure index arithmetic; an upper bound for any
+    sub-stencil (e.g. the UNICOMP half), so one plan serves both sweep
+    modes.
+
+    ``merged=False``: max over the FULL 3^n stencil of the single neighbor
+    cell's count (own cell included). ``merged=True``: max over the
+    3^(n-1) reduced stencil of the MERGED last-dimension range window
+    (DESIGN.md S7) -- the contiguous span of up to three cells' points,
+    clamped at the grid row like ``range_window_descriptors_at``.
+    """
+    from repro.core.stencil import merged_stencil_offsets, stencil_offsets
 
     ncells = int(index.num_cells)
     keys = np.asarray(index.cell_keys[:ncells])
     counts = np.asarray(index.cell_count[:ncells]).astype(np.int64)
     strides = np.asarray(row_major_strides(index.dims))
-    deltas = stencil_offsets(index.n_dims, unicomp=False) @ strides
     caps = np.zeros(ncells, np.int64)
+    if not merged:
+        deltas = stencil_offsets(index.n_dims, unicomp=False) @ strides
+        for delta in deltas:
+            probe = keys + delta
+            pos = np.minimum(np.searchsorted(keys, probe), ncells - 1)
+            live = keys[pos] == probe
+            caps = np.maximum(caps, np.where(live, counts[pos], 0))
+        return caps.astype(np.int32)
+    reduced, _, _ = merged_stencil_offsets(index.n_dims, unicomp=False)
+    deltas = reduced @ strides
+    dim_last = int(np.asarray(index.dims)[-1])
+    last = keys % dim_last
+    lo = keys + np.maximum(-1, -last)
+    hi = keys + np.minimum(1, dim_last - 1 - last)
+    ext = starts_ext(index)
     for delta in deltas:
-        probe = keys + delta
-        pos = np.minimum(np.searchsorted(keys, probe), ncells - 1)
-        live = keys[pos] == probe
-        caps = np.maximum(caps, np.where(live, counts[pos], 0))
+        lo_rank = np.searchsorted(keys, lo + delta, side="left")
+        hi_rank = np.searchsorted(keys, hi + delta, side="right")
+        span = ext[hi_rank] - ext[lo_rank]
+        caps = np.maximum(caps, np.where(hi_rank > lo_rank, span, 0))
     return caps.astype(np.int32)
 
 
@@ -514,26 +708,77 @@ def index_cached(index: GridIndex, tag: str, build):
     return value
 
 
-def occupancy_plan(index: GridIndex, align: int = CAP_ALIGN) -> BucketPlan:
+def cell_window_caps_cached(index: GridIndex,
+                            merged: bool = False) -> np.ndarray:
+    """``cell_window_caps`` memoized per index object -- the merged caps
+    feed both ``global_window_cap`` and the occupancy plan build, and a
+    6-D pass is 3^(n-1) host searchsorted sweeps worth not repeating."""
+    return index_cached(index, f"cellcaps/{merged}",
+                        lambda: cell_window_caps(index, merged=merged))
+
+
+def global_window_cap(index: GridIndex, merged: bool = False,
+                      align: int = CAP_ALIGN) -> int:
+    """Aligned global window capacity of one fused launch: the unbucketed
+    static window size. Unmerged: the paper's max_per_cell. Merged: the
+    largest merged range window any cell sees (<= 3 * max_per_cell,
+    computed exactly; cached per index)."""
+    if not merged:
+        return round_up(max(int(index.max_per_cell), 1), align)
+
+    def build():
+        caps = cell_window_caps_cached(index, merged=True)
+        top = int(caps.max()) if caps.size else 0
+        return round_up(max(top, 1), align)
+
+    return index_cached(index, f"capglobal/{align}/{merged}", build)
+
+
+def external_range_cap(index: GridIndex, align: int = CAP_ALIGN) -> int:
+    """Upper bound on ANY merged range window an external query can see.
+
+    An external query's window spans keys [base-1, base+1]; its minimal
+    present key k bounds the span by [k, k+2] -- so the max over present
+    keys k of the point span of [k, k+2] dominates every possible query
+    window, including windows whose center cell is absent from B (which
+    per-cell caps cannot see). Cached per index.
+    """
+    def build():
+        ncells = int(index.num_cells)
+        if ncells == 0:
+            return align
+        keys = np.asarray(index.cell_keys[:ncells])
+        ext = starts_ext(index)
+        hi_rank = np.searchsorted(keys, keys + 2, side="right")
+        span = ext[hi_rank] - ext[np.arange(ncells)]
+        return round_up(max(int(span.max()), 1), align)
+
+    return index_cached(index, f"extcap/{align}", build)
+
+
+def occupancy_plan(index: GridIndex, align: int = CAP_ALIGN,
+                   merged: bool = False) -> BucketPlan:
     """Window-length histogram -> capacity classes -> query-row partition.
 
     Rows keep ascending A-order inside every bucket (a cell's points share
     a class, so selections are runs of whole cells) and each row appears in
     exactly ONE bucket: per-bucket counts and slot bases compose back into
-    the single-pass count -> fill contract by concatenation.
+    the single-pass count -> fill contract by concatenation. ``merged``
+    plans classes on the merged range-window capacities (DESIGN.md S7).
     """
-    return index_cached(index, f"plan/{align}",
-                        lambda: _build_occupancy_plan(index, align))
+    return index_cached(index, f"plan/{align}/{merged}",
+                        lambda: _build_occupancy_plan(index, align, merged))
 
 
-def _build_occupancy_plan(index: GridIndex, align: int) -> BucketPlan:
+def _build_occupancy_plan(index: GridIndex, align: int,
+                          merged: bool = False) -> BucketPlan:
     npts = index.num_points
-    cap_global = round_up(max(int(index.max_per_cell), 1), align)
+    cap_global = global_window_cap(index, merged, align)
     if cap_global <= align or npts == 0:
         return BucketPlan(caps=(cap_global,), sel=(None,),
                           cap_global=cap_global, hist={cap_global: npts})
     classes = capacity_classes(cap_global, align)
-    caps = cell_window_caps(index)                       # (ncells,)
+    caps = cell_window_caps_cached(index, merged=merged)  # (ncells,)
     caps_aligned = np.minimum(
         round_up(np.maximum(caps, 1), align), cap_global)
     cls_of_cell = np.searchsorted(np.asarray(classes), caps_aligned)

@@ -9,9 +9,11 @@ KNN-Join and GTS). This module generalizes the fused gather-refine path
 (kernels/fused_join.py) to that workload:
 
   * window descriptors come from each query's OWN cell coordinates under
-    D's grid geometry (``grid.external_window_descriptors``: coordinate-
-    space bounds masking, full 3^n stencil -- no UNICOMP, external queries
-    have no self-pair or triangle rule), and
+    D's grid geometry -- by default the MERGED-RANGE 3^(n-1) stencil
+    (``grid.external_range_descriptors``, DESIGN.md S7; no UNICOMP,
+    external queries have no self-pair or triangle rule), with the
+    per-cell 3^n sweep (``grid.external_window_descriptors``) retained
+    behind ``merge_last_dim=False`` as the parity oracle, and
   * the same single-pass count -> fill driver returns per-query neighbor
     COUNTS and neighbor PAIRS from one distance evaluation per candidate.
 
@@ -91,6 +93,20 @@ def _external_windows(index: GridIndex, offsets: jax.Array,
     n = index.grid_min.shape[0]
     return grid_lib.external_window_descriptors(
         index, offsets, queries_pad[:, :n], q_limit)
+
+
+@jax.jit
+def _external_range_windows(index: GridIndex, offsets: jax.Array,
+                            lo_off: jax.Array, hi_off: jax.Array,
+                            queries_pad: jax.Array, q_limit: jax.Array):
+    """Merged-range descriptor computation (DESIGN.md S7); cached by
+    (n_off, Q_pad) shape. Returns (win_start, win_count) -- the external
+    join does not report per-cell work counters."""
+    _bump("external_range_windows")
+    n = index.grid_min.shape[0]
+    ws, wc, _ = grid_lib.external_range_descriptors(
+        index, offsets, lo_off, hi_off, queries_pad[:, :n], q_limit)
+    return ws, wc
 
 
 @jax.jit
@@ -193,22 +209,41 @@ class PreparedJoin:
     steady-state executable off the request path.
     """
 
-    def __init__(self, index: GridIndex):
-        from repro.core.grid import capacity_classes
+    def __init__(self, index: GridIndex,
+                 merge_last_dim: Optional[bool] = None):
+        from repro.core.grid import capacity_classes, external_range_cap
+        from repro.core.stencil import merged_stencil_offsets
         from repro.kernels import autotune
-        from repro.kernels.fused_join import pad_points
+        from repro.kernels.fused_join import (pad_points,
+                                              resolve_merge_last_dim)
 
         self.index = index
         self.n_dims = index.n_dims
         self.eps = float(index.eps)
-        self.c = _round_up(max(int(index.max_per_cell), 1), _C_ALIGN)
-        offs = stencil_offsets(self.n_dims, unicomp=False)   # full 3^n
-        self.n_offsets = offs.shape[0]
-        self.offsets = jnp.asarray(offs)                     # (n_off, n)
+        # merged-range sweep (DESIGN.md S7): 3^(n-1) reduced offsets, full
+        # stencil (external queries have no UNICOMP)
+        self.merged = resolve_merge_last_dim(self.n_dims, merge_last_dim)
+        if self.merged:
+            self.c = external_range_cap(index, _C_ALIGN)
+            reduced, lo, hi = merged_stencil_offsets(self.n_dims,
+                                                     unicomp=False)
+            self.n_offsets = reduced.shape[0]
+            self.offsets = jnp.asarray(reduced)              # (n_off, n)
+            self.lo_off = jnp.asarray(lo)
+            self.hi_off = jnp.asarray(hi)
+            self.points_pad = pad_points(
+                index.points_sorted, self.c,
+                last_coord=grid_lib.point_last_coords(index))
+        else:
+            self.c = _round_up(max(int(index.max_per_cell), 1), _C_ALIGN)
+            offs = stencil_offsets(self.n_dims, unicomp=False)  # full 3^n
+            self.n_offsets = offs.shape[0]
+            self.offsets = jnp.asarray(offs)                 # (n_off, n)
+            self.points_pad = pad_points(index.points_sorted, self.c)
         self.is_zero = jnp.zeros((self.n_offsets,), jnp.int32)  # unused mask
-        self.points_pad = pad_points(index.points_sorted, self.c)
         self.order_np = np.asarray(index.order)
         self.dtype = np.dtype(index.points_sorted.dtype)
+        self.gmin_np = np.asarray(index.grid_min)
         self.classes = capacity_classes(self.c, _C_ALIGN)
         # Per-class query tile from the measured table, clamped to the
         # service's request-padding unit so bucket_rows stays the public
@@ -226,6 +261,14 @@ class PreparedJoin:
         qp = bucket_rows(q.shape[0])
         q_pad = np.zeros((qp, NP_PAD), self.dtype)
         q_pad[: q.shape[0], : self.n_dims] = q
+        if self.merged:
+            # last-dim cell coordinate rides the first pad lane (kernel
+            # boundary mask); same float computation as grid.cell_coords,
+            # clipped -- any query whose raw coordinate leaves the clip
+            # range has no live window, so the clip never changes a mask
+            qc = np.floor((q[:, -1] - self.gmin_np[-1]) / self.eps)
+            q_pad[: q.shape[0], self.n_dims] = np.clip(qc, -(1 << 24),
+                                                       1 << 24)
         return jnp.asarray(q_pad), qp
 
     def _q_pos(self, qp: int) -> jax.Array:
@@ -285,9 +328,14 @@ class PreparedJoin:
                 f"adjacent-cell stencil only covers the build radius")
         n_queries = q.shape[0]
         q_dev, qp = self._pad_queries(q)
-        ws, wc = _external_windows(
-            self.index, self.offsets, q_dev,
-            jnp.asarray(n_queries, jnp.int32))
+        if self.merged:
+            ws, wc = _external_range_windows(
+                self.index, self.offsets, self.lo_off, self.hi_off, q_dev,
+                jnp.asarray(n_queries, jnp.int32))
+        else:
+            ws, wc = _external_windows(
+                self.index, self.offsets, q_dev,
+                jnp.asarray(n_queries, jnp.int32))
         if return_pairs and emit is None:
             emit = "device" if jax.default_backend() == "tpu" else "host"
         if not self.bucketed:
@@ -295,7 +343,7 @@ class PreparedJoin:
             hits, counts, base = ops.fused_join_hits(
                 self.points_pad, q_dev, ws, wc, self.is_zero,
                 self._q_pos(qp), eps, c=self.c, n_real=self.n_dims,
-                unicomp=False, external=True, tq=tile,
+                unicomp=False, external=True, merged=self.merged, tq=tile,
                 keep_hits=return_pairs, method=method)
             counts_np = np.asarray(counts)[:n_queries]
             pairs = None
@@ -322,8 +370,8 @@ class PreparedJoin:
                 hits, counts, base = ops.fused_join_hits(
                     self.points_pad, q_b, ws_b, wc_b, self.is_zero,
                     self._q_pos(qp_b), eps, c=cb, n_real=self.n_dims,
-                    unicomp=False, external=True, tq=tile,
-                    keep_hits=return_pairs, method=method)
+                    unicomp=False, external=True, merged=self.merged,
+                    tq=tile, keep_hits=return_pairs, method=method)
                 counts_b = np.asarray(counts)[:rows.size]
                 counts_np[rows] = counts_b
                 if return_pairs:
@@ -394,7 +442,8 @@ class PreparedJoin:
                             self.points_pad, q_b, ws_b, wc_b, self.is_zero,
                             self._q_pos(s), self.eps, c=cb,
                             n_real=self.n_dims, unicomp=False,
-                            external=True, tq=tile, keep_hits=keep)
+                            external=True, merged=self.merged, tq=tile,
+                            keep_hits=keep)
                         np.asarray(counts)   # block: compile now, not later
                     s *= 2
         # single-class requests pad with _TQ too (class tiles are clamped
@@ -402,16 +451,22 @@ class PreparedJoin:
         return bucket_rows(n)
 
 
-def prepare(index: GridIndex) -> PreparedJoin:
-    """Prepare a grid index for repeated external-query joins."""
-    return PreparedJoin(index)
+def prepare(index: GridIndex,
+            merge_last_dim: Optional[bool] = None) -> PreparedJoin:
+    """Prepare a grid index for repeated external-query joins.
+
+    ``merge_last_dim`` (default on) serves requests through the 3^(n-1)
+    merged-range stencil (DESIGN.md S7); ``False`` keeps the per-cell
+    3^n sweep as the parity oracle."""
+    return PreparedJoin(index, merge_last_dim=merge_last_dim)
 
 
 def epsilon_join(queries, points, eps: Optional[float] = None, *,
                  index: Optional[GridIndex] = None,
                  return_pairs: bool = True, sort_pairs: bool = True,
                  emit: Optional[str] = None, method: Optional[str] = None,
-                 with_stats: bool = False) -> QueryJoinResult:
+                 with_stats: bool = False,
+                 merge_last_dim: Optional[bool] = None) -> QueryJoinResult:
     """One-shot external-query epsilon join: counts and pairs of all
     indexed points within ``eps`` of each query.
 
@@ -423,7 +478,7 @@ def epsilon_join(queries, points, eps: Optional[float] = None, *,
     """
     if index is None:
         index = build_grid_host(np.asarray(points), float(eps))
-    return prepare(index).join(
+    return prepare(index, merge_last_dim=merge_last_dim).join(
         queries, eps=eps, return_pairs=return_pairs, sort_pairs=sort_pairs,
         emit=emit, method=method, with_stats=with_stats)
 
@@ -445,6 +500,7 @@ def executable_cache_stats() -> dict:
 
     return {
         "external_windows": size(_external_windows),
+        "external_range_windows": size(_external_range_windows),
         "window_caps": size(_window_caps),
         "bucket_select": size(_bucket_select),
         "fused_reference": size(fj._fused_join_hits_reference),

@@ -72,6 +72,13 @@ class JoinStats:
     #   'jnp'     reference dense counter (fused plan measured slower)
     route: str = "dense"
 
+    @property
+    def n_offsets(self) -> int:
+        """Stencil offsets swept: 3^n (full) / (3^n+1)/2 (UNICOMP) for the
+        per-cell sweep; 3^(n-1) / (3^(n-1)+1)/2 for the merged-range sweep
+        (DESIGN.md S7)."""
+        return self.offsets
+
 
 def _offset_tables(index: GridIndex, unicomp: bool):
     """Static offset list -> (deltas (n_off,), is_zero (n_off,)) device arrays."""
@@ -81,6 +88,33 @@ def _offset_tables(index: GridIndex, unicomp: bool):
     deltas = jnp.asarray(offs) @ row_major_strides(index.dims)  # (n_off,)
     is_zero = jnp.asarray(np.all(offs == 0, axis=1))
     return deltas, is_zero
+
+
+def _merged_offset_tables(index: GridIndex, unicomp: bool):
+    """Merged-range sweep tables (DESIGN.md S7).
+
+    Returns (dtab (3, n_off) int64, is_zero (n_off,)): row 0 the linearized
+    reduced offsets (last coordinate 0), rows 1/2 the lo/hi last-dimension
+    span deltas each reduced offset covers ({-1..+1}; the UNICOMP zero
+    offset spans [0, +1]). Packed as one array so the jitted descriptor
+    preps keep a single traced-operand signature for both sweep modes.
+    """
+    from repro.core.grid import row_major_strides
+    from repro.core.stencil import merged_stencil_offsets
+
+    reduced, lo, hi = merged_stencil_offsets(index.n_dims, unicomp)
+    deltas = jnp.asarray(reduced) @ row_major_strides(index.dims)
+    dtab = jnp.stack([deltas, jnp.asarray(lo), jnp.asarray(hi)])
+    is_zero = jnp.asarray(np.all(reduced == 0, axis=1))
+    return dtab, is_zero
+
+
+def _resolve_merge(index: GridIndex, merge_last_dim: Optional[bool]) -> bool:
+    """The shared merge-resolution rule applied to this index (see
+    ``kernels.fused_join.resolve_merge_last_dim``)."""
+    from repro.kernels.fused_join import resolve_merge_last_dim
+
+    return resolve_merge_last_dim(index.n_dims, merge_last_dim)
 
 
 def _neighbor_ranks_for_delta(index: GridIndex, delta: jax.Array) -> jax.Array:
@@ -288,9 +322,10 @@ def _fused_tile(index: GridIndex, c: int) -> int:
     return autotune.fused_tile(index.n_dims, c)
 
 
-@partial(jax.jit, static_argnames=("qp", "q_limit"))
+@partial(jax.jit, static_argnames=("qp", "q_limit", "merged"))
 def _fused_prep(index: GridIndex, points_pad: jax.Array, deltas: jax.Array,
-                q_start: jax.Array, *, qp: int, q_limit: int):
+                q_start: jax.Array, *, qp: int, q_limit: int,
+                merged: bool = False):
     """Window descriptors + contiguous query slice for one batch.
 
     Pure index arithmetic and a contiguous slice -- explicitly NOT a
@@ -298,23 +333,37 @@ def _fused_prep(index: GridIndex, points_pad: jax.Array, deltas: jax.Array,
     touched inside the fused kernel. ``q_limit`` < qp zeroes the windows of
     tile-padding query rows so batches rounded up to the tile unit never
     overlap the next batch's queries.
+
+    ``merged``: ``deltas`` is the (3, n_off) merged table
+    (``_merged_offset_tables``) and the descriptors are last-dimension
+    range windows; the extra ``wcells`` return is the per-window non-empty
+    cell count (1/0 for per-cell windows), keeping merged and unmerged
+    work counters identical.
     """
-    from repro.core.grid import window_descriptors
+    from repro.core.grid import (range_window_descriptors,
+                                 window_descriptors)
     from repro.kernels.fused_join import NP_PAD
 
-    ws, wc = window_descriptors(index, deltas, q_start, qp)
+    if merged:
+        ws, wc, wcells = range_window_descriptors(
+            index, deltas[0], deltas[1], deltas[2], q_start, qp)
+    else:
+        ws, wc = window_descriptors(index, deltas, q_start, qp)
+        wcells = (wc > 0).astype(jnp.int32)
     if q_limit < qp:
-        wc = jnp.where(jnp.arange(qp, dtype=jnp.int32) < q_limit, wc, 0)
+        ok = jnp.arange(qp, dtype=jnp.int32) < q_limit
+        wc = jnp.where(ok, wc, 0)
+        wcells = jnp.where(ok, wcells, 0)
     q_batch = jax.lax.dynamic_slice(
         points_pad, (q_start, jnp.asarray(0, q_start.dtype)), (qp, NP_PAD))
     q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(qp, dtype=jnp.int32)
-    return ws, wc, q_batch, q_pos
+    return ws, wc, wcells, q_batch, q_pos
 
 
-@partial(jax.jit, static_argnames=("qp",))
+@partial(jax.jit, static_argnames=("qp", "merged"))
 def _fused_bucket_prep(index: GridIndex, points_pad: jax.Array,
                        deltas: jax.Array, sel: jax.Array, nsel: jax.Array,
-                       *, qp: int):
+                       *, qp: int, merged: bool = False):
     """Window descriptors + gathered query rows for one occupancy bucket.
 
     ``sel`` is the bucket's (qp,) sorted-position selection (ascending
@@ -322,63 +371,73 @@ def _fused_bucket_prep(index: GridIndex, points_pad: jax.Array,
     and get zeroed windows. The candidate windows stay contiguous runs of
     ``points_sorted`` -- only the QUERY side is permuted.
     """
-    from repro.core.grid import window_descriptors_at
+    from repro.core.grid import (range_window_descriptors_at,
+                                 window_descriptors_at)
 
     q_ok = jnp.arange(qp, dtype=jnp.int32) < nsel
     q_pos = jnp.minimum(sel.astype(jnp.int32), index.num_points - 1)
-    ws, wc = window_descriptors_at(index, deltas, q_pos, q_ok)
+    if merged:
+        ws, wc, wcells = range_window_descriptors_at(
+            index, deltas[0], deltas[1], deltas[2], q_pos, q_ok)
+    else:
+        ws, wc = window_descriptors_at(index, deltas, q_pos, q_ok)
+        wcells = (wc > 0).astype(jnp.int32)
     q_batch = points_pad[q_pos]
-    return ws, wc, q_batch, q_pos
+    return ws, wc, wcells, q_batch, q_pos
 
 
 def _fused_pad(index: GridIndex, *, q_size: int, c: int,
-               q_start_max: int = 0, tq: int = 128):
+               q_start_max: int = 0, tq: int = 128, merged: bool = False):
     """One padded-points copy shared by every batch of a sweep. The tail
     covers the C-slot window reads and the worst batch's rounded-up query
     slice (``q_start_max`` = largest batch origin), so the per-batch
-    dynamic_slice never clamps."""
+    dynamic_slice never clamps. Merged sweeps ride the per-point last-dim
+    cell coordinate in the first pad lane (the kernel's boundary mask);
+    query slices of this copy inherit it."""
+    from repro.core.grid import point_last_coords
     from repro.kernels.fused_join import pad_points
 
     qp = _round_up(max(q_size, 1), tq)
     tail = max(c, q_start_max + qp - index.num_points)
-    return pad_points(index.points_sorted, tail), qp
+    lc = point_last_coords(index) if merged else None
+    return pad_points(index.points_sorted, tail, last_coord=lc), qp
 
 
 def _fused_batch_run(index: GridIndex, points_pad, deltas, is_zero, q_start,
                      *, qp: int, q_size: int, c: int, unicomp: bool,
                      keep_hits: bool, method: Optional[str] = None,
-                     tq: int = 128):
+                     tq: int = 128, merged: bool = False):
     """One contiguous query batch through the fused kernel."""
     from repro.kernels import ops
 
-    ws, wc, q_batch, q_pos = _fused_prep(
+    ws, wc, wcells, q_batch, q_pos = _fused_prep(
         index, points_pad, deltas, jnp.asarray(q_start, jnp.int32), qp=qp,
-        q_limit=max(q_size, 1))
+        q_limit=max(q_size, 1), merged=merged)
     hits, counts, base = ops.fused_join_hits(
         points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
         index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
-        keep_hits=keep_hits, method=method)
-    return ws, wc, hits, counts, base, q_pos
+        merged=merged, keep_hits=keep_hits, method=method)
+    return ws, wc, wcells, hits, counts, base, q_pos
 
 
 def _fused_bucket_launch(index: GridIndex, points_pad, deltas, is_zero,
                          sel: np.ndarray, *, qp: int, c: int, unicomp: bool,
                          keep_hits: bool, method: Optional[str] = None,
-                         tq: int = 128):
+                         tq: int = 128, merged: bool = False):
     """One occupancy bucket through the fused kernel at ITS capacity."""
     from repro.kernels import ops
 
     nsel = sel.shape[0]
     sel_pad = np.zeros(qp, np.int32)
     sel_pad[:nsel] = sel
-    ws, wc, q_batch, q_pos = _fused_bucket_prep(
+    ws, wc, wcells, q_batch, q_pos = _fused_bucket_prep(
         index, points_pad, deltas, jnp.asarray(sel_pad),
-        jnp.asarray(nsel, jnp.int32), qp=qp)
+        jnp.asarray(nsel, jnp.int32), qp=qp, merged=merged)
     hits, counts, base = ops.fused_join_hits(
         points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
         index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
-        keep_hits=keep_hits, method=method)
-    return ws, wc, hits, counts, base, q_pos
+        merged=merged, keep_hits=keep_hits, method=method)
+    return ws, wc, wcells, hits, counts, base, q_pos
 
 
 @partial(jax.jit, static_argnames=("c", "tq", "unicomp", "capacity"))
@@ -461,32 +520,34 @@ def _emit_from_hits_host(order: np.ndarray, hits, win_start,
 
 
 def _fused_launches(index: GridIndex, *, n_batches: int,
-                    bucketed: Optional[bool]):
+                    bucketed: Optional[bool], merged: bool = False):
     """The launch schedule of one fused sweep: occupancy buckets (each
     chunked to the batching bound), or contiguous batches when the plan is
     a single class. Returns (launches, points_pad, c_max) where every
-    launch is (sel|None, q_start, q_size, qp, c, tile)."""
-    from repro.core.grid import occupancy_plan
+    launch is (sel|None, q_start, q_size, qp, c, tile). ``merged``
+    schedules against the merged range-window capacities (DESIGN.md S7)
+    and pads the points copy with the boundary-mask coordinate lane."""
+    from repro.core.grid import global_window_cap, occupancy_plan
 
     npts = index.num_points
-    c_glob = _round_up(max(int(index.max_per_cell), 1), 8)
+    c_glob = global_window_cap(index, merged)
     n_batches = max(int(n_batches), 1)
     batch_rows = -(-max(npts, 1) // n_batches)  # ceil
     if bucketed is None:
         bucketed = True
-    plan = occupancy_plan(index) if bucketed else None
+    plan = occupancy_plan(index, merged=merged) if bucketed else None
     launches = []
     if plan is None or plan.sel[0] is None:
         cap = c_glob if plan is None else plan.caps[0]
         tile = _fused_tile(index, cap)
         points_pad, qp = _fused_pad(
             index, q_size=batch_rows, c=c_glob, tq=tile,
-            q_start_max=(n_batches - 1) * batch_rows)
+            q_start_max=(n_batches - 1) * batch_rows, merged=merged)
         for b in range(n_batches):
             q_size = min(batch_rows, npts - b * batch_rows)
             launches.append((None, b * batch_rows, q_size, qp, cap, tile))
         return launches, points_pad, c_glob
-    points_pad, _ = _fused_pad(index, q_size=1, c=c_glob)
+    points_pad, _ = _fused_pad(index, q_size=1, c=c_glob, merged=merged)
     for cap, sel in zip(plan.caps, plan.sel):
         tile = _fused_tile(index, cap)
         for i in range(0, sel.shape[0], batch_rows):
@@ -499,7 +560,8 @@ def _fused_launches(index: GridIndex, *, n_batches: int,
 def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
                      n_batches: int = 1, method: Optional[str] = None,
                      emit: Optional[str] = None,
-                     bucketed: Optional[bool] = None):
+                     bucketed: Optional[bool] = None,
+                     merged: bool = True):
     """Single-pass count -> fill driver for distance_impl='fused'.
 
     Per launch (an occupancy bucket chunk, or a contiguous batch when the
@@ -513,15 +575,24 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
     across launches so the emit scatter compiles O(log) times, not per
     launch. Bucketed and single-capacity schedules emit the same pair SET
     (row order differs across buckets; ``sort_result`` canonicalizes).
+
+    ``merged`` (default) sweeps the 3^(n-1) merged-range stencil
+    (DESIGN.md S7); ``merged=False`` keeps the per-cell 3^n sweep as the
+    parity oracle. Both emit the same pair set (asserted in tests and by
+    the CI bench smoke) -- the fill machinery is shared unchanged because
+    merged windows are still contiguous runs of ``points_sorted``.
     """
     if emit is None:
         emit = "device" if jax.default_backend() == "tpu" else "host"
-    deltas, is_zero = _offset_tables(index, unicomp)
+    if merged:
+        deltas, is_zero = _merged_offset_tables(index, unicomp)
+    else:
+        deltas, is_zero = _offset_tables(index, unicomp)
     npts = index.num_points
     order_np = np.asarray(index.order)
     mult = 2 if unicomp else 1
     launches, points_pad, _ = _fused_launches(
-        index, n_batches=n_batches, bucketed=bucketed)
+        index, n_batches=n_batches, bucketed=bucketed, merged=merged)
     single = len(launches) == 1
 
     def finish(run):
@@ -548,14 +619,15 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
     prev = None
     for sel, q_start, q_size, qp, cap, tile in launches:
         if sel is None:
-            ws, _, hits, counts, base, q_pos = _fused_batch_run(
+            ws, _, _, hits, counts, base, q_pos = _fused_batch_run(
                 index, points_pad, deltas, is_zero, q_start, qp=qp,
                 q_size=q_size, c=cap, unicomp=unicomp, keep_hits=True,
-                method=method, tq=tile)
+                method=method, tq=tile, merged=merged)
         else:
-            ws, _, hits, counts, base, q_pos = _fused_bucket_launch(
+            ws, _, _, hits, counts, base, q_pos = _fused_bucket_launch(
                 index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
-                unicomp=unicomp, keep_hits=True, method=method, tq=tile)
+                unicomp=unicomp, keep_hits=True, method=method, tq=tile,
+                merged=merged)
         if prev is not None:
             chunks.append(finish(prev))
         prev = (ws, hits, counts, base, q_pos, cap, tile)
@@ -571,49 +643,62 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
 def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
                            query_batch: Optional[int] = None,
                            method: Optional[str] = None,
-                           bucketed: Optional[bool] = None) -> JoinStats:
+                           bucketed: Optional[bool] = None,
+                           merged: bool = True) -> JoinStats:
     """Count-only fused sweep (keep_hits=False: no O(n_off*Q*C) buffer).
 
     Occupancy-bucketed by default; each bucket launch counts at ITS window
     capacity and the per-launch totals/work counters sum to exactly the
     single-capacity sweep's (every query row is in exactly one bucket).
     An explicit ``query_batch`` keeps the contiguous batched sweep (the
-    paper's SV-A memory bound) at the global capacity.
+    paper's SV-A memory bound) at the global capacity. The merged-range
+    sweep reports the SAME cells_visited / candidates_checked as the
+    per-cell sweep (a merged window's cell count and length are exactly
+    the sum of its constituent per-cell windows'); only ``offsets``
+    shrinks to 3^(n-1).
     """
-    deltas, is_zero = _offset_tables(index, unicomp)
+    from repro.core.grid import global_window_cap
+
+    if merged:
+        deltas, is_zero = _merged_offset_tables(index, unicomp)
+        n_off = int(deltas.shape[1])
+    else:
+        deltas, is_zero = _offset_tables(index, unicomp)
+        n_off = int(deltas.shape[0])
     npts = index.num_points
     mult = 2 if unicomp else 1
     if query_batch:
-        c = _round_up(max(int(index.max_per_cell), 1), 8)
+        c = global_window_cap(index, merged)
         tile = _fused_tile(index, c)
         q_size = int(query_batch)
         points_pad, qp = _fused_pad(
             index, q_size=q_size, c=c, tq=tile,
-            q_start_max=((npts - 1) // q_size) * q_size)
+            q_start_max=((npts - 1) // q_size) * q_size, merged=merged)
         launches = [(None, q_start, min(q_size, npts - q_start), qp, c, tile)
                     for q_start in range(0, npts, q_size)]
     else:
         launches, points_pad, _ = _fused_launches(
-            index, n_batches=1, bucketed=bucketed)
+            index, n_batches=1, bucketed=bucketed, merged=merged)
     total = cells = cands = 0
     for sel, q_start, q_size, qp, cap, tile in launches:
         if sel is None:
-            _, wc, _, counts, _, _ = _fused_batch_run(
+            _, wc, wcells, _, counts, _, _ = _fused_batch_run(
                 index, points_pad, deltas, is_zero, q_start, qp=qp,
                 q_size=q_size, c=cap, unicomp=unicomp, keep_hits=False,
-                method=method, tq=tile)
+                method=method, tq=tile, merged=merged)
         else:
-            _, wc, _, counts, _, _ = _fused_bucket_launch(
+            _, wc, wcells, _, counts, _, _ = _fused_bucket_launch(
                 index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
-                unicomp=unicomp, keep_hits=False, method=method, tq=tile)
+                unicomp=unicomp, keep_hits=False, method=method, tq=tile,
+                merged=merged)
         total += mult * int(counts.sum(dtype=jnp.int64))
-        cells += int((wc > 0).sum())
+        cells += int(wcells.sum(dtype=jnp.int64))
         cands += int(wc.sum(dtype=jnp.int64))
     return JoinStats(
         total_pairs=total,
         cells_visited=cells,
         candidates_checked=cands,
-        offsets=int(deltas.shape[0]),
+        offsets=n_off,
         route="dense",
     )
 
@@ -657,6 +742,68 @@ def _rank_plane_table(table, cell_keys, rank_arr, deltas32, *, qp: int):
     return jnp.where(ok, table[jnp.clip(qk, 0, vol - 1)], -1)
 
 
+@partial(jax.jit, static_argnames=("qp",))
+def _range_plane_search(keys, rank_arr, deltas, lo_off, hi_off, dim_last,
+                        *, qp: int):
+    """(n_off, qp) merged-range rank spans: one searchsorted PAIR per
+    reduced offset over the probe plane (DESIGN.md S7).
+
+    Returns (lo_rank, hi_rank); a probe is live iff hi_rank > lo_rank.
+    The last-dimension span clamps at the grid row exactly like
+    ``grid.range_window_descriptors_at``.
+    """
+    npts = keys.shape[0]
+    q_pos = jnp.arange(qp, dtype=jnp.int32)
+    q_ok = q_pos < npts
+    own = keys[rank_arr[jnp.minimum(q_pos, npts - 1)]]
+    q_last = own % dim_last
+    base = own[None, :] + deltas[:, None]
+    lo = jnp.maximum(lo_off[:, None], -q_last[None, :])
+    hi = jnp.minimum(hi_off[:, None], dim_last - 1 - q_last[None, :])
+    lo_rank = jnp.searchsorted(keys, base + lo, side="left").astype(jnp.int32)
+    hi_rank = jnp.searchsorted(keys, base + hi,
+                               side="right").astype(jnp.int32)
+    hi_rank = jnp.where(q_ok[None, :], hi_rank, lo_rank)   # pad rows dead
+    return lo_rank, hi_rank
+
+
+@partial(jax.jit, static_argnames=("qp",))
+def _range_plane_table(table, cell_keys, rank_arr, deltas32, lo_off, hi_off,
+                       dim_last, *, qp: int):
+    """Merged-range rank spans via the dense key -> rank table: three plane
+    GATHERS (one per last-dimension slot) instead of binary searches.
+
+    Within a merged span the only possible keys are base + {-1, 0, +1}, so
+    the span's rank range is [min present probed rank, max present probed
+    rank + 1] -- contiguity of the span makes the min/max reconstruction
+    exact.
+    """
+    vol = table.shape[0]
+    npts = rank_arr.shape[0]
+    q_pos = jnp.arange(qp, dtype=jnp.int32)
+    own = cell_keys[rank_arr[jnp.minimum(q_pos, npts - 1)]].astype(jnp.int32)
+    q_last = own % dim_last
+    own = jnp.where(q_pos < npts, own, -(1 << 30))
+    base = own[None, :] + deltas32[:, None]
+    big = jnp.asarray(1 << 30, jnp.int32)
+    lo_rank = jnp.full(base.shape, big, jnp.int32)
+    hi_rank = jnp.full(base.shape, -1, jnp.int32)
+    for d in (-1, 0, 1):
+        qk = base + d
+        in_span = ((d >= lo_off[:, None]) & (d <= hi_off[:, None])
+                   & (q_last[None, :] + d >= 0)
+                   & (q_last[None, :] + d < dim_last))
+        ok = in_span & (qk >= 0) & (qk < vol)
+        r = jnp.where(ok, table[jnp.clip(qk, 0, vol - 1)], -1)
+        present = r >= 0
+        lo_rank = jnp.where(present, jnp.minimum(lo_rank, r), lo_rank)
+        hi_rank = jnp.where(present, jnp.maximum(hi_rank, r), hi_rank)
+    live = hi_rank >= 0
+    lo_rank = jnp.where(live, lo_rank, 0)
+    hi_rank = jnp.where(live, hi_rank + 1, 0)
+    return lo_rank, hi_rank
+
+
 # Dense-lookup budget: prod(dims) at or below this many cells (x4 bytes)
 # buys the table path; beyond it, binary search (the paper's trade) wins.
 _LOOKUP_MAX_CELLS = 1 << 23   # 32 MB
@@ -697,20 +844,17 @@ def _sparse_lookup(index: GridIndex):
 
 
 @partial(jax.jit, static_argnames=("c", "unicomp"))
-def _count_probes(points_sorted, eps, cell_start, cell_count, p_nbr,
-                  p_qpos, p_zero, *, c: int, unicomp: bool):
-    """Distance evaluation over a PACKED probe list (live windows only).
-
-    Probes carry the neighbor cell's RANK; the window start/count gathers
-    happen here, over the packed list, not over the full plane. Padding
-    probes carry rank -1 -> zero-length windows."""
+def _count_probes_span(points_sorted, eps, p_start, p_count, p_qpos, p_zero,
+                       *, c: int, unicomp: bool):
+    """Distance evaluation over PACKED probes carrying explicit point
+    spans: window start / count arrive precomputed (single-cell windows
+    on the per-cell sparse path, rank spans on the merged path), so the
+    one probe evaluator serves both sweeps. Padding probes carry
+    count 0."""
     npts = points_sorted.shape[0]
-    nbr_c = jnp.maximum(p_nbr, 0)
-    start = cell_start[nbr_c]
-    cnt = jnp.where(p_nbr >= 0, cell_count[nbr_c], 0)
     slots = jnp.arange(c, dtype=jnp.int32)
-    cand_pos = jnp.minimum(start[:, None] + slots[None, :], npts - 1)
-    valid = slots[None, :] < cnt[:, None]
+    cand_pos = jnp.minimum(p_start[:, None] + slots[None, :], npts - 1)
+    valid = slots[None, :] < p_count[:, None]
     q = points_sorted[jnp.minimum(p_qpos, npts - 1)]
     d2 = jnp.zeros(cand_pos.shape, points_sorted.dtype)
     for dim in range(points_sorted.shape[1]):
@@ -726,7 +870,8 @@ def _count_probes(points_sorted, eps, cell_start, cell_count, p_nbr,
 
 
 def _self_join_count_sparse(index: GridIndex, *, unicomp: bool,
-                            method: Optional[str] = None) -> JoinStats:
+                            method: Optional[str] = None,
+                            merged: bool = True) -> JoinStats:
     """Probe-compacted counter for the empty-neighbor regime (route
     'sparse').
 
@@ -744,14 +889,93 @@ def _self_join_count_sparse(index: GridIndex, *, unicomp: bool,
     counters match the dense sweep's by construction (same probe plane).
     Unlike 'compact' (per-offset argsort packing, a TPU-only win), the
     single flat compaction amortizes across the whole stencil.
+
+    ``merged`` (default) compacts the 3^(n-1) merged-range plane
+    (DESIGN.md S7): rank SPANS per probe (searchsorted pair, or three
+    table gathers), each packed probe evaluating one contiguous point
+    span. The plane shrinks 3x in the offset axis and probes get 3x
+    likelier to be live, so the same candidate volume packs into far
+    fewer, longer windows.
     """
     del method  # probe evaluation is a jnp op; no kernel variant yet
-    deltas, is_zero = _offset_tables(index, unicomp)
-    c = _round_up(max(int(index.max_per_cell), 1), 8)
+    from repro.core.grid import global_window_cap
+
     npts = index.num_points
     mult = 2 if unicomp else 1
     qp = _round_up(max(npts, 1), 128)
     kind, lookup = _sparse_lookup(index)
+    if merged:
+        dtab, is_zero = _merged_offset_tables(index, unicomp)
+        n_off = int(dtab.shape[1])
+        c = global_window_cap(index, merged=True)
+        dim_last = int(np.asarray(index.dims)[-1])
+        if kind == "table":
+            lo_rank, hi_rank = _range_plane_table(
+                lookup, index.cell_keys, index.point_cell_rank,
+                dtab[0].astype(jnp.int32), dtab[1].astype(jnp.int32),
+                dtab[2].astype(jnp.int32),
+                jnp.asarray(dim_last, jnp.int32), qp=qp)
+        else:
+            dt = lookup.dtype
+            lo_rank, hi_rank = _range_plane_search(
+                lookup, index.point_cell_rank, dtab[0].astype(dt),
+                dtab[1].astype(dt), dtab[2].astype(dt),
+                jnp.asarray(dim_last, dt), qp=qp)
+        from repro.core.grid import starts_ext
+
+        lo_rank, hi_rank = np.asarray(lo_rank), np.asarray(hi_rank)
+        ext = starts_ext(index)
+        off, q = np.nonzero(hi_rank > lo_rank)
+        n_live = off.shape[0]
+        lo_l, hi_l = lo_rank[off, q], hi_rank[off, q]
+        w_start = ext[lo_l]
+        w_count = ext[hi_l] - w_start
+        cells = int((hi_l - lo_l).sum(dtype=np.int64)) if n_live else 0
+        total = 0
+        cands = int(w_count.sum(dtype=np.int64)) if n_live else 0
+        if n_live:
+            from repro.core.grid import capacity_classes
+
+            is_zero_np = np.asarray(is_zero).astype(np.int32)
+            q_np, off_np = q, off
+            # Merged spans vary 1..3 cells, so a single global capacity
+            # would pad every probe to the worst ADJACENT-TRIPLE occupancy
+            # (~3x the per-cell max on clustered data). Class the packed
+            # probes by pow2 window length instead -- the sparse-route
+            # analogue of the occupancy buckets: total padded slots stay
+            # within 2x of the true candidate volume at O(log C) compiles.
+            ladder = np.asarray(capacity_classes(c, 8))
+            cls = np.searchsorted(
+                ladder, np.minimum(_round_up(w_count, 8), int(ladder[-1])))
+            chunk = 1 << 17
+            for k, ccap in enumerate(ladder):
+                rows = np.flatnonzero(cls == k)
+                for i in range(0, rows.shape[0], chunk):
+                    sel = rows[i:i + chunk]
+                    m = sel.shape[0]
+                    cap = min(chunk, max(_next_pow2(m), 128))
+                    p_start = np.zeros(cap, np.int32)
+                    p_count = np.zeros(cap, np.int32)
+                    p_qpos = np.zeros(cap, np.int32)
+                    p_zero = np.zeros(cap, np.int32)
+                    p_start[:m] = w_start[sel]
+                    p_count[:m] = w_count[sel]
+                    p_qpos[:m] = q_np[sel]
+                    p_zero[:m] = is_zero_np[off_np[sel]]
+                    total += int(_count_probes_span(
+                        index.points_sorted, index.eps,
+                        jnp.asarray(p_start), jnp.asarray(p_count),
+                        jnp.asarray(p_qpos), jnp.asarray(p_zero),
+                        c=int(ccap), unicomp=unicomp))
+        return JoinStats(
+            total_pairs=mult * total,
+            cells_visited=cells,
+            candidates_checked=cands,
+            offsets=n_off,
+            route="sparse",
+        )
+    deltas, is_zero = _offset_tables(index, unicomp)
+    c = _round_up(max(int(index.max_per_cell), 1), 8)
     if kind == "table":
         nbr = np.asarray(_rank_plane_table(
             lookup, index.cell_keys, index.point_cell_rank,
@@ -763,6 +987,7 @@ def _self_join_count_sparse(index: GridIndex, *, unicomp: bool,
     off, q = np.nonzero(nbr >= 0)
     n_live = off.shape[0]
     cc_np = np.asarray(index.cell_count)
+    cs_np = np.asarray(index.cell_start)
     total = 0
     cands = 0
     if n_live:
@@ -772,16 +997,19 @@ def _self_join_count_sparse(index: GridIndex, *, unicomp: bool,
             o_c, q_c = off[i:i + chunk], q[i:i + chunk]
             m = o_c.shape[0]
             cap = min(chunk, max(_next_pow2(m), 128))
-            p_nbr = np.full(cap, -1, np.int32)
+            p_start = np.zeros(cap, np.int32)
+            p_count = np.zeros(cap, np.int32)
             p_qpos = np.zeros(cap, np.int32)
             p_zero = np.zeros(cap, np.int32)
-            p_nbr[:m] = nbr[o_c, q_c]
+            live_nbr = nbr[o_c, q_c]
+            p_start[:m] = cs_np[live_nbr]
+            p_count[:m] = cc_np[live_nbr]
             p_qpos[:m] = q_c
             p_zero[:m] = is_zero_np[o_c]
-            cands += int(cc_np[p_nbr[:m]].sum(dtype=np.int64))
-            total += int(_count_probes(
-                index.points_sorted, index.eps, index.cell_start,
-                index.cell_count, jnp.asarray(p_nbr), jnp.asarray(p_qpos),
+            cands += int(cc_np[live_nbr].sum(dtype=np.int64))
+            total += int(_count_probes_span(
+                index.points_sorted, index.eps, jnp.asarray(p_start),
+                jnp.asarray(p_count), jnp.asarray(p_qpos),
                 jnp.asarray(p_zero), c=c, unicomp=unicomp))
     return JoinStats(
         total_pairs=mult * total,
@@ -945,7 +1173,7 @@ def self_join_count_compact(
         tile = _fused_tile(index, max_per_cell)
         points_pad, qp = _fused_pad(
             index, q_size=index.num_points, c=max_per_cell, tq=tile)
-        _, wc0, _, counts0, _, _ = _fused_batch_run(
+        _, wc0, _, _, counts0, _, _ = _fused_batch_run(
             index, points_pad, deltas[:1], is_zero[:1], 0, qp=qp,
             q_size=index.num_points, c=max_per_cell, unicomp=unicomp,
             keep_hits=False, tq=tile)
@@ -979,6 +1207,7 @@ def self_join_count(
     query_batch: Optional[int] = None,
     route: Optional[str] = None,
     bucketed: Optional[bool] = None,
+    merge_last_dim: Optional[bool] = None,
 ) -> JoinStats:
     """Total ordered-pair count + work counters (no materialized result).
 
@@ -996,11 +1225,26 @@ def self_join_count(
     visit counter (cells_visited=0) and checks fewer candidate slots by
     construction. ``bucketed=False`` forces the single-capacity dense
     sweep (parity/debug knob).
+
+    ``merge_last_dim`` (default on) runs the fused 'dense'/'sparse'
+    routes over the 3^(n-1) merged-range stencil (DESIGN.md S7);
+    ``merge_last_dim=False`` keeps the per-cell 3^n sweep as the parity
+    oracle. Totals and cells/candidates counters are identical either
+    way; only ``offsets`` changes. The measured routing table covers the
+    SWEEP axis too: 'dense-flat' / 'sparse-flat' run the per-cell sweep
+    when it measured faster for the workload class (clustered data in low
+    dimensionality, where merged windows pay ~3x capacity padding for
+    only a small offset saving); the heuristic fallback never picks them.
+    'compact' (a TPU per-offset packing) and the 'jnp' reference always
+    sweep per cell.
     """
-    if route not in (None, "dense", "compact", "sparse", "jnp"):
-        raise ValueError(f"unknown route {route!r}; expected None, 'dense', "
-                         f"'compact', 'sparse', or 'jnp'")
+    routes = (None, "dense", "compact", "sparse", "jnp", "dense-flat",
+              "sparse-flat")
+    if route not in routes:
+        raise ValueError(f"unknown route {route!r}; expected one of "
+                         f"{routes[1:]}")
     index = _resolve_index(points, eps, index)
+    merged = _resolve_merge(index, merge_last_dim)
     route_label = "dense"
     if distance_impl == "fused":
         if route is None:
@@ -1008,17 +1252,23 @@ def self_join_count(
                 route = "dense"
             else:
                 route = _auto_route(index, unicomp=unicomp,
-                                    bucketed=bucketed)
+                                    bucketed=bucketed, merged=merged)
         if route == "compact":
             return self_join_count_compact(
                 points, eps, unicomp=unicomp, index=index,
                 distance_impl="fused")
-        if route == "sparse":
-            return _self_join_count_sparse(index, unicomp=unicomp)
-        if route == "dense":
-            return _self_join_count_fused(
-                index, unicomp=unicomp, query_batch=query_batch,
-                bucketed=bucketed)
+        if route in ("sparse", "sparse-flat"):
+            return dataclasses.replace(
+                _self_join_count_sparse(
+                    index, unicomp=unicomp,
+                    merged=merged and route == "sparse"),
+                route=route)
+        if route in ("dense", "dense-flat"):
+            return dataclasses.replace(
+                _self_join_count_fused(
+                    index, unicomp=unicomp, query_batch=query_batch,
+                    bucketed=bucketed, merged=merged and route == "dense"),
+                route=route)
         # route == 'jnp': the fused plan measured slower than the reference
         # dense counter for this workload class -- run that, log the route.
         distance_impl = "jnp"
@@ -1051,8 +1301,27 @@ def self_join_count(
     )
 
 
+def _join_sweep_merged(index: GridIndex, *, unicomp: bool,
+                       bucketed: Optional[bool], merged: bool) -> bool:
+    """Sweep choice for the pair-emitting join: follow the measured count
+    route's verdict ONLY when it judged the join's own sweep. The join
+    always runs the dense bucketed sweep, so a measured 'dense-flat'
+    winner (per-cell dense beat merged dense for this workload class)
+    transfers directly; a 'sparse-flat' winner is a verdict about the
+    probe-compacted COUNTER's table-vs-span tradeoff and says nothing
+    about the dense sweep -- the merged default stands there, as it does
+    on the heuristic tier (which never returns '-flat'). Exact either way
+    -- the S7 parity guarantee is what licenses the switch."""
+    if not merged:
+        return False
+    route = _auto_route(index, unicomp=unicomp, bucketed=bucketed,
+                        merged=True)
+    return route != "dense-flat"
+
+
 def _auto_route(index: GridIndex, *, unicomp: bool,
-                bucketed: Optional[bool] = None) -> str:
+                bucketed: Optional[bool] = None,
+                merged: bool = False) -> str:
     """Consult the routing table; measure the live candidates if tuning is
     enabled; fall back to the occupancy heuristic. The decision is a pure
     function of the index + sweep mode, so it is cached per index object:
@@ -1061,29 +1330,48 @@ def _auto_route(index: GridIndex, *, unicomp: bool,
     from repro.core.grid import index_cached
 
     return index_cached(
-        index, f"route/{unicomp}/{bucketed}",
+        index, f"route/{unicomp}/{bucketed}/{merged}",
         lambda: _auto_route_uncached(index, unicomp=unicomp,
-                                     bucketed=bucketed))
+                                     bucketed=bucketed, merged=merged))
 
 
 def _auto_route_uncached(index: GridIndex, *, unicomp: bool,
-                         bucketed: Optional[bool] = None) -> str:
+                         bucketed: Optional[bool] = None,
+                         merged: bool = False) -> str:
     from repro.kernels import autotune
 
+    # workload features come from the per-cell stencil either way -- they
+    # describe the data's neighbor regime, not the sweep; the MERGED
+    # sweep's n_off keys a separate table row (its candidates run merged)
     deltas, _ = _offset_tables(index, unicomp)
-    n_off = int(deltas.shape[0])
     feats = _route_features(index, deltas)
+    if merged:
+        dtab, _ = _merged_offset_tables(index, unicomp)
+        n_off = int(dtab.shape[1])
+    else:
+        n_off = int(deltas.shape[0])
     candidates = None
     if autotune.measure_enabled():
         candidates = {
             "dense": lambda: _self_join_count_fused(
-                index, unicomp=unicomp, bucketed=bucketed),
+                index, unicomp=unicomp, bucketed=bucketed, merged=merged),
             "sparse": lambda: _self_join_count_sparse(
-                index, unicomp=unicomp),
+                index, unicomp=unicomp, merged=merged),
             "jnp": lambda: self_join_count(
                 index.points_sorted, index.eps, unicomp=unicomp,
                 index=index, distance_impl="jnp"),
         }
+        if merged:
+            # the sweep itself is a measured axis: clustered data in low
+            # dimensionality can pay more in merged-window capacity
+            # padding than the 3x offset reduction saves, so the per-cell
+            # sweep competes for the slot (pair sets are identical either
+            # way -- the S7 parity guarantee is what makes the sweep a
+            # pure routing decision)
+            candidates["dense-flat"] = lambda: _self_join_count_fused(
+                index, unicomp=unicomp, bucketed=bucketed, merged=False)
+            candidates["sparse-flat"] = lambda: _self_join_count_sparse(
+                index, unicomp=unicomp, merged=False)
         if jax.default_backend() == "tpu":
             candidates["compact"] = lambda: self_join_count_compact(
                 index.points_sorted, index.eps, unicomp=unicomp,
@@ -1091,7 +1379,7 @@ def _auto_route_uncached(index: GridIndex, *, unicomp: bool,
     route, _src = autotune.count_route(
         n_dims=index.n_dims, n_off=n_off, c=feats["c"],
         occupancy=feats["occupancy"], live_frac=feats["live_frac"],
-        candidates=candidates)
+        merged=merged, candidates=candidates)
     return route
 
 
@@ -1104,20 +1392,26 @@ def self_join(
     distance_impl: str = "jnp",
     sort_result: bool = True,
     bucketed: Optional[bool] = None,
+    merge_last_dim: Optional[bool] = None,
 ):
     """Single-batch self-join. Returns (pairs (K,2) int32 np.ndarray).
 
     Two-phase: exact count, then fill with exactly-sized capacity
     ('jnp'/'pallas'); single-pass count -> fill for 'fused', occupancy-
     bucketed by default (``bucketed=False`` forces the single-capacity
-    launch; both produce the same pair set). For the incremental /
-    overlapped execution the paper uses, see ``self_join_batched``.
+    launch; both produce the same pair set) over the merged-range stencil
+    (``merge_last_dim=False`` keeps the per-cell 3^n sweep as the parity
+    oracle; DESIGN.md S7). For the incremental / overlapped execution the
+    paper uses, see ``self_join_batched``.
     """
     index = _resolve_index(points, eps, index)
     if distance_impl == "fused":
+        merged = _join_sweep_merged(
+            index, unicomp=unicomp, bucketed=bucketed,
+            merged=_resolve_merge(index, merge_last_dim))
         return _self_join_fused(
             index, unicomp=unicomp, sort_result=sort_result,
-            bucketed=bucketed)
+            bucketed=bucketed, merged=merged)
     stats = self_join_count(
         points, eps, unicomp=unicomp, index=index, distance_impl=distance_impl
     )
@@ -1152,6 +1446,7 @@ def self_join_batched(
     distance_impl: str = "jnp",
     sort_result: bool = True,
     bucketed: Optional[bool] = None,
+    merge_last_dim: Optional[bool] = None,
 ):
     """The paper's batching scheme (SV-A): >= 3 query batches, each batch's
     result copied to the host while the next batch computes (JAX async
@@ -1163,9 +1458,12 @@ def self_join_batched(
     """
     index = _resolve_index(points, eps, index)
     if distance_impl == "fused":
+        merged = _join_sweep_merged(
+            index, unicomp=unicomp, bucketed=bucketed,
+            merged=_resolve_merge(index, merge_last_dim))
         return _self_join_fused(
             index, unicomp=unicomp, sort_result=sort_result,
-            n_batches=n_batches, bucketed=bucketed)
+            n_batches=n_batches, bucketed=bucketed, merged=merged)
     npts = index.num_points
     n_batches = max(int(n_batches), 1)
     q_size = -(-npts // n_batches)  # ceil
@@ -1226,6 +1524,7 @@ def range_query(
     *,
     index: Optional[GridIndex] = None,
     return_pairs: bool = False,
+    merge_last_dim: Optional[bool] = None,
 ):
     """Epsilon-range counts for EXTERNAL query points against an indexed set.
 
@@ -1250,7 +1549,8 @@ def range_query(
     from repro.core.query_join import epsilon_join
 
     index = _resolve_index(points, eps, index)
-    res = epsilon_join(queries, None, index=index, return_pairs=return_pairs)
+    res = epsilon_join(queries, None, index=index, return_pairs=return_pairs,
+                       merge_last_dim=merge_last_dim)
     if return_pairs:
         return res.counts, res.pairs
     return res.counts
@@ -1261,13 +1561,52 @@ def per_point_neighbor_counts(
     eps,
     *,
     index: Optional[GridIndex] = None,
+    merge_last_dim: Optional[bool] = None,
 ) -> np.ndarray:
     """|epsilon-neighborhood| of each point (excl. self) -- the range-query
-    building block the paper cites for DBSCAN/OPTICS. Full-stencil sweep with
-    a scatter-add on the query id."""
+    building block the paper cites for DBSCAN/OPTICS. Sweeps the MERGED
+    3^(n-1) range stencil by default (DESIGN.md S7) with a scatter-add on
+    the query id; ``merge_last_dim=False`` keeps the per-cell 3^n sweep as
+    the parity oracle."""
     index = _resolve_index(points, eps, index)
-    deltas, is_zero = _offset_tables(index, unicomp=False)
-    max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)
+    merged = _resolve_merge(index, merge_last_dim)
+    if merged:
+        from repro.core.grid import global_window_cap
+        dtab, _ = _merged_offset_tables(index, unicomp=False)
+        cap = global_window_cap(index, merged=True)
+    else:
+        deltas, is_zero = _offset_tables(index, unicomp=False)
+        cap = _round_up(max(int(index.max_per_cell), 1), 8)
+
+    if merged:
+        @jax.jit
+        def run_merged(index, dtab):
+            from repro.core.grid import range_window_descriptors_at
+
+            npts = index.num_points
+            q_pos = jnp.arange(npts, dtype=jnp.int32)
+            ws, wc, _ = range_window_descriptors_at(
+                index, dtab[0], dtab[1], dtab[2], q_pos)
+            q = index.points_sorted
+            slots = jnp.arange(cap, dtype=jnp.int32)
+
+            def body(deg, xs):
+                ws_o, wc_o = xs
+                cand_pos = jnp.minimum(
+                    ws_o[:, None] + slots[None, :], npts - 1)
+                valid = slots[None, :] < wc_o[:, None]
+                cand = index.points_sorted[cand_pos]
+                hits = _distance_hits_jnp(q, cand, valid, index.eps)
+                hits = hits & (cand_pos != q_pos[:, None])
+                deg = deg.at[index.order].add(
+                    hits.sum(axis=1).astype(jnp.int32))
+                return deg, None
+
+            deg0 = jnp.zeros((npts,), jnp.int32)
+            deg, _ = jax.lax.scan(body, deg0, (ws, wc))
+            return deg
+
+        return np.asarray(run_merged(index, dtab))
 
     @jax.jit
     def run(index):
@@ -1276,7 +1615,7 @@ def per_point_neighbor_counts(
             nbr_cells = _neighbor_ranks_for_delta(index, delta)
             q, cand, cand_pos, valid, q_pos, _ = _gather_batch(
                 index, nbr_cells, jnp.asarray(0, jnp.int32),
-                index.num_points, max_per_cell,
+                index.num_points, cap,
             )
             hits = _distance_hits_jnp(q, cand, valid, index.eps)
             hits = hits & (cand_pos != q_pos[:, None])

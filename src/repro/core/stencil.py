@@ -74,6 +74,54 @@ def unicomp_paper_visits(coord: np.ndarray, n: int) -> list[tuple]:
     return visits
 
 
+def merged_stencil_offsets(
+    n: int, unicomp: bool
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The 3^(n-1) merged-range stencil (DESIGN.md S7).
+
+    Under row-major linearized keys the last dimension has stride 1, so the
+    three adjacent cells that differ only in the last coordinate by
+    {-1, 0, +1} occupy ADJACENT KEY RANKS in B -- their point windows are
+    one contiguous span of ``points_sorted`` (Gowanlock & Karsin,
+    arXiv:1809.09930). The per-cell triple therefore collapses into a
+    single range probe: this returns
+
+        reduced (n_off, n) int64 -- offset vectors with last coordinate 0,
+            one per distinct first-(n-1)-coordinate offset; zero first.
+        lo / hi (n_off,) int64   -- the last-dimension span each reduced
+            offset covers, as key deltas relative to the reduced target.
+
+    Full stencil: 3^(n-1) reduced offsets, each spanning [-1, +1]. UNICOMP
+    keeps a reduced offset iff its (n-1)-vector is zero or lexicographically
+    positive -- (3^(n-1) - 1)/2 + 1 offsets. The zero reduced offset spans
+    [0, +1] only (the lone-last-dim offset (0..0,-1) has first nonzero -1
+    and is dropped by the half-stencil rule); applying the o = 0 triangle
+    rule ``cand_pos > q_pos`` across that WHOLE merged window is exact:
+    own-cell candidates get the triangle, and every candidate from the
+    key+1 cell sits at a later sorted position than any own-cell query, so
+    the same predicate admits all of them. Equivalence with the unmerged
+    half-stencil is asserted in tests/test_merged_sweep.py.
+    """
+    offs = np.array(list(itertools.product((-1, 0, 1), repeat=n - 1)),
+                    dtype=np.int64)
+    if unicomp:
+        keep = []
+        for o in offs:
+            nz = np.nonzero(o)[0]
+            if nz.size == 0 or o[nz[0]] > 0:
+                keep.append(o)
+        offs = np.stack(keep)
+    zkey = np.all(offs == 0, axis=1)
+    offs = np.concatenate([offs[zkey], offs[~zkey]], axis=0)
+    reduced = np.concatenate(
+        [offs, np.zeros((offs.shape[0], 1), np.int64)], axis=1)
+    lo = np.full(offs.shape[0], -1, np.int64)
+    hi = np.full(offs.shape[0], 1, np.int64)
+    if unicomp:
+        lo[0] = 0  # zero reduced offset: own cell + the key+1 cell only
+    return reduced, lo, hi
+
+
 def offsets_array(n: int, unicomp: bool):
     """stencil_offsets as a device-ready array (import-light helper)."""
     import jax.numpy as jnp

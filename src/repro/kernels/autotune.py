@@ -18,7 +18,12 @@ persisted table:
     (the probe-compacted counter for the empty-neighbor regime) and 'jnp'
     (the reference dense counter), so routing can never be forced into a
     fused plan that measures slower than the baseline: the chosen route is
-    logged in ``JoinStats.route``.
+    logged in ``JoinStats.route``. Since the merged-range sweep
+    (DESIGN.md S7) the SWEEP is a routed axis too: merged classes admit
+    'dense-flat'/'sparse-flat' candidates (the per-cell 3^n sweep, which
+    can beat merging on heavily co-occupied low-dimensional data), and
+    the pair-emitting join follows a cached 'dense-flat' verdict (the
+    one candidate pair that measures its own sweep).
 
 The cache is a small JSON file. Resolution order: ``$REPRO_AUTOTUNE_CACHE``
 if set, else ``autotune_cache.json`` next to this module (a pre-measured
@@ -42,6 +47,13 @@ DEFAULT_TQ = 128
 TQ_CANDIDATES = (64, 128, 256)
 _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
 _ENV_MEASURE = "REPRO_AUTOTUNE"
+# Cache schema version, stored under "__schema__" in the JSON file. Bump
+# when the meaning of a key class changes so stale measurements invalidate
+# wholesale instead of silently steering new code. v2: merged-range sweep
+# (DESIGN.md S7) -- tile entries are keyed on MERGED window capacities and
+# route entries carry the sweep mode, so every v1 entry (per-cell
+# capacities/offset counts) is stale.
+SCHEMA_VERSION = 2
 
 
 def cache_path() -> str:
@@ -69,6 +81,10 @@ class _Cache:
                     self._data = json.load(f)
             except (OSError, ValueError):
                 self._data = {}
+            if self._data.get("__schema__") != SCHEMA_VERSION:
+                # stale schema: discard every entry (measurements made
+                # against a different key semantics must not steer)
+                self._data = {"__schema__": SCHEMA_VERSION}
         return self._data
 
     def get(self, key: str):
@@ -76,6 +92,7 @@ class _Cache:
 
     def put(self, key: str, entry: dict) -> None:
         data = self._load()
+        data["__schema__"] = SCHEMA_VERSION
         data[key] = entry
         try:
             tmp = self._path + ".tmp"
@@ -189,12 +206,15 @@ def _timed(fn: Callable) -> float:
 # ---------------------------------------------------------------------------
 
 def route_key(backend: str, n_dims: int, n_off: int, c_class: int,
-              live_class: int) -> str:
-    return f"route/{backend}/{n_dims}d/off{n_off}/c{c_class}/live{live_class}"
+              live_class: int, merged: bool = False) -> str:
+    sweep = "merged" if merged else "flat"
+    return (f"route/{backend}/{n_dims}d/off{n_off}/c{c_class}"
+            f"/live{live_class}/{sweep}")
 
 
 def route_heuristic(backend: str, n_dims: int, n_off: int, c: int,
-                    occupancy: float, live_frac: float) -> str:
+                    occupancy: float, live_frac: float,
+                    merged: bool = False) -> str:
     """The deterministic fallback when no measurement is cached.
 
     TPU keeps the PR-2 rule (window-DMA traffic binds -> compact in the
@@ -203,19 +223,25 @@ def route_heuristic(backend: str, n_dims: int, n_off: int, c: int,
     probe-compacted 'sparse' counter replaces it there: one flat
     compaction over the whole (offset, query) plane, worth it only when
     nearly all dense window slots are padding.
+
+    ``merged``: ``n_off`` is the reduced 3^(n-1) count while ``c`` and
+    ``live_frac`` remain per-cell workload features, so the dense-slot-
+    volume products scale n_off back up by the 3 merged cells -- the
+    regime boundaries describe the DATA and must not move with the sweep.
     """
+    vol = n_off * (3 if merged else 1)
     if backend == "tpu":
-        if n_off * occupancy < 3.0 and n_off * c >= 256:
+        if vol * occupancy < 3.0 and vol * c >= 256:
             return "compact"
         return "dense"
-    if live_frac < 0.06 and n_off * c >= 512:
+    if live_frac < 0.06 and vol * c >= 512:
         return "sparse"
     return "dense"
 
 
 def count_route(*, n_dims: int, n_off: int, c: int, occupancy: float,
                 live_frac: float, backend: Optional[str] = None,
-                candidates: Optional[dict] = None,
+                merged: bool = False, candidates: Optional[dict] = None,
                 measure: Optional[bool] = None) -> tuple:
     """Route for ``self_join_count(distance_impl='fused')``.
 
@@ -225,10 +251,13 @@ def count_route(*, n_dims: int, n_off: int, c: int, occupancy: float,
     they are each warmed once and timed (best of 2), and the winner is
     cached under the workload's class key -- the "measured routing table"
     that replaces the density heuristic wherever it has been populated.
+    ``merged`` marks (and keys) the merged-range sweep: its candidates run
+    merged counters, so its measurements live in separate table rows.
     """
     backend = _backend(backend)
     key = route_key(backend, int(n_dims), int(n_off),
-                    _pow2_class(c), _pow2_class(live_frac * n_off))
+                    _pow2_class(c), _pow2_class(live_frac * n_off),
+                    merged)
     entry = _CACHE.get(key)
     if entry is not None:
         return str(entry["route"]), "cache"
@@ -243,4 +272,4 @@ def count_route(*, n_dims: int, n_off: int, c: int, occupancy: float,
         _CACHE.put(key, {"route": winner, "ms": timings})
         return winner, "measured"
     return route_heuristic(backend, n_dims, n_off, c, occupancy,
-                           live_frac), "heuristic"
+                           live_frac, merged), "heuristic"

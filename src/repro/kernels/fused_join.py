@@ -43,11 +43,20 @@ Mosaic (this container): it evaluates the same windows dimension-by-dimension
 reference path never materializes a ``(B, C, n)`` candidate tensor. The
 Pallas kernel is validated against it in tests/test_fused_join.py.
 
+Merged-range sweeps (DESIGN.md S7): with ``merged=True`` the windows are
+last-dimension RANGE spans (up to three adjacent cells' contiguous points,
+``grid.range_window_descriptors``), the sweep runs 3^(n-1) reduced offsets,
+and the kernel applies the last-dimension boundary mask
+|cand_last - q_last| <= 1 from the cell coordinates riding lane ``n_real``
+of the padded point/query arrays (exact integers in float, never derived
+from float positions).
+
 Hardware adaptation notes (honest limits of this port):
   * each row's window is fetched with an explicit ``pltpu.make_async_copy``
-    (HBM -> VMEM scratch) inside a ``fori_loop``, the Mosaic-lowerable form;
-    a production build would double-buffer the row DMAs (pallas_guide.md
-    "Double Buffering"). Off-TPU the copy runs through the interpreter.
+    (HBM -> VMEM scratch) inside a ``fori_loop``, the Mosaic-lowerable
+    form, DOUBLE-BUFFERED across rows: two VMEM window slots, the copy for
+    row r+1 issued before row r's compute (pallas_guide.md "Patterns:
+    Double Buffering"). Off-TPU the copies run through the interpreter.
   * scalar-prefetch arrays are (n_off, Q_pad) int32; at serving scale these
     are sharded with the query batch (launch/mesh.py 'slab' axis).
 """
@@ -64,15 +73,42 @@ NP_PAD = 8     # lane padding of the coordinate axis (matches cell_join.py)
 TQ_DEFAULT = 128  # query tile rows
 
 
-def pad_points(points_sorted: jax.Array, tail: int) -> jax.Array:
+def resolve_merge_last_dim(n_dims: int,
+                           merge_last_dim: bool | None) -> bool:
+    """THE merge-resolution rule, shared by the self-join drivers and the
+    external-query service: merged-range sweeps default ON and fall back
+    to the per-cell sweep when there is no free pad lane to carry the
+    boundary-mask coordinates (n_dims >= NP_PAD)."""
+    if merge_last_dim is None:
+        merge_last_dim = True
+    return bool(merge_last_dim) and n_dims < NP_PAD
+
+
+def pad_points(points_sorted: jax.Array, tail: int,
+               last_coord: jax.Array | None = None) -> jax.Array:
     """(N, n) -> (N + tail, NP_PAD) zero-padded copy for in-kernel gathers.
 
     ``tail`` >= C guarantees every C-slot window read is in bounds
     (win_start + C <= N + tail, see grid.window_descriptors); zero pad rows
     are never hits because their window slots are masked by win_count.
+
+    ``last_coord`` (merged-range sweeps, DESIGN.md S7): per-point
+    last-dimension CELL coordinate, stored in lane ``n`` (the first pad
+    lane) as an exactly-representable float so the kernel's boundary mask
+    reads it with the same gather as the coordinates. Requires n < NP_PAD;
+    the lane is excluded from the distance sum by the kernel's static
+    ``n_real``.
     """
     n = points_sorted.shape[1]
-    return jnp.pad(points_sorted, ((0, tail), (0, max(NP_PAD - n, 0))))
+    out = jnp.pad(points_sorted, ((0, tail), (0, max(NP_PAD - n, 0))))
+    if last_coord is not None:
+        if n >= NP_PAD:
+            raise ValueError(
+                f"merged sweep needs a free coordinate lane: n_dims={n} "
+                f">= NP_PAD={NP_PAD}")
+        lc = jnp.pad(last_coord.astype(points_sorted.dtype), (0, tail))
+        out = out.at[:, n].set(lc)
+    return out
 
 
 def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
@@ -83,6 +119,12 @@ def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
     self-pair to drop and no triangle rule to apply (every epsilon-hit is a
     result), so the mask is the identity. The self-join is the special case
     ``external=False`` with the query batch sliced out of ``points_sorted``.
+
+    Under the merged-range sweep the UNICOMP rule is unchanged: the zero
+    REDUCED offset's window spans the own cell plus the key+1 cell, and
+    ``cand_pos > q_pos`` is exact for both (own cell: the triangle; key+1
+    cell: every candidate sits at a later sorted position than any
+    own-cell query).
     """
     if external:
         return hit
@@ -97,36 +139,59 @@ def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
 
 def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
                   hits_ref, counts_ref, base_ref, win_ref, sem_ref,
-                  *, c, tq, unicomp, external):
+                  *, c, tq, n_real, unicomp, external, merged):
     i = pl.program_id(0)           # query tile
     j = pl.program_id(1)           # stencil offset (innermost: q tile resident)
     n_off = pl.num_programs(1)
     eps2 = eps2_ref[0, 0]
     zero = iz_ref[j]
+    # distance sum excludes pad lanes: with the merged sweep, lane n_real
+    # carries the last-dimension cell coordinate, not a zero
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, NP_PAD), 1)
+    lane_w = (lane < n_real).astype(q_ref.dtype)
 
     @pl.when(j == 0)
     def _init():
         counts_ref[...] = jnp.zeros_like(counts_ref)
 
+    # Double-buffered row DMA: two VMEM window slots; the copy for row
+    # r + 1 is issued before row r's compute, so the gather of the next
+    # window overlaps the current distance evaluation (pallas_guide.md
+    # "Patterns: Double Buffering"). The merged sweep's windows are up to
+    # 3 cells long, which is what makes the overlap worth having.
+    def win_dma(r, slot):
+        return pltpu.make_async_copy(
+            pts_ref.at[pl.ds(ws_ref[j, i * tq + r], c), :],
+            win_ref.at[slot], sem_ref.at[slot])
+
+    win_dma(0, 0).start()
+
     def row(r, _):
+        slot = jax.lax.rem(r, 2)
+
+        @pl.when(r + 1 < tq)
+        def _prefetch():
+            win_dma(r + 1, jax.lax.rem(r + 1, 2)).start()
+
+        win_dma(r, slot).wait()
         qg = i * tq + r                       # row in the query batch
         q_pos = qpos_ref[qg]                  # global sorted position
         start = ws_ref[j, qg]
         cnt = wc_ref[j, qg]
-        # The fused gather: candidate window HBM->VMEM scratch via explicit
-        # DMA (ANY-space refs are not directly loadable under Mosaic),
-        # consumed immediately.
-        dma = pltpu.make_async_copy(
-            pts_ref.at[pl.ds(start, c), :], win_ref, sem_ref)
-        dma.start()
-        dma.wait()
-        window = win_ref[...]                             # (C, NP)
+        window = win_ref[slot]                            # (C, NP)
         qrow = q_ref[pl.ds(r, 1), :]                      # (1, NP)
-        d = window - qrow
+        d = (window - qrow) * lane_w
         d2 = jnp.sum(d * d, axis=-1)                      # (C,)
         slots = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
         cand_pos = start + slots
         hit = (d2 <= eps2) & (slots < cnt)
+        if merged:
+            # last-dimension boundary mask (DESIGN.md S7): a candidate
+            # whose last-dim cell coordinate wrapped across a grid row is
+            # not a stencil neighbor; coordinates ride lane n_real as
+            # exact integers, so the float compare is exact
+            ldiff = window[:, n_real] - qrow[0, n_real]
+            hit = hit & (jnp.abs(ldiff) <= 1)
         hit = _mask_hits(hit, cand_pos, q_pos, zero, unicomp, external)
         hits_ref[0, r, :] = hit.astype(jnp.int8)
         counts_ref[r, 0] = counts_ref[r, 0] + jnp.sum(hit).astype(jnp.int32)
@@ -142,11 +207,12 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("c", "tq", "unicomp", "external", "keep_hits",
-                              "interpret"))
+    jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
+                              "merged", "keep_hits", "interpret"))
 def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
-                            is_zero, q_pos, eps2, *, c, tq, unicomp,
-                            external=False, keep_hits=True, interpret=True):
+                            is_zero, q_pos, eps2, *, c, tq, n_real, unicomp,
+                            external=False, merged=False, keep_hits=True,
+                            interpret=True):
     n_off, qp = win_start.shape
     if keep_hits:
         hits_shape, hits_map = (n_off, qp, c), (lambda i, j, *_: (j, i, 0))
@@ -168,13 +234,13 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
             pl.BlockSpec((tq, 1), lambda i, j, *_: (i, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((c, NP_PAD), points_pad.dtype),  # DMA'd window
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((2, c, NP_PAD), points_pad.dtype),  # double-buffered
+            pltpu.SemaphoreType.DMA((2,)),                 # window DMA slots
         ],
     )
     hits, counts, base = pl.pallas_call(
-        functools.partial(_fused_kernel, c=c, tq=tq, unicomp=unicomp,
-                          external=external),
+        functools.partial(_fused_kernel, c=c, tq=tq, n_real=n_real,
+                          unicomp=unicomp, external=external, merged=merged),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(hits_shape, jnp.int8),
@@ -191,7 +257,7 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
 # ---------------------------------------------------------------------------
 
 def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
-                 c, n_real, unicomp, external=False):
+                 c, n_real, unicomp, external=False, merged=False):
     """Masked hits of every query against one offset's windows.
 
     Distances accumulate dimension-by-dimension over (Q, C) column gathers,
@@ -205,15 +271,23 @@ def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
         cd = jnp.take(points_pad[:, dim], cand_pos)
         d2 = d2 + (q_batch[:, dim][:, None] - cd) ** 2
     hit = (d2 <= eps2) & (slots[None, :] < wc[:, None])
+    if merged:
+        # last-dimension boundary mask, identical to the kernel's: cell
+        # coordinates ride lane n_real of points_pad / q_batch as exact
+        # integers (grid.point_last_coords)
+        ldiff = (jnp.take(points_pad[:, n_real], cand_pos)
+                 - q_batch[:, n_real][:, None])
+        hit = hit & (jnp.abs(ldiff) <= 1)
     return _mask_hits(hit, cand_pos, q_pos[:, None], zero, unicomp, external)
 
 
 @functools.partial(
     jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
-                              "keep_hits"))
+                              "merged", "keep_hits"))
 def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
                                is_zero, q_pos, eps2, *, c, tq, n_real,
-                               unicomp, external=False, keep_hits=True):
+                               unicomp, external=False, merged=False,
+                               keep_hits=True):
     n_off, qp = win_start.shape
     eps2s = eps2[0, 0]
 
@@ -221,7 +295,7 @@ def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
         ws, wc, zero = xs
         hit = _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2s,
                            c=c, n_real=n_real, unicomp=unicomp,
-                           external=external)
+                           external=external, merged=merged)
         counts = counts + hit.sum(axis=1, dtype=jnp.int32)
         out = hit.astype(jnp.int8) if keep_hits else jnp.zeros((), jnp.int8)
         return counts, out
@@ -242,7 +316,7 @@ def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
 
 def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                     q_pos, eps, *, c, n_real, unicomp, external=False,
-                    tq=TQ_DEFAULT, keep_hits=True,
+                    merged=False, tq=TQ_DEFAULT, keep_hits=True,
                     method=None, interpret=True):
     """Fused gather-refine sweep over all stencil offsets in one launch.
 
@@ -273,6 +347,11 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
       unicomp:    static; triangle rule on o = 0 vs. full-stencil self mask.
       external:   static; True disables BOTH masks (queries are not members
                   of the indexed set -- every epsilon-hit is a result).
+      merged:     static; True = windows are MERGED last-dimension range
+                  spans (DESIGN.md S7): lane ``n_real`` of points_pad and
+                  q_batch carries last-dim cell coordinates
+                  (``pad_points(..., last_coord=...)``) and the kernel
+                  applies the boundary mask |cand_last - q_last| <= 1.
       keep_hits:  static; False = count-only (no O(n_off*Q*C) hits buffer).
       method:     'kernel' | 'reference' | None (auto: kernel on TPU).
 
@@ -286,13 +365,13 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     if method == "kernel":
         return _fused_join_hits_pallas(
             points_pad, q_batch, win_start, win_count, is_zero, q_pos, eps2,
-            c=c, tq=tq, unicomp=unicomp, external=external,
-            keep_hits=keep_hits, interpret=interpret)
+            c=c, tq=tq, n_real=n_real, unicomp=unicomp, external=external,
+            merged=merged, keep_hits=keep_hits, interpret=interpret)
     if method == "reference":
         return _fused_join_hits_reference(
             points_pad, q_batch, win_start, win_count, is_zero, q_pos, eps2,
             c=c, tq=tq, n_real=n_real, unicomp=unicomp, external=external,
-            keep_hits=keep_hits)
+            merged=merged, keep_hits=keep_hits)
     raise ValueError(f"unknown fused_join method {method!r}")
 
 

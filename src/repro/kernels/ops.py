@@ -51,7 +51,8 @@ def cell_join_hits(q, cand, valid, eps):
 
 def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                     q_pos, eps, *, c, n_real, unicomp, external=False,
-                    tq=_fused_join.TQ_DEFAULT, keep_hits=True, method=None):
+                    merged=False, tq=_fused_join.TQ_DEFAULT, keep_hits=True,
+                    method=None):
     """Fused gather-refine sweep (all offsets, one launch) -> hits/counts.
 
     ``q_pos`` is the (Q_pad,) per-row sorted-position array (zeros for
@@ -59,13 +60,15 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     the identical reference lowering elsewhere; tests force method='kernel'
     to exercise the Pallas path through the interpreter. ``external=True``
     serves queries that are not members of the indexed set
-    (core/query_join.py).
+    (core/query_join.py). ``merged=True`` consumes merged last-dimension
+    range windows (DESIGN.md S7; lane ``n_real`` carries cell coordinates
+    -- exact small integers, so the TPU f32 downcast is lossless).
     """
     dt = _kernel_dtype(points_pad.dtype)
     return _fused_join.fused_join_hits(
         points_pad.astype(dt), q_batch.astype(dt), win_start, win_count,
         is_zero, q_pos, eps, c=c, n_real=n_real, unicomp=unicomp,
-        external=external, tq=tq,
+        external=external, merged=merged, tq=tq,
         keep_hits=keep_hits, method=method, interpret=_INTERPRET,
     )
 

@@ -49,14 +49,15 @@ class JoinService:
     """
 
     def __init__(self, points: np.ndarray, eps: float, *,
-                 index=None, return_pairs: bool = False):
+                 index=None, return_pairs: bool = False,
+                 merge_last_dim: Optional[bool] = None):
         from repro.core.grid import build_grid_host
         from repro.core.query_join import prepare
 
         t0 = time.perf_counter()
         self.index = index if index is not None else build_grid_host(
             np.asarray(points), float(eps))
-        self.prepared = prepare(self.index)
+        self.prepared = prepare(self.index, merge_last_dim=merge_last_dim)
         self.build_s = time.perf_counter() - t0
         self.return_pairs = return_pairs
         self.latencies_ms: list[float] = []   # steady-state only
@@ -133,10 +134,13 @@ class JoinService:
 def serve_selfjoin(args):
     rng = np.random.default_rng(args.seed)
     pts = rng.uniform(0, 100, size=(args.points, args.dims))
-    svc = JoinService(pts, args.eps, return_pairs=args.return_pairs)
+    svc = JoinService(pts, args.eps, return_pairs=args.return_pairs,
+                      merge_last_dim=not args.no_merge)
+    sweep = "merged-range" if svc.prepared.merged else "per-cell"
     print(f"[serve] indexed {args.points} pts in {svc.build_s:.3f}s "
           f"(|G|={int(svc.index.num_cells)} non-empty cells, "
-          f"C={svc.prepared.c}, {svc.prepared.n_offsets} stencil offsets)")
+          f"C={svc.prepared.c}, {svc.prepared.n_offsets} {sweep} "
+          f"stencil offsets)")
     t0 = time.perf_counter()
     qp = svc.warmup(args.request_batch)
     print(f"[serve] warmed bucket {qp} rows in "
@@ -203,6 +207,10 @@ def main(argv=None):
     ap.add_argument("--return-pairs", action="store_true",
                     help="materialize neighbor pairs per request, not "
                          "just counts")
+    ap.add_argument("--no-merge", action="store_true",
+                    help="serve through the per-cell 3^n stencil instead "
+                         "of the merged-range 3^(n-1) sweep (parity "
+                         "oracle, DESIGN.md S7)")
     # lm service
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)

@@ -25,11 +25,12 @@ from repro.core.selfjoin import (
 )
 
 
-def fused_run(index, deltas, is_zero, npts, c, unicomp, method):
-    points_pad, qp = _fused_pad(index, q_size=npts, c=c)
+def fused_run(index, deltas, is_zero, npts, c, unicomp, method,
+              merged=False):
+    points_pad, qp = _fused_pad(index, q_size=npts, c=c, merged=merged)
     return _fused_batch_run(index, points_pad, deltas, is_zero, 0, qp=qp,
                             q_size=npts, c=c, unicomp=unicomp,
-                            keep_hits=True, method=method)
+                            keep_hits=True, method=method, merged=merged)
 
 
 def sorted_pairs(p):
@@ -59,6 +60,8 @@ def test_fused_join_matches_jnp(unicomp):
 
 def test_fused_count_matches_jnp():
     for name, pts, eps in datasets():
+        n = pts.shape[1]
+        merged_off = {True: (3 ** (n - 1) + 1) // 2, False: 3 ** (n - 1)}
         for unicomp in (True, False):
             a = self_join_count(pts, eps, unicomp=unicomp)
             b = self_join_count(pts, eps, unicomp=unicomp,
@@ -69,12 +72,19 @@ def test_fused_count_matches_jnp():
                 # no per-cell visit counter
                 assert b.candidates_checked <= a.candidates_checked, name
             else:
-                # 'dense' (bucketed), 'sparse', and 'jnp' all report
-                # counter-for-counter parity with the reference sweep
-                assert b.route in ("dense", "sparse", "jnp"), (name, b.route)
+                # 'dense'/'sparse' (merged or measured '-flat'), and 'jnp'
+                # all report counter-for-counter parity with the reference
+                assert b.route in ("dense", "sparse", "jnp", "dense-flat",
+                                   "sparse-flat"), (name, b.route)
                 assert a.cells_visited == b.cells_visited, name
                 assert a.candidates_checked == b.candidates_checked, name
-            assert a.offsets == b.offsets, name
+            # the fused sweep defaults to the merged-range stencil: 3^(n-1)
+            # offsets (reduced UNICOMP half); the 'jnp' fallback and the
+            # measured '-flat' routes run per cell and report 3^n
+            if b.route in ("dense", "sparse"):
+                assert b.n_offsets == merged_off[unicomp], (name, b.route)
+            elif b.route.endswith("-flat"):
+                assert b.n_offsets == a.n_offsets, (name, b.route)
             # every explicit route override agrees on the total; the
             # counter-parity routes also agree counter-for-counter
             for route in ("dense", "sparse", "jnp"):
@@ -84,6 +94,18 @@ def test_fused_count_matches_jnp():
                 assert d.cells_visited == a.cells_visited, (name, route)
                 assert d.candidates_checked == a.candidates_checked, \
                     (name, route)
+                if route in ("dense", "sparse"):
+                    assert d.n_offsets == merged_off[unicomp], (name, route)
+                # the per-cell oracle sweep reports the full 3^n counts
+                u = self_join_count(pts, eps, unicomp=unicomp,
+                                    distance_impl="fused", route=route,
+                                    merge_last_dim=False)
+                assert u.total_pairs == a.total_pairs, (name, route)
+                assert u.cells_visited == a.cells_visited, (name, route)
+                assert u.candidates_checked == a.candidates_checked, \
+                    (name, route)
+                if route in ("dense", "sparse"):
+                    assert u.n_offsets == a.n_offsets, (name, route)
 
 
 def test_fused_batched_matches_jnp():
@@ -192,12 +214,12 @@ def test_pallas_kernel_matches_reference():
         c = _round_up(max(int(index.max_per_cell), 1), 8)
         ref = fused_run(index, deltas, is_zero, npts, c, unicomp, "reference")
         ker = fused_run(index, deltas, is_zero, npts, c, unicomp, "kernel")
-        for name, a, b in zip(("ws", "wc", "hits", "counts", "slot_base"),
-                              ref, ker):
+        for name, a, b in zip(("ws", "wc", "wcells", "hits", "counts",
+                               "slot_base"), ref, ker):
             assert np.array_equal(np.asarray(a), np.asarray(b)), (name, n)
         # slot_base really is the per-tile exclusive scan of counts
-        counts = np.asarray(ref[3])
-        base = np.asarray(ref[4])
+        counts = np.asarray(ref[4])
+        base = np.asarray(ref[5])
         per_tile = counts.reshape(-1, 128)
         expect = np.cumsum(per_tile, axis=1) - per_tile
         assert np.array_equal(base.reshape(-1, 128), expect)

@@ -172,7 +172,8 @@ def test_no_retrace_across_requests():
     pj.join(rng.uniform(0, 10, (100, 2)), emit="device")
     pj.join(rng.uniform(0, 10, (100, 2)), return_pairs=False)
     mark = executable_cache_stats()
-    assert mark["external_windows"] >= 1
+    # the default serve path runs the merged-range descriptors (S7)
+    assert mark["external_range_windows"] >= 1
     for k in range(6):
         q = rng.uniform(-2, 12, (17 + 13 * k, 2))  # all inside the bucket
         pj.join(q)
@@ -182,7 +183,8 @@ def test_no_retrace_across_requests():
     # a NEW bucket shape compiles exactly once...
     pj.join(rng.uniform(0, 10, (200, 2)))
     grown = executable_cache_stats()
-    assert grown["external_windows"] == mark["external_windows"] + 1
+    assert (grown["external_range_windows"]
+            == mark["external_range_windows"] + 1)
     # ...and is itself steady afterwards
     pj.join(rng.uniform(0, 10, (150, 2)))
     assert executable_cache_stats() == grown
