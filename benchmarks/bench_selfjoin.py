@@ -249,10 +249,81 @@ def bench_serve(args):
     return entry
 
 
+def bench_distributed(args):
+    """Fused slab join (DESIGN.md S3) vs the single-device fused join.
+
+    Asserts pair-set parity between ``distributed_self_join`` over
+    ``--dist-slabs`` slabs and ``self_join(distance_impl='fused')`` on
+    every workload BEFORE timing (the CI parity gate), then records both
+    timings. Needs >= --dist-slabs local devices: run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=N (scripts/ci.sh
+    does). On this container the placeholder devices share one host, so
+    the distributed timing carries the partition + halo-exchange overhead
+    without any real parallel speedup; the recorded claim is parity +
+    overhead trajectory, not a speedup.
+    """
+    import jax
+
+    from repro.core.distributed import distributed_self_join
+    from repro.core.selfjoin import self_join
+    from repro.launch.mesh import make_slab_mesh
+
+    n_slabs = args.dist_slabs
+    if jax.device_count() < n_slabs:
+        raise SystemExit(
+            f"--mode distributed needs >= {n_slabs} devices; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_slabs}")
+    mesh = make_slab_mesh(n_slabs)
+    npts = 4000 if args.smoke else args.dist_points
+    results = []
+    for name, pts, eps in (("uniform-2d", syn(npts, 2), 0.4),
+                           ("clustered-2d", clustered(npts, 2), 0.4)):
+        index = build_grid_host(pts, eps)
+        ref = self_join(pts, eps, index=index, distance_impl="fused")
+        got = distributed_self_join(pts, eps, mesh)
+        assert np.array_equal(got, ref), (
+            f"distributed pair-set parity failure on {name}: "
+            f"{got.shape} vs {ref.shape}")
+        print(f"[bench-dist] {name:14s} parity OK "
+              f"({ref.shape[0]} pairs, {n_slabs} slabs)", flush=True)
+        t_single = best_of(
+            lambda: self_join(pts, eps, index=index, distance_impl="fused",
+                              sort_result=False), args.trials)
+        t_dist = best_of(
+            lambda: distributed_self_join(pts, eps, mesh,
+                                          sort_result=False), args.trials)
+        results.append({
+            "workload": name,
+            "n_points": int(pts.shape[0]),
+            "n_dims": int(pts.shape[1]),
+            "eps": float(eps),
+            "total_pairs": int(ref.shape[0]),
+            "n_slabs": int(n_slabs),
+            "single_fused_join_s": t_single,
+            "distributed_join_s": t_dist,
+            "distributed_over_single": t_dist / t_single,
+            "pair_set_parity": True,
+        })
+        print(f"[bench-dist] {name:14s} single {t_single*1e3:9.1f} ms   "
+              f"distributed({n_slabs}) {t_dist*1e3:9.1f} ms", flush=True)
+    for e in results:   # schema: the keys EXPERIMENTS.md SDist reads
+        assert {"workload", "n_slabs", "single_fused_join_s",
+                "distributed_join_s", "pair_set_parity"} <= set(e)
+    return {
+        "n_slabs": int(n_slabs),
+        "note": ("CPU placeholder devices share one host: the distributed "
+                 "column measures partition + halo exchange + per-slab "
+                 "sweep overhead, not parallel speedup; parity is the "
+                 "asserted claim"),
+        "results": results,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None)
-    ap.add_argument("--mode", default="impl", choices=("impl", "serve"))
+    ap.add_argument("--mode", default="impl",
+                    choices=("impl", "serve", "distributed"))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny impl sweep + schema validation (CI gate); "
                          "writes to a temp file unless --out is given")
@@ -286,6 +357,9 @@ def main(argv=None):
     ap.add_argument("--serve-batch", type=int, default=256)
     ap.add_argument("--serve-requests", type=int, default=32)
     ap.add_argument("--serve-requests-legacy", type=int, default=6)
+    # --mode distributed: fused slab join parity + overhead (DESIGN.md S3)
+    ap.add_argument("--dist-slabs", type=int, default=2)
+    ap.add_argument("--dist-points", type=int, default=40_000)
     args = ap.parse_args(argv)
     if args.assert_floor is None:
         args.assert_floor = args.mode == "impl" and not args.smoke
@@ -315,12 +389,14 @@ def main(argv=None):
 
     import jax
 
-    if args.mode == "serve":
-        entry = bench_serve(args)
+    if args.mode in ("serve", "distributed"):
         payload = existing or {"bench": "selfjoin-distance-impl"}
         payload["backend"] = jax.default_backend()
         payload["jax"] = jax.__version__
-        payload["serve"] = entry
+        if args.mode == "serve":
+            payload["serve"] = bench_serve(args)
+        else:
+            payload["distributed"] = bench_distributed(args)
         with open(out, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"[bench] wrote {out}")
@@ -427,8 +503,9 @@ def main(argv=None):
         },
         "results": results,
     }
-    if "serve" in existing:   # each mode preserves the other's section
-        payload["serve"] = existing["serve"]
+    for section in ("serve", "distributed"):   # each mode preserves others
+        if section in existing:
+            payload[section] = existing[section]
     validate_schema(payload)
     if args.smoke:
         print("[bench] smoke: schema validated "

@@ -22,4 +22,8 @@ timeout 300 python benchmarks/bench_selfjoin.py --smoke
 echo "[ci] bench smoke, per-cell sweep oracle (--no-merge; parity asserted again)"
 timeout 300 python benchmarks/bench_selfjoin.py --smoke --no-merge
 
+echo "[ci] distributed bench smoke (2 slabs: pair-set parity vs single-device fused join)"
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+  timeout 300 python benchmarks/bench_selfjoin.py --mode distributed --smoke
+
 echo "[ci] OK"

@@ -1,38 +1,47 @@
 """Distributed self-join: spatial slab decomposition with eps-halo exchange.
 
-The paper is single-GPU; this module is the scale-out design of DESIGN.md S3.
+The paper is single-GPU; this module is the scale-out design of DESIGN.md S3
+(the slab + halo shape of Gowanlock's multi-GPU follow-on work and Karsin's
+multi-GPU join pipelines, PAPERS.md).
 
 Decomposition
 -------------
 Points are partitioned into contiguous slabs along dimension 0 (equal-count
-quantile boundaries, computed on the host: ``partition_points_host``). Each
-device:
+quantile boundaries, computed on the host: ``partition_points_host``; empty
+slabs are legal and handled). Each slab:
 
-  1. computes the *global* grid geometry (pmin/pmax over the slab axis) so
-     cell coordinates are consistent across devices,
-  2. exchanges an eps-halo with its left/right slab neighbors via
+  1. exchanges a k-hop eps-halo with its slab neighbors via
      ``lax.ppermute`` -- exactly the points within eps (in dim 0) of the
-     shared boundary, which is all another slab can ever need,
-  3. builds its local grid over (local + halo) candidates and runs the same
-     offset-sweep join as the single-device path, counting only pairs whose
-     *query* point it owns.
+     shared boundary, which is all another slab can ever need
+     (``_assemble_candidates``; ``halo_reach`` derives k, parcels are
+     capacity-bounded with overflow *detected*, never silent),
+  2. builds its local grid over (local + halo) candidates against the
+     GLOBAL grid geometry, so cell coordinates -- and the UNICOMP
+     cell-pair ownership rule -- are consistent across slabs, and
+  3. joins only pairs whose *query* point it owns.
+
+Two join paths share that decomposition:
+
+``distributed_self_join`` -- the fused pair join: per slab, the SAME fast
+path as the single-device join (merged-range sweep, occupancy buckets,
+single-pass count -> fill; ``selfjoin._self_join_fused``) restricted to
+owned query rows, with GLOBAL point ids riding a kernel pad lane
+(``gid_pairs``) so the UNICOMP intra-cell tie-break is device-independent.
+Emits (K, 2) global-id pairs bit-identical to
+``self_join(distance_impl='fused')`` after the lexsort;
+``return_pairs=False`` runs the count-only launches.
+
+``distributed_self_join_count`` -- the legacy jnp offset-sweep counter,
+retained for the 'model'-axis offset parallelism: the stencil offset table
+is sharded over the second mesh axis and partial counts are psum-reduced,
+matching how the LM stack uses the same axis for tensor parallelism.
 
 Correctness of single counting: with globally consistent cell coordinates the
 UNICOMP half-stencil assigns each unordered adjacent-cell pair to exactly one
 directed evaluation; the device owning the query endpoint of that evaluation
 is unique, and (since qualifying pairs are within eps in dim 0) its candidate
-set is guaranteed to contain the other endpoint. Intra-cell pairs use a
+set is guaranteed to contain the other endpoint. Intra-cell pairs use the
 global-id total order as the tie-break, which is device-independent.
-
-The second mesh axis ('model') parallelizes the sweep across *stencil
-offsets*: the offset table is sharded over 'model' and partial counts are
-psum-reduced -- work-parallelism inside a slab, matching how the LM stack
-uses the same axis for tensor parallelism.
-
-Requirements: slab width >= eps (the partitioner warns otherwise; a k-hop
-halo generalization is a straightforward extension and is noted in
-EXPERIMENTS.md). Halo buffers and cells are capacity-bounded; overflow is
-*detected* and reported (never silent).
 """
 from __future__ import annotations
 
@@ -90,6 +99,45 @@ def partition_points_host(points: np.ndarray, n_slabs: int):
     return coords, gids, min(widths) if widths else 0.0
 
 
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def slab_extents(coords: np.ndarray, gids: np.ndarray):
+    """Per-slab [min, max] extent along dim 0; empty slabs (possible when
+    ``n_slabs`` approaches the point count, or under heavy skew) carry the
+    neutral (+inf, -inf) pair instead of raising on an empty reduction."""
+    n_slabs = coords.shape[0]
+    mins = np.full(n_slabs, np.inf)
+    maxs = np.full(n_slabs, -np.inf)
+    for i in range(n_slabs):
+        own = gids[i] >= 0
+        if own.any():
+            mins[i] = coords[i, own, 0].min()
+            maxs[i] = coords[i, own, 0].max()
+    return mins, maxs
+
+
+def halo_reach(mins: np.ndarray, maxs: np.ndarray, eps: float) -> int:
+    """Hop count k such that every slab's eps-neighborhood along dim 0 is
+    covered by its k-hop slab neighbors (skewed data -> narrow slabs ->
+    k > 1). Empty slabs sit at the END of the sorted partition
+    (``np.array_split`` of the x0-sorted order only under-fills trailing
+    slabs), so an empty slab's +inf min terminates the inner scan exactly
+    where a too-far real slab would."""
+    n_slabs = mins.shape[0]
+    k_hops = 1
+    for i in range(n_slabs):
+        if not np.isfinite(maxs[i]):
+            continue
+        for h in range(1, n_slabs - i):
+            if mins[i + h] <= maxs[i] + eps:
+                k_hops = max(k_hops, h)
+            else:
+                break
+    return k_hops
+
+
 def _halo_exchange(x, valid, axis, n_dev, direction, hops: int = 1):
     """Shift (x, valid) ``hops`` steps along ``axis``. direction=+1 sends
     right (device i's value lands on device i+hops)."""
@@ -113,6 +161,78 @@ def _pack_mask(coords, gids, mask, capacity):
     sent = jnp.take(mask, take)
     overflow = mask.sum() > capacity
     return coords[take], gids[take], sent, overflow
+
+
+def _assemble_candidates(coords, gids, eps, *, cfg: "DistJoinConfig",
+                         n_slab: int):
+    """Device-side candidate assembly: local slab + k-hop eps-halo parcels.
+
+    The shared first phase of BOTH distributed paths (the legacy count
+    step and the fused pair join): each slab learns its h-hop neighbors'
+    dim-0 boundaries, selects exactly the points those neighbors need
+    (within eps of the boundary), and ships the parcels via
+    ``lax.ppermute``. Returns
+
+        (cand_coords (P + 2*H*k, n), cand_gids, cand_valid, cand_owned,
+         owned (P,), halo_overflow ())
+
+    where the first P rows are the local slab (owned) and the rest the
+    received parcels (validity-flagged; overflow against the H-slot parcel
+    capacity is detected, never silent). Invalid parcel slots carry the
+    slab's anchor coordinate -- harmless for consumers that mask validity;
+    the pair path overwrites them host-side with out-of-volume sentinels
+    before building its grid.
+    """
+    slab = cfg.slab_axis
+    P_loc, H = cfg.pts_per_device, cfg.halo_capacity
+    coords = coords.reshape(P_loc, cfg.n_dims)
+    gids = gids.reshape(P_loc)
+    owned = gids >= 0
+    big = jnp.asarray(jnp.finfo(coords.dtype).max / 4, coords.dtype)
+
+    # Receiver r needs every point p with |p.x0 - slab_r| <= eps; when
+    # equal-count slabs are narrower than eps (skew), that spans k > 1
+    # neighbors. For each hop h: learn the h-hop neighbor's boundary,
+    # select exactly what it needs, ship the parcel h hops.
+    my_min0 = jnp.where(owned, coords[:, 0], big).min()
+    my_max0 = jnp.where(owned, coords[:, 0], -big).max()
+    parcels_c, parcels_g, parcels_v = [], [], []
+    halo_overflow = jnp.array(False)
+    for h in range(1, cfg.k_hops + 1):
+        left_max, lm_ok = _halo_exchange(
+            my_max0, jnp.array(True), slab, n_slab, +1, hops=h)
+        right_min, rm_ok = _halo_exchange(
+            my_min0, jnp.array(True), slab, n_slab, -1, hops=h)
+        left_max = jnp.where(lm_ok, left_max, -big)
+        right_min = jnp.where(rm_ok, right_min, big)
+        send_left = owned & (coords[:, 0] <= left_max + eps)
+        send_right = owned & (coords[:, 0] >= right_min - eps)
+        cl, gl, vl, ofl = _pack_mask(coords, gids, send_left, H)
+        cr, gr, vr, ofr = _pack_mask(coords, gids, send_right, H)
+        # ship h hops: sending "left" means device i -> i-h, i.e. I
+        # receive my h-hop RIGHT neighbor's left edge, and vice versa.
+        hcl, hvl = _halo_exchange(cl, vl, slab, n_slab, -1, hops=h)
+        hgl, _ = _halo_exchange(gl, vl, slab, n_slab, -1, hops=h)
+        hcr, hvr = _halo_exchange(cr, vr, slab, n_slab, +1, hops=h)
+        hgr, _ = _halo_exchange(gr, vr, slab, n_slab, +1, hops=h)
+        parcels_c += [hcl, hcr]
+        parcels_g += [hgl, hgr]
+        parcels_v += [hvl, hvr]
+        halo_overflow = halo_overflow | ofl | ofr
+    halo_coords = jnp.concatenate(parcels_c, axis=0)
+    halo_gids = jnp.concatenate(parcels_g, axis=0)
+    halo_valid = jnp.concatenate(parcels_v, axis=0)
+
+    n_halo = 2 * H * cfg.k_hops
+    anchor = coords[0]
+    cand_coords = jnp.concatenate(
+        [coords, jnp.where(halo_valid[:, None], halo_coords, anchor)], axis=0
+    )
+    cand_gids = jnp.concatenate([gids, jnp.where(halo_valid, halo_gids, -1)])
+    cand_valid = jnp.concatenate([owned, halo_valid])
+    cand_owned = jnp.concatenate([owned, jnp.zeros(n_halo, bool)])
+    return cand_coords, cand_gids, cand_valid, cand_owned, owned, \
+        halo_overflow
 
 
 def make_distributed_count_step(mesh: Mesh, cfg: DistJoinConfig):
@@ -139,9 +259,10 @@ def make_distributed_count_step(mesh: Mesh, cfg: DistJoinConfig):
     P_loc, H, C = cfg.pts_per_device, cfg.halo_capacity, cfg.max_per_cell
 
     def local_fn(coords, gids, eps, offsets, ovalid, ozero):
-        coords = coords.reshape(P_loc, cfg.n_dims)
-        gids = gids.reshape(P_loc)
-        owned = gids >= 0
+        cand_coords, cand_gids, cand_valid, cand_owned, owned, \
+            halo_overflow = _assemble_candidates(
+                coords, gids, eps, cfg=cfg, n_slab=n_slab)
+        coords = cand_coords[:P_loc]
 
         # -- global geometry (consistent cell coords across devices) --------
         big = jnp.asarray(jnp.finfo(coords.dtype).max / 4, coords.dtype)
@@ -150,49 +271,7 @@ def make_distributed_count_step(mesh: Mesh, cfg: DistJoinConfig):
         gmin = jax.lax.pmin(lo, slab) - eps
         gmax = jax.lax.pmax(hi, slab) + eps
         dims = jnp.ceil((gmax - gmin) / eps).astype(jnp.int64) + 1
-
-        # -- eps-halo exchange with slab neighbors (k-hop) -------------------
-        # Receiver r needs every point p with |p.x0 - slab_r| <= eps; when
-        # equal-count slabs are narrower than eps (skew), that spans k > 1
-        # neighbors. For each hop h: learn the h-hop neighbor's boundary,
-        # select exactly what it needs, ship the parcel h hops.
-        my_min0 = jnp.where(owned, coords[:, 0], big).min()
-        my_max0 = jnp.where(owned, coords[:, 0], -big).max()
-        parcels_c, parcels_g, parcels_v = [], [], []
-        halo_overflow = jnp.array(False)
-        for h in range(1, cfg.k_hops + 1):
-            left_max, lm_ok = _halo_exchange(
-                my_max0, jnp.array(True), slab, n_slab, +1, hops=h)
-            right_min, rm_ok = _halo_exchange(
-                my_min0, jnp.array(True), slab, n_slab, -1, hops=h)
-            left_max = jnp.where(lm_ok, left_max, -big)
-            right_min = jnp.where(rm_ok, right_min, big)
-            send_left = owned & (coords[:, 0] <= left_max + eps)
-            send_right = owned & (coords[:, 0] >= right_min - eps)
-            cl, gl, vl, ofl = _pack_mask(coords, gids, send_left, H)
-            cr, gr, vr, ofr = _pack_mask(coords, gids, send_right, H)
-            # ship h hops: sending "left" means device i -> i-h, i.e. I
-            # receive my h-hop RIGHT neighbor's left edge, and vice versa.
-            hcl, hvl = _halo_exchange(cl, vl, slab, n_slab, -1, hops=h)
-            hgl, _ = _halo_exchange(gl, vl, slab, n_slab, -1, hops=h)
-            hcr, hvr = _halo_exchange(cr, vr, slab, n_slab, +1, hops=h)
-            hgr, _ = _halo_exchange(gr, vr, slab, n_slab, +1, hops=h)
-            parcels_c += [hcl, hcr]
-            parcels_g += [hgl, hgr]
-            parcels_v += [hvl, hvr]
-            halo_overflow = halo_overflow | ofl | ofr
-        halo_coords = jnp.concatenate(parcels_c, axis=0)
-        halo_gids = jnp.concatenate(parcels_g, axis=0)
-        halo_valid = jnp.concatenate(parcels_v, axis=0)
-
         n_halo = 2 * H * cfg.k_hops
-        anchor = coords[0]
-        cand_coords = jnp.concatenate(
-            [coords, jnp.where(halo_valid[:, None], halo_coords, anchor)], axis=0
-        )
-        cand_gids = jnp.concatenate([gids, jnp.where(halo_valid, halo_gids, -1)])
-        cand_valid = jnp.concatenate([owned, halo_valid])
-        cand_owned = jnp.concatenate([owned, jnp.zeros(n_halo, bool)])
 
         # -- local grid over candidates, global geometry ---------------------
         # invalid padding slots get the sentinel cell: unreachable as
@@ -273,18 +352,11 @@ def distributed_self_join_count(
     pts = np.asarray(points)
     slab_axis = mesh.axis_names[0]
     n_slabs = mesh.shape[slab_axis]
+    if pts.shape[0] == 0:
+        return 0
     coords, gids, min_width = partition_points_host(pts, n_slabs)
-    # halo reach: slab r needs points from any slab within eps along dim 0
-    # (skewed data -> narrow slabs -> k > 1). Computed from the partition.
-    mins = np.array([coords[i, gids[i] >= 0, 0].min() for i in range(n_slabs)])
-    maxs = np.array([coords[i, gids[i] >= 0, 0].max() for i in range(n_slabs)])
-    k_hops = 1
-    for i in range(n_slabs):
-        for h in range(1, n_slabs - i):
-            if mins[i + h] <= maxs[i] + eps:
-                k_hops = max(k_hops, h)
-            else:
-                break
+    mins, maxs = slab_extents(coords, gids)
+    k_hops = halo_reach(mins, maxs, eps)
     if halo_capacity is None:
         halo_capacity = coords.shape[1]          # worst case: whole slab
     if max_per_cell is None:
@@ -312,3 +384,238 @@ def distributed_self_join_count(
     if int(cell_of):
         raise RuntimeError("max_per_cell overflow")
     return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Fused slab join (DESIGN.md S3): pairs with global ids, built on the
+# PR 1-4 fast path -- merged-range sweep, occupancy buckets, single-pass
+# count -> fill -- run per slab over the (local + halo) candidate set.
+# ---------------------------------------------------------------------------
+
+# per-slab grid build against the global geometry (one compile per slab
+# shape; slab blocks share one shape by construction)
+_slab_index = jax.jit(build_grid_with_geometry)
+
+
+_HALO_STEPS: dict = {}
+
+
+def make_halo_step(mesh: Mesh, cfg: DistJoinConfig):
+    """Build the jitted halo-assembly step: the shard_map phase of the
+    fused slab join. ``step(coords, gids, eps)`` with coords (S*P, n) /
+    gids (S*P,) sharded over the slab axis returns the per-slab candidate
+    blocks (coords, gids, valid, owned), each (S*(P + 2*H*k), ...) sharded
+    over slab, plus the replicated halo-overflow flag.
+
+    Steps are cached per (mesh, cfg) -- both hashable -- so repeated joins
+    of same-shaped workloads (the bench loop, a recurring pipeline) reuse
+    one traced executable instead of paying a fresh shard_map trace per
+    call (the re-tracing failure mode ISSUE 2 banned from the serve path).
+    """
+    key = (mesh, cfg)
+    cached = _HALO_STEPS.get(key)
+    if cached is not None:
+        return cached
+    slab = cfg.slab_axis
+    n_slab = mesh.shape[slab]
+
+    def halo_fn(coords, gids, eps):
+        cand_coords, cand_gids, cand_valid, cand_owned, _, halo_of = \
+            _assemble_candidates(coords, gids, eps, cfg=cfg, n_slab=n_slab)
+        halo_of = jax.lax.pmax(halo_of.astype(jnp.int32), slab)
+        return cand_coords, cand_gids, cand_valid, cand_owned, halo_of
+
+    from repro.compat import shard_map
+
+    fn = shard_map(
+        halo_fn,
+        mesh=mesh,
+        in_specs=(P(slab), P(slab), P()),
+        out_specs=(P(slab), P(slab), P(slab), P(slab), P()),
+        check_vma=False,
+    )
+    step = jax.jit(fn)
+    in_shardings = (
+        NamedSharding(mesh, P(slab)),
+        NamedSharding(mesh, P(slab)),
+    )
+    _HALO_STEPS[key] = (step, in_shardings)
+    return step, in_shardings
+
+
+def exact_halo_capacity(coords: np.ndarray, gids: np.ndarray,
+                        mins: np.ndarray, maxs: np.ndarray, eps: float,
+                        k_hops: int) -> int:
+    """Largest parcel any (slab, hop, direction) ship needs -- exact, from
+    the partition (slabs hold x0-sorted points, so each parcel count is one
+    ``searchsorted``). This is the per-slab capacity plan of the fused path:
+    the default ``halo_capacity`` that makes overflow impossible, and the
+    bound user-supplied capacities are checked against on-device."""
+    n_slabs = coords.shape[0]
+    cap = 1
+    for j in range(n_slabs):
+        x0 = coords[j, gids[j] >= 0, 0]          # sorted ascending
+        if not x0.size:
+            continue
+        for h in range(1, k_hops + 1):
+            if j - h >= 0 and np.isfinite(maxs[j - h]):
+                # parcel j -> j-h: points with x0 <= maxs[j-h] + eps
+                cap = max(cap, int(np.searchsorted(
+                    x0, maxs[j - h] + eps, side="right")))
+            if j + h < n_slabs and np.isfinite(mins[j + h]):
+                # parcel j -> j+h: points with x0 >= mins[j+h] - eps
+                cap = max(cap, int(x0.size - np.searchsorted(
+                    x0, mins[j + h] - eps, side="left")))
+    return cap
+
+
+def distributed_self_join(
+    points: np.ndarray,
+    eps: float,
+    mesh: Mesh,
+    *,
+    unicomp: bool = True,
+    merge_last_dim: Optional[bool] = None,
+    bucketed: Optional[bool] = None,
+    sort_result: bool = True,
+    halo_capacity: Optional[int] = None,
+    method: Optional[str] = None,
+    emit: Optional[str] = None,
+    return_pairs: bool = True,
+):
+    """Distributed self-join returning globally-consistent PAIRS.
+
+    The fused slab join of DESIGN.md S3: points partition into equal-count
+    dim-0 slabs (one per device on the mesh's first axis), the eps-halo
+    exchange runs on-device via ``shard_map`` + ``ppermute``
+    (``make_halo_step``), and each slab then runs the SAME fused fast path
+    as the single-device join -- merged-range sweep, occupancy buckets
+    restricted to the rows the slab owns, single-pass count -> fill --
+    over its (local + halo) candidate set, against the global grid
+    geometry.
+
+    Pair ownership (single emission of every pair): the fused kernel's
+    UNICOMP/self masks compare GLOBAL ids riding a pad lane
+    (``gid_pairs``), so the intra-cell tie-break is device-independent,
+    and only rows a slab OWNS launch as queries -- each unordered pair is
+    emitted by exactly the slab owning its designated query endpoint,
+    whose candidate set provably contains the other endpoint (points
+    within eps are within eps in dim 0, hence inside the k-hop halo).
+
+    The result is the same (K, 2) int32 ordered-pair array as
+    ``self_join(distance_impl='fused')`` -- bit-identical after the
+    ``sort_result`` lexsort (asserted across device counts, UNICOMP and
+    sweep modes in tests/test_distributed.py and the CI bench smoke).
+    ``return_pairs=False`` runs the count-only fused sweep (no hit
+    buffers) and returns the total ordered-pair count.
+
+    ``halo_capacity`` defaults to the exact per-slab requirement
+    (``exact_halo_capacity``), making overflow impossible; a smaller
+    explicit capacity is CHECKED on-device and raises instead of silently
+    dropping candidates.
+    """
+    from repro.core.selfjoin import (_self_join_count_fused,
+                                     _self_join_fused)
+    from repro.kernels.fused_join import NP_PAD, resolve_merge_last_dim
+
+    pts = np.asarray(points)
+    npts, n = pts.shape
+    if n >= NP_PAD:
+        raise ValueError(
+            f"distributed pairs need a free global-id pad lane: n_dims={n} "
+            f">= NP_PAD={NP_PAD}")
+    if npts >= 1 << 24:
+        # the gid lane is compared as float; TPU kernels run f32, where
+        # ids >= 2^24 collapse and the gid masks silently mis-pair
+        raise ValueError(
+            f"distributed pairs carry global ids in a float pad lane, "
+            f"exact only below 2^24: npts={npts}")
+    empty = np.empty((0, 2), np.int32)
+    if npts == 0:
+        return empty if return_pairs else 0
+    # the merged sweep additionally rides the last-dim cell coordinate:
+    # two free lanes or fall back to the per-cell stencil
+    merged = resolve_merge_last_dim(n, merge_last_dim, extra_lanes=1)
+    slab_axis = mesh.axis_names[0]
+    n_slabs = mesh.shape[slab_axis]
+    coords, gids, _ = partition_points_host(pts, n_slabs)
+    mins, maxs = slab_extents(coords, gids)
+    k_hops = halo_reach(mins, maxs, eps)
+    h_need = exact_halo_capacity(coords, gids, mins, maxs, eps, k_hops)
+    # default capacity rounds up to a power of two (capped at the slab
+    # size): the halo step is cached per (mesh, cfg), and the exact
+    # requirement is data-dependent -- same-shaped workloads with fresh
+    # data would otherwise miss the cache and re-trace every call (and
+    # leak one executable per distinct capacity)
+    h_default = min(_next_pow2(h_need), coords.shape[1])
+    cfg = DistJoinConfig(
+        pts_per_device=coords.shape[1],
+        n_dims=n,
+        halo_capacity=(h_default if halo_capacity is None
+                       else int(halo_capacity)),
+        max_per_cell=0,                  # per-slab grids: no global C bound
+        unicomp=unicomp,
+        slab_axis=slab_axis,
+        model_axis=None,
+        k_hops=k_hops,
+    )
+    step, in_sh = make_halo_step(mesh, cfg)
+    coords_dev = jax.device_put(coords.reshape(-1, n), in_sh[0])
+    gids_dev = jax.device_put(gids.reshape(-1), in_sh[1])
+    cand_c, cand_g, cand_v, cand_o, halo_of = step(
+        coords_dev, gids_dev, jnp.asarray(eps, pts.dtype))
+    if int(halo_of):
+        raise RuntimeError(
+            f"halo capacity overflow: capacity {cfg.halo_capacity} < "
+            f"required {h_need} (pass halo_capacity >= the requirement, "
+            f"or omit it for the exact default)")
+    pc = cfg.pts_per_device + 2 * cfg.halo_capacity * k_hops
+    cand_c = np.asarray(cand_c).reshape(n_slabs, pc, n)
+    cand_g = np.asarray(cand_g).reshape(n_slabs, pc)
+    cand_v = np.asarray(cand_v).reshape(n_slabs, pc)
+    cand_o = np.asarray(cand_o).reshape(n_slabs, pc)
+
+    # global geometry, EXACTLY as build_grid_host derives it: cell coords
+    # (and the UNICOMP cell-pair ownership) agree across slabs AND with the
+    # single-device join
+    gmin = pts.min(axis=0) - eps
+    gmax = pts.max(axis=0) + eps
+    dims = np.ceil((gmax - gmin) / eps).astype(np.int64) + 1
+    # invalid candidate slots: coordinates far outside the volume, so a
+    # window that reaches the sentinel cell (a top-corner stencil probe can
+    # alias its key) evaluates no spurious hits
+    far = gmax + 4.0 * max(float(eps), 1.0)
+    gmin_dev = jnp.asarray(gmin)
+    dims_dev = jnp.asarray(dims)
+    eps_dev = jnp.asarray(eps, pts.dtype)
+
+    chunks = []
+    total = 0
+    for k in range(n_slabs):
+        v = cand_v[k]
+        o = cand_o[k] & v
+        if not o.any():
+            continue
+        cc = cand_c[k].copy()
+        cc[~v] = far
+        index = _slab_index(jnp.asarray(cc), eps_dev, gmin_dev, dims_dev,
+                            jnp.asarray(v))
+        order = np.asarray(index.order)
+        gid_sorted = cand_g[k][order]
+        owned_sorted = o[order]
+        if return_pairs:
+            chunks.append(_self_join_fused(
+                index, unicomp=unicomp, sort_result=False, method=method,
+                emit=emit, bucketed=bucketed, merged=merged,
+                row_ok=owned_sorted, ids=gid_sorted, gid_pairs=True))
+        else:
+            total += _self_join_count_fused(
+                index, unicomp=unicomp, method=method, bucketed=bucketed,
+                merged=merged, row_ok=owned_sorted, ids=gid_sorted,
+                gid_pairs=True).total_pairs
+    if not return_pairs:
+        return total
+    out = np.concatenate(chunks, axis=0) if chunks else empty
+    if sort_result:
+        out = out[np.lexsort((out[:, 1], out[:, 0]))]
+    return out

@@ -770,6 +770,34 @@ def occupancy_plan(index: GridIndex, align: int = CAP_ALIGN,
                         lambda: _build_occupancy_plan(index, align, merged))
 
 
+def filter_plan_rows(plan: BucketPlan, row_ok: np.ndarray) -> BucketPlan:
+    """Restrict a BucketPlan to the sorted rows where ``row_ok`` is True.
+
+    The distributed slab join (core/distributed.py) launches the fused
+    sweep only over rows its slab OWNS -- halo rows are candidates, never
+    queries -- so every bucket's selection is intersected with the
+    ownership mask (ascending A-order preserved). Contiguous single-class
+    plans (``sel`` None) become explicit selections; classes left empty
+    are dropped; the capacity ladder and histogram keep the surviving
+    rows' counts.
+    """
+    row_ok = np.asarray(row_ok, bool)
+    caps, sels, hist = [], [], {}
+    for cap, sel in zip(plan.caps, plan.sel):
+        rows = (np.flatnonzero(row_ok).astype(np.int32) if sel is None
+                else sel[row_ok[sel]])
+        if rows.size:
+            caps.append(cap)
+            sels.append(rows)
+            hist[int(cap)] = int(rows.size)
+    if not caps:
+        return BucketPlan(caps=(plan.cap_global,), sel=(np.zeros(0, np.int32),),
+                          cap_global=plan.cap_global,
+                          hist={plan.cap_global: 0})
+    return BucketPlan(caps=tuple(caps), sel=tuple(sels),
+                      cap_global=plan.cap_global, hist=hist)
+
+
 def _build_occupancy_plan(index: GridIndex, align: int,
                           merged: bool = False) -> BucketPlan:
     npts = index.num_points

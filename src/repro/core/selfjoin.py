@@ -387,26 +387,30 @@ def _fused_bucket_prep(index: GridIndex, points_pad: jax.Array,
 
 
 def _fused_pad(index: GridIndex, *, q_size: int, c: int,
-               q_start_max: int = 0, tq: int = 128, merged: bool = False):
+               q_start_max: int = 0, tq: int = 128, merged: bool = False,
+               gid=None):
     """One padded-points copy shared by every batch of a sweep. The tail
     covers the C-slot window reads and the worst batch's rounded-up query
     slice (``q_start_max`` = largest batch origin), so the per-batch
     dynamic_slice never clamps. Merged sweeps ride the per-point last-dim
     cell coordinate in the first pad lane (the kernel's boundary mask);
-    query slices of this copy inherit it."""
+    query slices of this copy inherit it. ``gid`` (distributed slab join)
+    rides the per-point global id in the next free lane."""
     from repro.core.grid import point_last_coords
     from repro.kernels.fused_join import pad_points
 
     qp = _round_up(max(q_size, 1), tq)
     tail = max(c, q_start_max + qp - index.num_points)
     lc = point_last_coords(index) if merged else None
-    return pad_points(index.points_sorted, tail, last_coord=lc), qp
+    return pad_points(index.points_sorted, tail, last_coord=lc,
+                      gid=gid), qp
 
 
 def _fused_batch_run(index: GridIndex, points_pad, deltas, is_zero, q_start,
                      *, qp: int, q_size: int, c: int, unicomp: bool,
                      keep_hits: bool, method: Optional[str] = None,
-                     tq: int = 128, merged: bool = False):
+                     tq: int = 128, merged: bool = False,
+                     gid_pairs: bool = False):
     """One contiguous query batch through the fused kernel."""
     from repro.kernels import ops
 
@@ -416,14 +420,16 @@ def _fused_batch_run(index: GridIndex, points_pad, deltas, is_zero, q_start,
     hits, counts, base = ops.fused_join_hits(
         points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
         index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
-        merged=merged, keep_hits=keep_hits, method=method)
+        merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits,
+        method=method)
     return ws, wc, wcells, hits, counts, base, q_pos
 
 
 def _fused_bucket_launch(index: GridIndex, points_pad, deltas, is_zero,
                          sel: np.ndarray, *, qp: int, c: int, unicomp: bool,
                          keep_hits: bool, method: Optional[str] = None,
-                         tq: int = 128, merged: bool = False):
+                         tq: int = 128, merged: bool = False,
+                         gid_pairs: bool = False):
     """One occupancy bucket through the fused kernel at ITS capacity."""
     from repro.kernels import ops
 
@@ -436,23 +442,26 @@ def _fused_bucket_launch(index: GridIndex, points_pad, deltas, is_zero,
     hits, counts, base = ops.fused_join_hits(
         points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
         index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
-        merged=merged, keep_hits=keep_hits, method=method)
+        merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits,
+        method=method)
     return ws, wc, wcells, hits, counts, base, q_pos
 
 
 @partial(jax.jit, static_argnames=("c", "tq", "unicomp", "capacity"))
-def _emit_from_hits(index: GridIndex, hits, counts, slot_base, win_start,
-                    q_pos, *, c: int, tq: int, unicomp: bool,
+def _emit_from_hits(index: GridIndex, ids, hits, counts, slot_base,
+                    win_start, q_pos, *, c: int, tq: int, unicomp: bool,
                     capacity: int):
     """Fill phase of the fused path: scatter pairs from the count pass's hit
     set. No distances here -- positions come from the window descriptors and
     output slots from the kernel's per-tile exclusive scan (``slot_base``)
     offset by the exclusive scan of the per-tile totals. ``q_pos`` is the
     launch's per-row sorted-position array (contiguous batch or occupancy
-    bucket selection)."""
+    bucket selection); ``ids`` maps sorted positions to emitted point ids
+    (``index.order`` for the single-device join, the slab's GLOBAL id
+    array for the distributed join)."""
     n_off, qp, _ = hits.shape
     npts = index.num_points
-    orig = index.order
+    orig = ids
     q_pos_c = jnp.minimum(q_pos, npts - 1)
     slots = jnp.arange(c, dtype=jnp.int32)
     cand_pos = win_start[:, :, None] + slots[None, None, :]
@@ -520,34 +529,50 @@ def _emit_from_hits_host(order: np.ndarray, hits, win_start,
 
 
 def _fused_launches(index: GridIndex, *, n_batches: int,
-                    bucketed: Optional[bool], merged: bool = False):
+                    bucketed: Optional[bool], merged: bool = False,
+                    row_ok: Optional[np.ndarray] = None,
+                    gid=None):
     """The launch schedule of one fused sweep: occupancy buckets (each
     chunked to the batching bound), or contiguous batches when the plan is
     a single class. Returns (launches, points_pad, c_max) where every
     launch is (sel|None, q_start, q_size, qp, c, tile). ``merged``
     schedules against the merged range-window capacities (DESIGN.md S7)
-    and pads the points copy with the boundary-mask coordinate lane."""
-    from repro.core.grid import global_window_cap, occupancy_plan
+    and pads the points copy with the boundary-mask coordinate lane.
+
+    ``row_ok`` (distributed slab join, DESIGN.md S3) restricts query rows
+    to a boolean mask over sorted positions (the slab's OWNED rows);
+    every launch then becomes an explicit selection. ``gid`` rides the
+    per-point global ids in a pad lane of the points copy.
+    """
+    from repro.core.grid import (BucketPlan, filter_plan_rows,
+                                 global_window_cap, occupancy_plan)
 
     npts = index.num_points
     c_glob = global_window_cap(index, merged)
-    n_batches = max(int(n_batches), 1)
+    n_batches = max(min(int(n_batches), max(npts, 1)), 1)
     batch_rows = -(-max(npts, 1) // n_batches)  # ceil
     if bucketed is None:
         bucketed = True
     plan = occupancy_plan(index, merged=merged) if bucketed else None
+    if row_ok is not None:
+        if plan is None:
+            plan = BucketPlan(caps=(c_glob,), sel=(None,),
+                              cap_global=c_glob, hist={c_glob: npts})
+        plan = filter_plan_rows(plan, row_ok)
     launches = []
     if plan is None or plan.sel[0] is None:
         cap = c_glob if plan is None else plan.caps[0]
         tile = _fused_tile(index, cap)
         points_pad, qp = _fused_pad(
             index, q_size=batch_rows, c=c_glob, tq=tile,
-            q_start_max=(n_batches - 1) * batch_rows, merged=merged)
+            q_start_max=(n_batches - 1) * batch_rows, merged=merged,
+            gid=gid)
         for b in range(n_batches):
             q_size = min(batch_rows, npts - b * batch_rows)
             launches.append((None, b * batch_rows, q_size, qp, cap, tile))
         return launches, points_pad, c_glob
-    points_pad, _ = _fused_pad(index, q_size=1, c=c_glob, merged=merged)
+    points_pad, _ = _fused_pad(index, q_size=1, c=c_glob, merged=merged,
+                               gid=gid)
     for cap, sel in zip(plan.caps, plan.sel):
         tile = _fused_tile(index, cap)
         for i in range(0, sel.shape[0], batch_rows):
@@ -561,7 +586,10 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
                      n_batches: int = 1, method: Optional[str] = None,
                      emit: Optional[str] = None,
                      bucketed: Optional[bool] = None,
-                     merged: bool = True):
+                     merged: bool = True,
+                     row_ok: Optional[np.ndarray] = None,
+                     ids: Optional[np.ndarray] = None,
+                     gid_pairs: bool = False):
     """Single-pass count -> fill driver for distance_impl='fused'.
 
     Per launch (an occupancy bucket chunk, or a contiguous batch when the
@@ -581,6 +609,14 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
     parity oracle. Both emit the same pair set (asserted in tests and by
     the CI bench smoke) -- the fill machinery is shared unchanged because
     merged windows are still contiguous runs of ``points_sorted``.
+
+    Per-shard reuse (the distributed slab join, DESIGN.md S3) supplies
+    ``row_ok`` (query rows restricted to the slab's OWNED sorted
+    positions), ``ids`` (sorted position -> GLOBAL point id, replacing
+    ``index.order`` in the emit), and ``gid_pairs`` (the kernel's
+    UNICOMP/self masks compare global ids riding a pad lane instead of
+    local sorted positions). The single-device join is the special case
+    row_ok=None, ids=index.order, gid_pairs=False.
     """
     if emit is None:
         emit = "device" if jax.default_backend() == "tpu" else "host"
@@ -589,10 +625,14 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
     else:
         deltas, is_zero = _offset_tables(index, unicomp)
     npts = index.num_points
-    order_np = np.asarray(index.order)
+    order_np = np.asarray(index.order) if ids is None else np.asarray(ids)
+    ids_dev = index.order if ids is None else jnp.asarray(
+        np.asarray(ids).astype(np.int32))
+    gid = jnp.asarray(order_np.astype(np.int32)) if gid_pairs else None
     mult = 2 if unicomp else 1
     launches, points_pad, _ = _fused_launches(
-        index, n_batches=n_batches, bucketed=bucketed, merged=merged)
+        index, n_batches=n_batches, bucketed=bucketed, merged=merged,
+        row_ok=row_ok, gid=gid)
     single = len(launches) == 1
 
     def finish(run):
@@ -609,7 +649,7 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
         ordered = mult * int(counts.sum(dtype=jnp.int64))
         capacity = max(ordered if single else _next_pow2(ordered), 1)
         keys, vals, cnt = _emit_from_hits(
-            index, hits, counts, base, ws, q_pos,
+            index, ids_dev, hits, counts, base, ws, q_pos,
             c=cap, tq=tile, unicomp=unicomp, capacity=capacity)
         assert int(cnt) == ordered, (int(cnt), ordered)
         return np.stack(
@@ -622,12 +662,12 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
             ws, _, _, hits, counts, base, q_pos = _fused_batch_run(
                 index, points_pad, deltas, is_zero, q_start, qp=qp,
                 q_size=q_size, c=cap, unicomp=unicomp, keep_hits=True,
-                method=method, tq=tile, merged=merged)
+                method=method, tq=tile, merged=merged, gid_pairs=gid_pairs)
         else:
             ws, _, _, hits, counts, base, q_pos = _fused_bucket_launch(
                 index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
                 unicomp=unicomp, keep_hits=True, method=method, tq=tile,
-                merged=merged)
+                merged=merged, gid_pairs=gid_pairs)
         if prev is not None:
             chunks.append(finish(prev))
         prev = (ws, hits, counts, base, q_pos, cap, tile)
@@ -644,7 +684,10 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
                            query_batch: Optional[int] = None,
                            method: Optional[str] = None,
                            bucketed: Optional[bool] = None,
-                           merged: bool = True) -> JoinStats:
+                           merged: bool = True,
+                           row_ok: Optional[np.ndarray] = None,
+                           ids: Optional[np.ndarray] = None,
+                           gid_pairs: bool = False) -> JoinStats:
     """Count-only fused sweep (keep_hits=False: no O(n_off*Q*C) buffer).
 
     Occupancy-bucketed by default; each bucket launch counts at ITS window
@@ -667,30 +710,34 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
         n_off = int(deltas.shape[0])
     npts = index.num_points
     mult = 2 if unicomp else 1
+    gid = (jnp.asarray(np.asarray(ids).astype(np.int32))
+           if gid_pairs else None)
     if query_batch:
         c = global_window_cap(index, merged)
         tile = _fused_tile(index, c)
         q_size = int(query_batch)
         points_pad, qp = _fused_pad(
             index, q_size=q_size, c=c, tq=tile,
-            q_start_max=((npts - 1) // q_size) * q_size, merged=merged)
+            q_start_max=((npts - 1) // q_size) * q_size, merged=merged,
+            gid=gid)
         launches = [(None, q_start, min(q_size, npts - q_start), qp, c, tile)
                     for q_start in range(0, npts, q_size)]
     else:
         launches, points_pad, _ = _fused_launches(
-            index, n_batches=1, bucketed=bucketed, merged=merged)
+            index, n_batches=1, bucketed=bucketed, merged=merged,
+            row_ok=row_ok, gid=gid)
     total = cells = cands = 0
     for sel, q_start, q_size, qp, cap, tile in launches:
         if sel is None:
             _, wc, wcells, _, counts, _, _ = _fused_batch_run(
                 index, points_pad, deltas, is_zero, q_start, qp=qp,
                 q_size=q_size, c=cap, unicomp=unicomp, keep_hits=False,
-                method=method, tq=tile, merged=merged)
+                method=method, tq=tile, merged=merged, gid_pairs=gid_pairs)
         else:
             _, wc, wcells, _, counts, _, _ = _fused_bucket_launch(
                 index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
                 unicomp=unicomp, keep_hits=False, method=method, tq=tile,
-                merged=merged)
+                merged=merged, gid_pairs=gid_pairs)
         total += mult * int(counts.sum(dtype=jnp.int64))
         cells += int(wcells.sum(dtype=jnp.int64))
         cands += int(wc.sum(dtype=jnp.int64))
@@ -1465,7 +1512,10 @@ def self_join_batched(
             index, unicomp=unicomp, sort_result=sort_result,
             n_batches=n_batches, bucketed=bucketed, merged=merged)
     npts = index.num_points
-    n_batches = max(int(n_batches), 1)
+    # clamp: more batches than points would schedule empty trailing batches
+    # whose rounded-up query slices cover pure padding rows (wasted
+    # launches; one compile per distinct empty shape)
+    n_batches = max(min(int(n_batches), max(npts, 1)), 1)
     q_size = -(-npts // n_batches)  # ceil
     deltas, is_zero = _offset_tables(index, unicomp)
     max_per_cell = _round_up(max(int(index.max_per_cell), 1), 8)

@@ -74,18 +74,23 @@ TQ_DEFAULT = 128  # query tile rows
 
 
 def resolve_merge_last_dim(n_dims: int,
-                           merge_last_dim: bool | None) -> bool:
+                           merge_last_dim: bool | None,
+                           extra_lanes: int = 0) -> bool:
     """THE merge-resolution rule, shared by the self-join drivers and the
     external-query service: merged-range sweeps default ON and fall back
     to the per-cell sweep when there is no free pad lane to carry the
-    boundary-mask coordinates (n_dims >= NP_PAD)."""
+    boundary-mask coordinates (n_dims >= NP_PAD). ``extra_lanes`` reserves
+    additional pad lanes the caller needs besides the coordinates -- the
+    distributed slab join rides the global point id in one (DESIGN.md S3),
+    so its merged sweep needs TWO free lanes."""
     if merge_last_dim is None:
         merge_last_dim = True
-    return bool(merge_last_dim) and n_dims < NP_PAD
+    return bool(merge_last_dim) and n_dims + extra_lanes < NP_PAD
 
 
 def pad_points(points_sorted: jax.Array, tail: int,
-               last_coord: jax.Array | None = None) -> jax.Array:
+               last_coord: jax.Array | None = None,
+               gid: jax.Array | None = None) -> jax.Array:
     """(N, n) -> (N + tail, NP_PAD) zero-padded copy for in-kernel gathers.
 
     ``tail`` >= C guarantees every C-slot window read is in bounds
@@ -98,21 +103,38 @@ def pad_points(points_sorted: jax.Array, tail: int,
     reads it with the same gather as the coordinates. Requires n < NP_PAD;
     the lane is excluded from the distance sum by the kernel's static
     ``n_real``.
+
+    ``gid`` (distributed slab joins, DESIGN.md S3): per-point GLOBAL id,
+    stored in the lane after the coordinates (and after ``last_coord``
+    when both ride). The kernel's ``gid_pairs`` masks compare these
+    instead of sorted positions, making the UNICOMP intra-cell tie-break
+    device-independent. Ids are small integers (< 2^24), exact in f32, so
+    the TPU downcast never reorders them; tail rows carry -1.
     """
     n = points_sorted.shape[1]
     out = jnp.pad(points_sorted, ((0, tail), (0, max(NP_PAD - n, 0))))
+    lane = n
     if last_coord is not None:
-        if n >= NP_PAD:
+        if lane >= NP_PAD:
             raise ValueError(
                 f"merged sweep needs a free coordinate lane: n_dims={n} "
                 f">= NP_PAD={NP_PAD}")
         lc = jnp.pad(last_coord.astype(points_sorted.dtype), (0, tail))
-        out = out.at[:, n].set(lc)
+        out = out.at[:, lane].set(lc)
+        lane += 1
+    if gid is not None:
+        if lane >= NP_PAD:
+            raise ValueError(
+                f"global-id lane needs a free pad lane: n_dims={n} "
+                f"(+{lane - n} in use) >= NP_PAD={NP_PAD}")
+        g = jnp.pad(gid.astype(points_sorted.dtype), (0, tail),
+                    constant_values=-1)
+        out = out.at[:, lane].set(g)
     return out
 
 
 def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
-               external: bool = False):
+               external: bool = False, gq=None, gc=None, ldiff=None):
     """UNICOMP triangle / full-stencil self mask (same rule as the drivers).
 
     ``external`` queries are not members of the indexed set: there is no
@@ -125,9 +147,26 @@ def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
     ``cand_pos > q_pos`` is exact for both (own cell: the triangle; key+1
     cell: every candidate sits at a later sorted position than any
     own-cell query).
+
+    ``gq``/``gc`` (distributed slab joins): GLOBAL ids of query/candidate
+    replace sorted positions in the tie-break, so every slab resolves an
+    intra-cell pair the same way regardless of its local sort (DESIGN.md
+    S3 ownership rule). Merged sweeps must then split the zero reduced
+    offset's window by ``ldiff`` (last-dim cell delta): the key+1 cell's
+    candidates are NON-zero-offset pairs and all count, only the own-cell
+    part applies the gid triangle -- local positions got this for free
+    (own-cell rows always precede key+1 rows in A-order), global ids do
+    not.
     """
     if external:
         return hit
+    if gq is not None:
+        if unicomp:
+            tri = gc > gq
+            if ldiff is not None:
+                tri = (ldiff > 0) | ((ldiff == 0) & tri)
+            return hit & jnp.where(zero != 0, tri, True)
+        return hit & (gc != gq)
     if unicomp:
         return hit & jnp.where(zero != 0, cand_pos > q_pos, True)
     return hit & (cand_pos != q_pos)
@@ -139,7 +178,7 @@ def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
 
 def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
                   hits_ref, counts_ref, base_ref, win_ref, sem_ref,
-                  *, c, tq, n_real, unicomp, external, merged):
+                  *, c, tq, n_real, unicomp, external, merged, gid_pairs):
     i = pl.program_id(0)           # query tile
     j = pl.program_id(1)           # stencil offset (innermost: q tile resident)
     n_off = pl.num_programs(1)
@@ -185,6 +224,7 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
         slots = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
         cand_pos = start + slots
         hit = (d2 <= eps2) & (slots < cnt)
+        ldiff = None
         if merged:
             # last-dimension boundary mask (DESIGN.md S7): a candidate
             # whose last-dim cell coordinate wrapped across a grid row is
@@ -192,7 +232,14 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
             # exact integers, so the float compare is exact
             ldiff = window[:, n_real] - qrow[0, n_real]
             hit = hit & (jnp.abs(ldiff) <= 1)
-        hit = _mask_hits(hit, cand_pos, q_pos, zero, unicomp, external)
+        gq = gc = None
+        if gid_pairs:
+            # global ids ride the lane after the coordinates (and after
+            # the merged coordinate lane); exact small integers in float
+            gl = n_real + (1 if merged else 0)
+            gq, gc = qrow[0, gl], window[:, gl]
+        hit = _mask_hits(hit, cand_pos, q_pos, zero, unicomp, external,
+                         gq, gc, ldiff if gid_pairs else None)
         hits_ref[0, r, :] = hit.astype(jnp.int8)
         counts_ref[r, 0] = counts_ref[r, 0] + jnp.sum(hit).astype(jnp.int32)
         return 0
@@ -208,11 +255,12 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
 
 @functools.partial(
     jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
-                              "merged", "keep_hits", "interpret"))
+                              "merged", "gid_pairs", "keep_hits",
+                              "interpret"))
 def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
                             is_zero, q_pos, eps2, *, c, tq, n_real, unicomp,
-                            external=False, merged=False, keep_hits=True,
-                            interpret=True):
+                            external=False, merged=False, gid_pairs=False,
+                            keep_hits=True, interpret=True):
     n_off, qp = win_start.shape
     if keep_hits:
         hits_shape, hits_map = (n_off, qp, c), (lambda i, j, *_: (j, i, 0))
@@ -240,7 +288,8 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
     )
     hits, counts, base = pl.pallas_call(
         functools.partial(_fused_kernel, c=c, tq=tq, n_real=n_real,
-                          unicomp=unicomp, external=external, merged=merged),
+                          unicomp=unicomp, external=external, merged=merged,
+                          gid_pairs=gid_pairs),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(hits_shape, jnp.int8),
@@ -257,7 +306,8 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
 # ---------------------------------------------------------------------------
 
 def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
-                 c, n_real, unicomp, external=False, merged=False):
+                 c, n_real, unicomp, external=False, merged=False,
+                 gid_pairs=False):
     """Masked hits of every query against one offset's windows.
 
     Distances accumulate dimension-by-dimension over (Q, C) column gathers,
@@ -271,6 +321,7 @@ def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
         cd = jnp.take(points_pad[:, dim], cand_pos)
         d2 = d2 + (q_batch[:, dim][:, None] - cd) ** 2
     hit = (d2 <= eps2) & (slots[None, :] < wc[:, None])
+    ldiff = None
     if merged:
         # last-dimension boundary mask, identical to the kernel's: cell
         # coordinates ride lane n_real of points_pad / q_batch as exact
@@ -278,16 +329,22 @@ def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
         ldiff = (jnp.take(points_pad[:, n_real], cand_pos)
                  - q_batch[:, n_real][:, None])
         hit = hit & (jnp.abs(ldiff) <= 1)
-    return _mask_hits(hit, cand_pos, q_pos[:, None], zero, unicomp, external)
+    gq = gc = None
+    if gid_pairs:
+        gl = n_real + (1 if merged else 0)
+        gq = q_batch[:, gl][:, None]
+        gc = jnp.take(points_pad[:, gl], cand_pos)
+    return _mask_hits(hit, cand_pos, q_pos[:, None], zero, unicomp, external,
+                      gq, gc, ldiff if gid_pairs else None)
 
 
 @functools.partial(
     jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
-                              "merged", "keep_hits"))
+                              "merged", "gid_pairs", "keep_hits"))
 def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
                                is_zero, q_pos, eps2, *, c, tq, n_real,
                                unicomp, external=False, merged=False,
-                               keep_hits=True):
+                               gid_pairs=False, keep_hits=True):
     n_off, qp = win_start.shape
     eps2s = eps2[0, 0]
 
@@ -295,7 +352,8 @@ def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
         ws, wc, zero = xs
         hit = _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2s,
                            c=c, n_real=n_real, unicomp=unicomp,
-                           external=external, merged=merged)
+                           external=external, merged=merged,
+                           gid_pairs=gid_pairs)
         counts = counts + hit.sum(axis=1, dtype=jnp.int32)
         out = hit.astype(jnp.int8) if keep_hits else jnp.zeros((), jnp.int8)
         return counts, out
@@ -316,8 +374,8 @@ def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
 
 def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                     q_pos, eps, *, c, n_real, unicomp, external=False,
-                    merged=False, tq=TQ_DEFAULT, keep_hits=True,
-                    method=None, interpret=True):
+                    merged=False, gid_pairs=False, tq=TQ_DEFAULT,
+                    keep_hits=True, method=None, interpret=True):
     """Fused gather-refine sweep over all stencil offsets in one launch.
 
     Args:
@@ -352,6 +410,12 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                   q_batch carries last-dim cell coordinates
                   (``pad_points(..., last_coord=...)``) and the kernel
                   applies the boundary mask |cand_last - q_last| <= 1.
+      gid_pairs:  static; True = the lane after the coordinates (and after
+                  the merged coordinate lane) carries GLOBAL point ids
+                  (``pad_points(..., gid=...)``) and the UNICOMP/self
+                  masks compare those instead of sorted positions -- the
+                  device-independent tie-break of the distributed slab
+                  join (DESIGN.md S3).
       keep_hits:  static; False = count-only (no O(n_off*Q*C) hits buffer).
       method:     'kernel' | 'reference' | None (auto: kernel on TPU).
 
@@ -366,12 +430,13 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
         return _fused_join_hits_pallas(
             points_pad, q_batch, win_start, win_count, is_zero, q_pos, eps2,
             c=c, tq=tq, n_real=n_real, unicomp=unicomp, external=external,
-            merged=merged, keep_hits=keep_hits, interpret=interpret)
+            merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits,
+            interpret=interpret)
     if method == "reference":
         return _fused_join_hits_reference(
             points_pad, q_batch, win_start, win_count, is_zero, q_pos, eps2,
             c=c, tq=tq, n_real=n_real, unicomp=unicomp, external=external,
-            merged=merged, keep_hits=keep_hits)
+            merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits)
     raise ValueError(f"unknown fused_join method {method!r}")
 
 

@@ -51,7 +51,8 @@ def cell_join_hits(q, cand, valid, eps):
 
 def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                     q_pos, eps, *, c, n_real, unicomp, external=False,
-                    merged=False, tq=_fused_join.TQ_DEFAULT, keep_hits=True,
+                    merged=False, gid_pairs=False,
+                    tq=_fused_join.TQ_DEFAULT, keep_hits=True,
                     method=None):
     """Fused gather-refine sweep (all offsets, one launch) -> hits/counts.
 
@@ -63,12 +64,15 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     (core/query_join.py). ``merged=True`` consumes merged last-dimension
     range windows (DESIGN.md S7; lane ``n_real`` carries cell coordinates
     -- exact small integers, so the TPU f32 downcast is lossless).
+    ``gid_pairs=True`` rides GLOBAL point ids in the next pad lane and
+    masks pairs by gid instead of sorted position (distributed slab join,
+    DESIGN.md S3; ids < 2^24, exact in f32).
     """
     dt = _kernel_dtype(points_pad.dtype)
     return _fused_join.fused_join_hits(
         points_pad.astype(dt), q_batch.astype(dt), win_start, win_count,
         is_zero, q_pos, eps, c=c, n_real=n_real, unicomp=unicomp,
-        external=external, merged=merged, tq=tq,
+        external=external, merged=merged, gid_pairs=gid_pairs, tq=tq,
         keep_hits=keep_hits, method=method, interpret=_INTERPRET,
     )
 

@@ -46,6 +46,23 @@ def make_selfjoin_mesh(*, multi_pod: bool = False):
     return _mk(shape, ("slab", "model"))
 
 
+def make_slab_mesh(n_slabs: int):
+    """1-D slab mesh over the first ``n_slabs`` local devices -- the mesh
+    shape of the distributed self-join (core/distributed.py) and the
+    distributed bench/CI smokes. Unlike ``jax.make_mesh`` this accepts a
+    strict subset of the devices, so a 2-slab smoke runs on any host with
+    ``--xla_force_host_platform_device_count=2`` or more."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if n_slabs > len(devs):
+        raise ValueError(
+            f"make_slab_mesh({n_slabs}) needs {n_slabs} devices, have "
+            f"{len(devs)} (set --xla_force_host_platform_device_count)")
+    return Mesh(np.asarray(devs[:n_slabs]), ("slab",))
+
+
 def make_smoke_mesh(n_devices: int = 1):
     """Tiny mesh over whatever devices exist (tests / CPU examples)."""
     n = min(n_devices, len(jax.devices()))

@@ -37,28 +37,14 @@ from repro.launch.mesh import make_smoke_mesh
 from repro.models.lm import LMModel
 
 
-class JoinService:
-    """Persistent epsilon-join service: index once, answer many requests.
-
-    Wraps ``core.query_join.prepare`` with the serving-side bookkeeping a
-    long-running process needs: bucket warmup (compile off the request
-    path), steady-state latency percentiles that reflect execution rather
-    than trace time, and a compilation-cache watchdog
+class _JoinServiceBase:
+    """Serving-side bookkeeping shared by the single-index and the
+    slab-sharded services: steady-state latency percentiles that reflect
+    execution rather than trace time, and a compilation-cache watchdog
     (``assert_no_retrace``) so a regression back to per-request tracing
-    can never pass silently.
-    """
+    can never pass silently."""
 
-    def __init__(self, points: np.ndarray, eps: float, *,
-                 index=None, return_pairs: bool = False,
-                 merge_last_dim: Optional[bool] = None):
-        from repro.core.grid import build_grid_host
-        from repro.core.query_join import prepare
-
-        t0 = time.perf_counter()
-        self.index = index if index is not None else build_grid_host(
-            np.asarray(points), float(eps))
-        self.prepared = prepare(self.index, merge_last_dim=merge_last_dim)
-        self.build_s = time.perf_counter() - t0
+    def __init__(self, return_pairs: bool = False):
         self.return_pairs = return_pairs
         self.latencies_ms: list[float] = []   # steady-state only
         self.total_neighbors = 0
@@ -66,19 +52,8 @@ class JoinService:
         self._warm_buckets: set[int] = set()
         self._cache_mark: Optional[dict] = None
 
-    def warmup(self, batch_size: int) -> int:
-        """Compile the executables serving ``batch_size``-query requests
-        (off the request path): the request bucket AND, on a skewed index,
-        every (capacity class, bucket size) launch a steady-state request
-        mix can need (``PreparedJoin.warm``). Returns the request bucket's
-        padded row count."""
-        from repro.core.query_join import bucket_rows
-
-        qp = bucket_rows(batch_size)
-        if qp not in self._warm_buckets:
-            self.prepared.warm(batch_size, return_pairs=self.return_pairs)
-            self._warm_buckets.add(qp)
-        return qp
+    def _answer(self, queries: np.ndarray):
+        raise NotImplementedError
 
     def mark_steady(self) -> None:
         """Snapshot compilation caches; later requests must not grow them."""
@@ -89,7 +64,7 @@ class JoinService:
     def query(self, queries: np.ndarray):
         """Answer one request; records steady-state latency."""
         t0 = time.perf_counter()
-        res = self.prepared.join(queries, return_pairs=self.return_pairs)
+        res = self._answer(queries)
         self.latencies_ms.append(1000 * (time.perf_counter() - t0))
         self.requests += 1
         self.total_neighbors += res.total
@@ -131,16 +106,148 @@ class JoinService:
                 f"{freeze(self._cache_mark)} -> {freeze(now)}")
 
 
+class JoinService(_JoinServiceBase):
+    """Persistent epsilon-join service: index once, answer many requests.
+
+    Wraps ``core.query_join.prepare`` with the serving-side bookkeeping of
+    ``_JoinServiceBase`` plus bucket warmup (compile off the request
+    path).
+    """
+
+    def __init__(self, points: np.ndarray, eps: float, *,
+                 index=None, return_pairs: bool = False,
+                 merge_last_dim: Optional[bool] = None):
+        from repro.core.grid import build_grid_host
+        from repro.core.query_join import prepare
+
+        super().__init__(return_pairs)
+        t0 = time.perf_counter()
+        self.index = index if index is not None else build_grid_host(
+            np.asarray(points), float(eps))
+        self.prepared = prepare(self.index, merge_last_dim=merge_last_dim)
+        self.build_s = time.perf_counter() - t0
+
+    def warmup(self, batch_size: int) -> int:
+        """Compile the executables serving ``batch_size``-query requests
+        (off the request path): the request bucket AND, on a skewed index,
+        every (capacity class, bucket size) launch a steady-state request
+        mix can need (``PreparedJoin.warm``). Returns the request bucket's
+        padded row count."""
+        from repro.core.query_join import bucket_rows
+
+        qp = bucket_rows(batch_size)
+        if qp not in self._warm_buckets:
+            self.prepared.warm(batch_size, return_pairs=self.return_pairs)
+            self._warm_buckets.add(qp)
+        return qp
+
+    def _answer(self, queries: np.ndarray):
+        return self.prepared.join(queries, return_pairs=self.return_pairs)
+
+
+class ShardedJoinService(_JoinServiceBase):
+    """Slab-sharded epsilon-join service (DESIGN.md S3 serving mode).
+
+    The indexed set partitions into equal-count dim-0 slabs (the same
+    partitioner as the distributed self-join); each slab holds its OWN
+    grid index and ``PreparedJoin`` -- index once per slab. A request fans
+    out to every slab (an external query near a slab boundary has
+    neighbors on both sides), per-slab counts sum, and pair point-ids
+    remap through the slab's global-id table, so the answer is identical
+    to the single-index service (asserted in tests/test_query_join.py).
+    No ownership rule is needed: every indexed point lives in exactly one
+    slab, so no pair can be found twice.
+
+    Warmup compiles every slab's executables off the request path; the
+    no-retrace gate is inherited unchanged (the executable caches are
+    module-level, shared across slabs -- a steady-state request may not
+    grow them no matter which slab it lands on).
+    """
+
+    def __init__(self, points: np.ndarray, eps: float, n_slabs: int, *,
+                 return_pairs: bool = False,
+                 merge_last_dim: Optional[bool] = None):
+        from repro.core.distributed import partition_points_host
+        from repro.core.grid import build_grid_host
+        from repro.core.query_join import prepare
+
+        super().__init__(return_pairs)
+        pts = np.asarray(points)
+        t0 = time.perf_counter()
+        coords, gids, _ = partition_points_host(pts, n_slabs)
+        self.n_slabs = n_slabs
+        self.eps = float(eps)
+        self.slab_gids: list[np.ndarray] = []
+        self.prepared: list = []
+        self.indexes: list = []
+        for k in range(n_slabs):
+            own = gids[k] >= 0
+            if not own.any():
+                continue                      # empty slab: nothing to index
+            self.slab_gids.append(gids[k][own])
+            idx = build_grid_host(coords[k][own], float(eps))
+            self.indexes.append(idx)
+            self.prepared.append(prepare(idx, merge_last_dim=merge_last_dim))
+        self.build_s = time.perf_counter() - t0
+
+    def warmup(self, batch_size: int) -> int:
+        from repro.core.query_join import bucket_rows
+
+        qp = bucket_rows(batch_size)
+        if qp not in self._warm_buckets:
+            for pj in self.prepared:
+                pj.warm(batch_size, return_pairs=self.return_pairs)
+            self._warm_buckets.add(qp)
+        return qp
+
+    def _answer(self, queries: np.ndarray):
+        from repro.core.query_join import QueryJoinResult
+
+        counts = None
+        chunks = []
+        bucket = 0
+        n_off = 0
+        emit = None
+        for pj, sg in zip(self.prepared, self.slab_gids):
+            res = pj.join(queries, return_pairs=self.return_pairs,
+                          sort_pairs=False)
+            counts = res.counts if counts is None else counts + res.counts
+            bucket, n_off, emit = res.bucket_rows, res.n_offsets, res.emit
+            if self.return_pairs and res.pairs.shape[0]:
+                p = res.pairs.copy()
+                p[:, 1] = sg[p[:, 1]]         # slab point id -> global id
+                chunks.append(p)
+        pairs = None
+        if self.return_pairs:
+            pairs = (np.concatenate(chunks, axis=0) if chunks
+                     else np.empty((0, 2), np.int32))
+            pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+        return QueryJoinResult(
+            counts=counts, pairs=pairs, n_offsets=n_off,
+            bucket_rows=bucket, emit=emit,
+            candidates_checked=None)
+
+
 def serve_selfjoin(args):
     rng = np.random.default_rng(args.seed)
     pts = rng.uniform(0, 100, size=(args.points, args.dims))
-    svc = JoinService(pts, args.eps, return_pairs=args.return_pairs,
-                      merge_last_dim=not args.no_merge)
-    sweep = "merged-range" if svc.prepared.merged else "per-cell"
-    print(f"[serve] indexed {args.points} pts in {svc.build_s:.3f}s "
-          f"(|G|={int(svc.index.num_cells)} non-empty cells, "
-          f"C={svc.prepared.c}, {svc.prepared.n_offsets} {sweep} "
-          f"stencil offsets)")
+    if args.slabs > 1:
+        svc = ShardedJoinService(pts, args.eps, args.slabs,
+                                 return_pairs=args.return_pairs,
+                                 merge_last_dim=not args.no_merge)
+        sweep = ("merged-range" if svc.prepared[0].merged else "per-cell")
+        cells = sum(int(i.num_cells) for i in svc.indexes)
+        print(f"[serve] indexed {args.points} pts across "
+              f"{len(svc.prepared)} slabs in {svc.build_s:.3f}s "
+              f"(|G|={cells} non-empty cells total, {sweep} sweep)")
+    else:
+        svc = JoinService(pts, args.eps, return_pairs=args.return_pairs,
+                          merge_last_dim=not args.no_merge)
+        sweep = "merged-range" if svc.prepared.merged else "per-cell"
+        print(f"[serve] indexed {args.points} pts in {svc.build_s:.3f}s "
+              f"(|G|={int(svc.index.num_cells)} non-empty cells, "
+              f"C={svc.prepared.c}, {svc.prepared.n_offsets} {sweep} "
+              f"stencil offsets)")
     t0 = time.perf_counter()
     qp = svc.warmup(args.request_batch)
     print(f"[serve] warmed bucket {qp} rows in "
@@ -211,6 +318,10 @@ def main(argv=None):
                     help="serve through the per-cell 3^n stencil instead "
                          "of the merged-range 3^(n-1) sweep (parity "
                          "oracle, DESIGN.md S7)")
+    ap.add_argument("--slabs", type=int, default=1,
+                    help="shard the index into N dim-0 slabs and serve "
+                         "requests scatter-gather across them "
+                         "(ShardedJoinService, DESIGN.md S3)")
     # lm service
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)

@@ -163,8 +163,10 @@ def _constrain_tree(params, specs):
         return params
 
     def one(sp, p):
+        from repro.compat import sharding_constraint
+
         try:
-            return jax.lax.with_sharding_constraint(p, sp)
+            return sharding_constraint(p, sp)
         except (ValueError, RuntimeError):
             return p
 

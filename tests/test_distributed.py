@@ -15,14 +15,16 @@ import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-# every test spawns an 8-placeholder-device subprocess and compiles
-# SPMD programs -- minutes of wall time; excluded from tier-1 default
-pytestmark = pytest.mark.slow
+# the 8-device matrix tests spawn an 8-placeholder-device subprocess and
+# compile SPMD programs -- minutes of wall time; they carry the ``slow``
+# marker individually. The 2-device smoke below is NOT slow-marked, so
+# tier-1 always exercises the slab join end to end.
+slow = pytest.mark.slow
 
 
-def run_sub(code: str) -> str:
+def run_sub(code: str, devices: int = 8) -> str:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=600)
@@ -30,6 +32,96 @@ def run_sub(code: str) -> str:
     return out.stdout
 
 
+def test_distributed_smoke_two_devices():
+    """Tier-1 (NOT slow): the fused slab join on 2 placeholder devices.
+
+    Tiny workload so the subprocess stays in seconds: pair-set parity of
+    ``distributed_self_join`` against the single-device fused join, the
+    count contract, and the empty-slab regression (more slabs than
+    points crashed the halo-reach scan: coords[i, gids[i] >= 0, 0].min()
+    on a zero-point slab)."""
+    out = run_sub(textwrap.dedent("""
+        import numpy as np
+        from repro.core.distributed import (distributed_self_join,
+                                            distributed_self_join_count)
+        from repro.core.selfjoin import self_join
+        from repro.core.brute import brute_force_count
+        from repro.launch.mesh import make_slab_mesh
+        rng = np.random.default_rng(11)
+        pts = rng.uniform(0, 6, size=(400, 2))
+        eps = 0.5
+        mesh = make_slab_mesh(2)
+        ref = self_join(pts, eps, distance_impl='fused')
+        got = distributed_self_join(pts, eps, mesh)
+        assert np.array_equal(got, ref), (got.shape, ref.shape)
+        n = distributed_self_join(pts, eps, mesh, return_pairs=False)
+        assert n == ref.shape[0], (n, ref.shape)
+        # empty-slab regression: 1 point, 2 slabs
+        one = pts[:1]
+        assert distributed_self_join(one, eps, mesh).shape == (0, 2)
+        assert distributed_self_join_count(one, eps, mesh) == 0
+        assert (distributed_self_join_count(pts[:3], eps, mesh)
+                == brute_force_count(pts[:3], eps))
+        print('OK')
+    """), devices=2)
+    assert "OK" in out
+
+
+@slow
+def test_distributed_pairs_parity_matrix():
+    """Acceptance matrix: pair sets bit-identical to the single-device
+    fused join at 2, 4, and 8 slabs, UNICOMP on/off, merged-range sweep
+    on/off, on uniform and clustered workloads."""
+    out = run_sub(textwrap.dedent("""
+        import numpy as np
+        from repro.core.distributed import distributed_self_join
+        from repro.core.selfjoin import self_join
+        from repro.launch.mesh import make_slab_mesh
+        rng = np.random.default_rng(5)
+        uni = rng.uniform(0, 10, size=(900, 2))
+        k = rng.integers(0, 6, 900)
+        centers = rng.uniform(0, 10, (6, 2))
+        clus = centers[k] + rng.normal(0, 0.3, (900, 2))
+        for name, pts, eps in (('uniform', uni, 0.5),
+                               ('clustered', clus, 0.25)):
+            for n_slabs in (2, 4, 8):
+                mesh = make_slab_mesh(n_slabs)
+                for unicomp in (True, False):
+                    for merge in (True, False):
+                        ref = self_join(pts, eps, unicomp=unicomp,
+                                        distance_impl='fused',
+                                        merge_last_dim=merge)
+                        got = distributed_self_join(
+                            pts, eps, mesh, unicomp=unicomp,
+                            merge_last_dim=merge)
+                        assert np.array_equal(got, ref), (
+                            name, n_slabs, unicomp, merge,
+                            got.shape, ref.shape)
+        print('OK')
+    """))
+    assert "OK" in out
+
+
+@slow
+def test_halo_capacity_overflow_pairs():
+    """An explicit too-small halo capacity raises (never silent)."""
+    out = run_sub(textwrap.dedent("""
+        import numpy as np
+        from repro.core.distributed import distributed_self_join
+        from repro.launch.mesh import make_slab_mesh
+        rng = np.random.default_rng(3)
+        pts = rng.uniform(0, 1.0, size=(400, 2))   # eps >> slab width
+        mesh = make_slab_mesh(2)
+        try:
+            distributed_self_join(pts, 0.5, mesh, halo_capacity=2)
+        except RuntimeError as e:
+            assert 'halo capacity overflow' in str(e), e
+            print('OK')
+    """), devices=2)
+    assert "OK" in out
+
+
+@slow
 def test_distributed_count_matches_brute():
     out = run_sub(textwrap.dedent("""
         import numpy as np, jax
@@ -53,6 +145,7 @@ def test_distributed_count_matches_brute():
     assert "OK" in out
 
 
+@slow
 def test_distributed_skewed_data_balanced():
     """Equal-count partitioner keeps slabs balanced under heavy skew."""
     out = run_sub(textwrap.dedent("""
@@ -77,6 +170,7 @@ def test_distributed_skewed_data_balanced():
     assert "OK" in out
 
 
+@slow
 def test_halo_overflow_detected():
     out = run_sub(textwrap.dedent("""
         import numpy as np, jax
@@ -102,6 +196,7 @@ def test_halo_overflow_detected():
     assert "OK" in out
 
 
+@slow
 def test_compressed_train_step_end_to_end():
     """Full train step with int8 cross-pod grad exchange on a (2,2,2) mesh:
     loss decreases and tracks the uncompressed step closely."""
@@ -147,6 +242,7 @@ def test_compressed_train_step_end_to_end():
     assert "OK" in out
 
 
+@slow
 def test_compressed_crosspod_grads():
     """int8 all-gather grad exchange: mean error small, error feedback
     carries the residual; exact for pod-identical gradients."""

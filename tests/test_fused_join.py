@@ -360,3 +360,46 @@ def test_autotune_tile_and_route_cache(tmp_path, monkeypatch):
         backend="cpu")
     assert (cached, src) == (route, "cache")
     autotune._CACHE.reset()
+
+
+@pytest.mark.parametrize("merged", [False, True])
+@pytest.mark.parametrize("unicomp", [True, False])
+def test_gid_pairs_kernel_matches_reference(merged, unicomp):
+    """The global-id pad lane (gid_pairs, DESIGN.md S3): the Pallas kernel
+    and the reference lowering agree bit-for-bit on hits/counts/bases, and
+    with ids == sorted positions the gid masks reproduce the positional
+    join's pair totals exactly."""
+    import jax.numpy as jnp
+
+    from repro.core.selfjoin import _merged_offset_tables
+
+    rng = np.random.default_rng(41)
+    pts = rng.uniform(0, 8, (300, 3))
+    eps = 0.9
+    index = build_grid_host(pts, eps)
+    npts = index.num_points
+    if merged:
+        deltas, is_zero = _merged_offset_tables(index, unicomp)
+    else:
+        deltas, is_zero = _offset_tables(index, unicomp)
+    from repro.core.grid import global_window_cap
+
+    c = global_window_cap(index, merged)
+    # ids == sorted position: the gid tie-break coincides with the
+    # positional triangle, so totals must match the plain sweep
+    ids = np.arange(npts, dtype=np.int32)
+    outs = {}
+    for method in ("reference", "kernel"):
+        points_pad, qp = _fused_pad(index, q_size=npts, c=c, merged=merged,
+                                    gid=jnp.asarray(ids))
+        outs[method] = _fused_batch_run(
+            index, points_pad, deltas, is_zero, 0, qp=qp, q_size=npts,
+            c=c, unicomp=unicomp, keep_hits=True, method=method,
+            merged=merged, gid_pairs=True)
+    for a, b in zip(outs["reference"][3:7], outs["kernel"][3:7]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    counts = np.asarray(outs["reference"][4])
+    mult = 2 if unicomp else 1
+    expect = self_join_count(pts, eps, index=index, unicomp=unicomp,
+                             distance_impl="jnp").total_pairs
+    assert mult * int(counts.sum()) == expect

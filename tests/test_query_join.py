@@ -386,3 +386,36 @@ def test_bucketed_join_service_steady_state():
         b, _ = brute(q, pts, 0.5)
         assert np.array_equal(res.counts, b)
     svc.assert_no_retrace()
+
+
+def test_sharded_service_matches_single_index():
+    """ShardedJoinService (DESIGN.md S3 serving mode): scatter-gather over
+    per-slab indexes answers exactly like the single-index service --
+    counts elementwise, pairs as the same sorted set with global point
+    ids -- and the steady state never retraces."""
+    from repro.launch.serve import JoinService, ShardedJoinService
+
+    rng = np.random.default_rng(31)
+    pts = rng.uniform(0, 40, (2500, 3))
+    eps = 1.5
+    single = JoinService(pts, eps, return_pairs=True)
+    sharded = ShardedJoinService(pts, eps, 3, return_pairs=True)
+    qs = [np.random.default_rng(seed).uniform(-2, 42, (100, 3))
+          for seed in (0, 1)]
+    # the executable caches are module-level and shared across services:
+    # answer the single-index reference BEFORE marking steady state, or its
+    # compilations would trip the sharded service's no-retrace gate
+    refs = [single.query(q) for q in qs]
+    sharded.warmup(128)
+    sharded.mark_steady()
+    for q, r1 in zip(qs, refs):
+        r2 = sharded.query(q)
+        assert np.array_equal(r1.counts, r2.counts)
+        p1 = r1.pairs[np.lexsort((r1.pairs[:, 1], r1.pairs[:, 0]))]
+        assert np.array_equal(p1, r2.pairs)
+    sharded.assert_no_retrace()
+    # more slabs than points: empty slabs are skipped, answers unchanged
+    tiny = ShardedJoinService(pts[:2], eps, 5, return_pairs=True)
+    ref = JoinService(pts[:2], eps, return_pairs=True).query(q[:16])
+    got = tiny.query(q[:16])
+    assert np.array_equal(ref.counts, got.counts)

@@ -271,3 +271,17 @@ def test_empty_and_tiny():
     assert self_join(pts, 1.0).shape == (0, 2)
     pts = np.array([[0.0, 0.0], [0.5, 0.0], [10.0, 10.0]])
     assert self_join_count(pts, 1.0).total_pairs == 2
+
+
+def test_batched_more_batches_than_points():
+    """n_batches > npts: the batch count clamps to the point count, so no
+    empty trailing batch ever schedules a rounded-up query slice over pure
+    padding rows. Pair sets match the unbatched join for every impl."""
+    rng = np.random.default_rng(23)
+    for npts in (1, 2, 3, 5):
+        pts = rng.uniform(0, 2, (npts, 2))
+        ref = self_join(pts, 0.8, distance_impl="jnp")
+        for impl in ("jnp", "fused"):
+            got = self_join_batched(pts, 0.8, n_batches=npts + 4,
+                                    distance_impl=impl)
+            assert np.array_equal(got, ref), (npts, impl)
