@@ -29,6 +29,16 @@ LEGACY pre-PR-2 path, kept verbatim here as ``legacy_range_query_retrace``
 every call. The acceptance claim is steady-state p50 >= 5x better than
 the legacy path.
 
+--mode load measures the continuous-batching serving pipeline (DESIGN.md
+S8): a closed-loop capacity probe of the per-request JoinService, an
+open-loop Poisson frontier sweep of BatchingJoinService, and the GATE
+point at --load-overload x capacity where batching must deliver
+>= --load-speedup-floor x the baseline's req/s at equal-or-better p99
+with coalescing active and no retrace. Records the frontier and an SLO
+(2x gate p99) in the "load" section; ``--mode load --smoke`` replays the
+gate workload with fewer requests and fails CI if p99 exceeds the
+recorded SLO or the coalesce factor is 1.0.
+
 --smoke shrinks the impl sweep to one tiny workload (seconds), writes to a
 temp file by default, skips the floor assert (noise at this scale), and
 schema-validates the payload -- wired into scripts/ci.sh so the harness
@@ -122,6 +132,27 @@ def validate_schema(payload: dict) -> None:
         if "fused" in e["impls"]:
             assert "route" in e["impls"]["fused"], e["workload"]
             assert "n_offsets_swept" in e["impls"]["fused"], e["workload"]
+    if "load" in payload:
+        validate_load_schema(payload["load"])
+
+
+def validate_load_schema(load: dict) -> None:
+    """Contract of the "load" section (EXPERIMENTS.md SLoad, the CI load
+    smoke's SLO source)."""
+    for key in ("workload", "knobs", "baseline_capacity", "gate",
+                "frontier", "slo_p99_ms"):
+        assert key in load, key
+    assert {"max_batch", "max_wait_ms"} <= set(load["knobs"])
+    gate = load["gate"]
+    for key in ("offered_rps", "baseline", "batching",
+                "speedup_req_per_sec", "p99_ratio"):
+        assert key in gate, key
+    for side in ("baseline", "batching"):
+        assert {"achieved_rps", "p50_ms", "p99_ms"} <= set(gate[side]), side
+    assert gate["batching"].get("coalesce_factor") is not None
+    for pt in load["frontier"]:
+        assert {"offered_rps", "achieved_rps", "p50_ms", "p99_ms",
+                "coalesce_factor"} <= set(pt)
 
 
 def best_of(fn, trials: int) -> float:
@@ -203,10 +234,10 @@ def bench_serve(args):
         lat_legacy.append(1000 * (time.perf_counter() - t0))
         legacy_counts, legacy_q = counts, q
 
-    # service path: warm once, measure steady state
+    # service path: warm once, measure steady state (warmup auto-marks
+    # steady, so latencies below land in the steady window)
     svc = JoinService(pts, eps, index=index)
     svc.warmup(B)
-    svc.mark_steady()
     for r in range(args.serve_requests):
         q = rng.uniform(0, 100, (B, args.serve_dims))
         svc.query(q)
@@ -247,6 +278,146 @@ def bench_serve(args):
           f"speedup {entry['speedup_service_vs_legacy_p50']:.1f}x  "
           f"({svc.requests_per_sec():.1f} req/s steady)")
     return entry
+
+
+def bench_load(args):
+    """Continuous-batching throughput gate + latency/throughput frontier
+    (DESIGN.md S8, EXPERIMENTS.md SLoad).
+
+    One mixed-size mixed-eps request stream drives both services:
+
+    1. closed-loop capacity probe of the per-request ``JoinService``
+       (concurrency 1 -- its max sustained req/s),
+    2. open-loop frontier sweep of ``BatchingJoinService`` at multiples
+       of that capacity (Poisson arrivals, coordinated-omission-safe
+       latency from the scheduled arrival),
+    3. the GATE point at ``--load-overload`` x baseline capacity, where
+       both services face identical offered load: the acceptance claim is
+       batching req/s >= ``--load-speedup-floor`` x baseline at
+       equal-or-better p99, with coalesce factor > 1 and the no-retrace
+       watchdog green on both services.
+
+    The recorded ``slo_p99_ms`` (2x the gate run's batching p99,
+    headroom for machine noise) is what the CI load smoke
+    (``--mode load --smoke``) replays against: same workload and knobs,
+    fewer requests, FAIL if p99 exceeds the SLO or coalescing silently
+    turned off.
+    """
+    from repro.launch.loadgen import (RequestMix, make_request_stream,
+                                      run_closed_loop, run_open_loop)
+    from repro.launch.serve import BatchingJoinService, JoinService
+
+    rng = np.random.default_rng(args.seed)
+    n_requests = 60 if args.smoke else args.load_requests
+    pts = rng.uniform(0, 100, (args.load_points, args.load_dims))
+    eps = args.load_eps
+    sizes = (16, 32, 64, 128)
+    eps_mix = (0.75 * eps, eps)
+    mix = RequestMix(sizes=sizes, eps_values=eps_mix)
+    stream = make_request_stream(n_requests, mix, args.load_dims,
+                                 seed=args.seed + 1)
+
+    # warm BOTH services before marking steady on either: the executable
+    # caches are module-global, so a later warmup would trip the earlier
+    # service's watchdog as a foreign compile
+    baseline = JoinService(pts, eps)
+    baseline.warmup(max(sizes))
+    svc = BatchingJoinService(pts, eps, max_batch=args.load_max_batch,
+                              max_wait_ms=args.load_max_wait_ms)
+    svc.warmup()
+    baseline.mark_steady()
+    svc.mark_steady()
+
+    cap = run_closed_loop(baseline, stream[: min(60, n_requests)])
+    print(f"[bench-load] baseline capacity {cap.achieved_rps:8.1f} req/s "
+          f"(closed loop, p50 {cap.p50_ms:.2f} ms)", flush=True)
+
+    gate_rate = args.load_overload * cap.achieved_rps
+    multiples = (0.5, 1.0, 2.0) if not args.smoke else ()
+    frontier = []
+    for m in multiples:
+        r = run_open_loop(svc, stream, m * cap.achieved_rps,
+                          seed=args.seed + 2)
+        frontier.append(r)
+        print(f"[bench-load] batching @ {m:3.1f}x cap "
+              f"({r.offered_rps:7.1f} rps offered): "
+              f"achieved {r.achieved_rps:7.1f} p50 {r.p50_ms:6.2f} ms "
+              f"p99 {r.p99_ms:6.2f} ms coalesce {r.coalesce_factor:.1f}",
+              flush=True)
+    gate_base = run_open_loop(baseline, stream, gate_rate,
+                              seed=args.seed + 2)
+    gate_batch = run_open_loop(svc, stream, gate_rate, seed=args.seed + 2)
+    frontier.append(gate_batch)
+    baseline.assert_no_retrace()
+    svc.assert_no_retrace()
+    speedup = gate_batch.achieved_rps / gate_base.achieved_rps
+    p99_ratio = gate_batch.p99_ms / gate_base.p99_ms
+    print(f"[bench-load] GATE @ {gate_rate:7.1f} rps offered "
+          f"({args.load_overload}x capacity): baseline "
+          f"{gate_base.achieved_rps:7.1f} req/s p99 {gate_base.p99_ms:7.2f} "
+          f"ms | batching {gate_batch.achieved_rps:7.1f} req/s p99 "
+          f"{gate_batch.p99_ms:7.2f} ms | speedup {speedup:.2f}x "
+          f"coalesce {gate_batch.coalesce_factor:.1f}", flush=True)
+
+    assert gate_batch.coalesce_factor > 1.0, (
+        "batching silently disabled: coalesce factor "
+        f"{gate_batch.coalesce_factor} at {gate_rate:.0f} rps offered")
+    if args.smoke:
+        # CI load smoke: replay the gate workload (fewer requests) against
+        # the SLO the last full run recorded in the repo BENCH file
+        repo_bench = os.path.join(_ROOT, "BENCH_selfjoin.json")
+        if os.path.exists(repo_bench):
+            with open(repo_bench) as f:
+                recorded = json.load(f).get("load")
+            if recorded is not None:
+                slo = recorded["slo_p99_ms"]
+                assert gate_batch.p99_ms <= slo, (
+                    f"load smoke p99 {gate_batch.p99_ms:.2f} ms exceeds "
+                    f"the recorded SLO {slo:.2f} ms "
+                    f"(BENCH_selfjoin.json load.slo_p99_ms)")
+                print(f"[bench-load] smoke p99 {gate_batch.p99_ms:.2f} ms "
+                      f"within recorded SLO {slo:.2f} ms", flush=True)
+    else:
+        assert speedup >= args.load_speedup_floor, (
+            f"batching speedup {speedup:.2f}x under the "
+            f"{args.load_speedup_floor}x floor at {gate_rate:.0f} rps")
+        assert gate_batch.p99_ms <= gate_base.p99_ms, (
+            f"batching p99 {gate_batch.p99_ms:.2f} ms worse than baseline "
+            f"{gate_base.p99_ms:.2f} ms at equal offered load")
+
+    return {
+        "workload": {
+            "n_points": int(args.load_points),
+            "n_dims": int(args.load_dims),
+            "eps": float(eps),
+            "request_sizes": list(sizes),
+            "eps_mix": [float(e) for e in eps_mix],
+            "n_requests": int(n_requests),
+            "arrivals": "poisson (open loop), latency from scheduled "
+                        "arrival (coordinated-omission safe)",
+        },
+        "knobs": {"max_batch": int(svc.max_batch),
+                  "max_wait_ms": float(svc.max_wait_ms)},
+        "baseline_capacity": {
+            "requests_per_sec": cap.achieved_rps,
+            "p50_ms": cap.p50_ms,
+            "p99_ms": cap.p99_ms,
+            "note": "JoinService closed loop, concurrency 1",
+        },
+        "gate": {
+            "offered_rps": gate_rate,
+            "overload_factor": float(args.load_overload),
+            "baseline": {k: v for k, v in gate_base.to_dict().items()
+                         if k not in ("mode",)},
+            "batching": {k: v for k, v in gate_batch.to_dict().items()
+                         if k not in ("mode",)},
+            "speedup_req_per_sec": speedup,
+            "p99_ratio": p99_ratio,
+            "no_retrace": True,
+        },
+        "frontier": [r.to_dict() for r in frontier],
+        "slo_p99_ms": 2.0 * gate_batch.p99_ms,
+    }
 
 
 def bench_distributed(args):
@@ -323,7 +494,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None)
     ap.add_argument("--mode", default="impl",
-                    choices=("impl", "serve", "distributed"))
+                    choices=("impl", "serve", "distributed", "load"))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny impl sweep + schema validation (CI gate); "
                          "writes to a temp file unless --out is given")
@@ -360,6 +531,19 @@ def main(argv=None):
     # --mode distributed: fused slab join parity + overhead (DESIGN.md S3)
     ap.add_argument("--dist-slabs", type=int, default=2)
     ap.add_argument("--dist-points", type=int, default=40_000)
+    # --mode load: continuous-batching frontier + SLO gate (DESIGN.md S8)
+    ap.add_argument("--load-points", type=int, default=20_000)
+    ap.add_argument("--load-dims", type=int, default=4)
+    ap.add_argument("--load-eps", type=float, default=2.0)
+    ap.add_argument("--load-requests", type=int, default=200)
+    ap.add_argument("--load-max-batch", type=int, default=1024)
+    ap.add_argument("--load-max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--load-overload", type=float, default=6.0,
+                    help="gate offered load as a multiple of the measured "
+                         "baseline capacity")
+    ap.add_argument("--load-speedup-floor", type=float, default=3.0,
+                    help="minimum batching-vs-baseline req/s ratio at the "
+                         "gate point (full runs only)")
     args = ap.parse_args(argv)
     if args.assert_floor is None:
         args.assert_floor = args.mode == "impl" and not args.smoke
@@ -389,12 +573,15 @@ def main(argv=None):
 
     import jax
 
-    if args.mode in ("serve", "distributed"):
+    if args.mode in ("serve", "distributed", "load"):
         payload = existing or {"bench": "selfjoin-distance-impl"}
         payload["backend"] = jax.default_backend()
         payload["jax"] = jax.__version__
         if args.mode == "serve":
             payload["serve"] = bench_serve(args)
+        elif args.mode == "load":
+            payload["load"] = bench_load(args)
+            validate_load_schema(payload["load"])
         else:
             payload["distributed"] = bench_distributed(args)
         with open(out, "w") as f:
@@ -503,7 +690,7 @@ def main(argv=None):
         },
         "results": results,
     }
-    for section in ("serve", "distributed"):   # each mode preserves others
+    for section in ("serve", "distributed", "load"):  # modes preserve others
         if section in existing:
             payload[section] = existing[section]
     validate_schema(payload)

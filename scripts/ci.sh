@@ -16,6 +16,13 @@ python -m pytest -x -q
 echo "[ci] serve smoke (steady state must not retrace)"
 timeout 120 python -m repro.launch.serve --arch selfjoin --requests 4
 
+echo "[ci] batching serve smoke (admission queue + coalesced launches)"
+timeout 180 python -m repro.launch.serve --arch selfjoin --requests 8 \
+  --batching --request-batch 64 --max-batch 512
+
+echo "[ci] load smoke (fixed offered load: p99 must hold the recorded SLO, coalesce factor must be > 1)"
+timeout 300 python benchmarks/bench_selfjoin.py --mode load --smoke
+
 echo "[ci] bench smoke, merged-range sweep (harness + BENCH schema + merged-vs-unmerged pair-set parity)"
 timeout 300 python benchmarks/bench_selfjoin.py --smoke
 

@@ -4,12 +4,20 @@ Reproduction of Gowanlock & Karsin (2018), "GPU Accelerated Self-join for the
 Distance Similarity Metric", adapted to TPU/JAX per DESIGN.md, plus the
 multi-arch LM substrate (configs/, models/, launch/).
 
-x64 is enabled globally: the paper's GPU-SJ uses 64-bit floats throughout, and
-the grid's linearized cell keys need int64 in >=4-D. All model/LM code passes
-explicit dtypes (bf16/f32) and is unaffected.
+x64 is enabled globally by default: the paper's GPU-SJ uses 64-bit floats
+throughout, and grids whose key space exceeds 2^31 cells need int64 keys.
+Setting the ``REPRO_NO_X64`` environment variable (to anything non-empty)
+skips the global enable: small grids (prod(dims) < 2^31) then run entirely
+on the int32 key fast path (core/grid.py ``key_dtype_for``) with float32
+coordinates, while a build that genuinely needs int64 keys raises a clear
+error instead of silently aliasing cells. All model/LM code passes explicit
+dtypes (bf16/f32) and is unaffected either way.
 """
+import os
+
 import jax
 
-jax.config.update("jax_enable_x64", True)
+if not os.environ.get("REPRO_NO_X64"):
+    jax.config.update("jax_enable_x64", True)
 
 __version__ = "1.0.0"

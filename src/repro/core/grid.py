@@ -41,6 +41,40 @@ import numpy as np
 PAD_KEY = jnp.iinfo(jnp.int64).max
 
 
+def key_dtype_for(dims) -> np.dtype:
+    """Narrowest safe cell-key dtype for a grid of ``dims`` cells.
+
+    int32 when ``prod(dims) < 2^31`` (every linear key, and every probe
+    key a host-built grid's interior geometry can form, fits), else
+    int64. The int32 fast path halves searchsorted bandwidth AND removes
+    the ``jax_enable_x64`` requirement for small grids; exact python-int
+    arithmetic so a 6-D grid just past the boundary cannot wrap into the
+    int32 route (regression-tested in tests/test_grid_keys.py).
+    """
+    volume = 1
+    for d in np.asarray(dims).ravel():
+        volume *= int(d)
+    return np.dtype(np.int32) if volume < 2**31 else np.dtype(np.int64)
+
+
+def pad_key_for(dtype) -> int:
+    """The padding/miss sentinel for a key array of ``dtype``: the dtype's
+    max. Real keys are < prod(dims) <= sentinel - 1 by ``key_dtype_for``'s
+    strict bound, so a sentinel probe can only land on padding slots --
+    whose ``cell_count`` is 0 -- never on a real cell."""
+    return int(np.iinfo(np.dtype(dtype)).max)
+
+
+def _pad_probe(arr: jax.Array, mask: jax.Array, key_dtype) -> jax.Array:
+    """``arr`` cast to the index's key dtype with ``~mask`` lanes set to
+    the dtype's miss sentinel (the dtype-aware form of
+    ``jnp.where(mask, keys, PAD_KEY)``, which overflows when the keys are
+    int32)."""
+    kd = jnp.dtype(key_dtype)
+    pad = jnp.asarray(pad_key_for(kd), kd)
+    return jnp.where(mask, arr.astype(kd), pad)
+
+
 def _require_int64_keys() -> None:
     """Refuse to build a grid whose keys would silently truncate to int32.
 
@@ -49,7 +83,8 @@ def _require_int64_keys() -> None:
     grids the linear key space exceeds 2^31 and distinct cells ALIAS to the
     same key (and ``PAD_KEY`` wraps negative, so padding slots match real
     searches). Importing ``repro`` enables x64 globally; this guard catches
-    grid builds from processes that bypassed that import.
+    grid builds that genuinely need 64-bit keys (``key_dtype_for``) from
+    processes that disabled or bypassed that import.
     """
     if not jax.config.jax_enable_x64:
         raise RuntimeError(
@@ -58,7 +93,9 @@ def _require_int64_keys() -> None:
             "silently truncate to int32 and alias distinct cells on "
             "high-dimensional grids. Enable it with "
             "jax.config.update('jax_enable_x64', True) -- importing the "
-            "`repro` package does this for you.")
+            "`repro` package does this for you (unless REPRO_NO_X64 is "
+            "set, in which case only int32-keyed grids -- prod(dims) < "
+            "2^31 -- can be built).")
 
 
 @jax.tree_util.register_dataclass
@@ -92,6 +129,13 @@ class GridIndex:
     @property
     def num_points(self) -> int:
         return self.points_sorted.shape[0]
+
+    @property
+    def key_dtype(self):
+        """Cell-key dtype: int32 on small grids (``key_dtype_for``),
+        int64 otherwise. Probe keys must cast through ``_pad_probe`` so
+        their miss sentinel matches this dtype."""
+        return self.cell_keys.dtype
 
 
 def cell_coords(points: jax.Array, grid_min: jax.Array, eps) -> jax.Array:
@@ -149,18 +193,28 @@ def grid_geometry(points: jax.Array, eps) -> tuple[jax.Array, jax.Array]:
 # ---------------------------------------------------------------------------
 
 def build_grid_host(points: np.ndarray, eps: float) -> GridIndex:
-    """Exact epsilon-grid build in numpy. Returns a device GridIndex."""
-    _require_int64_keys()
+    """Exact epsilon-grid build in numpy. Returns a device GridIndex.
+
+    Keys are built in the narrowest safe dtype (``key_dtype_for``): int32
+    when prod(dims) < 2^31 -- the natural eps-margin geometry keeps every
+    point's coords in [1, dims-2], so every probe key the stencil can form
+    stays inside [0, prod(dims)) and int32 is exact WITHOUT
+    ``jax_enable_x64``. Larger grids keep int64 keys and the x64 guard.
+    """
     points = np.asarray(points)
     npts, n = points.shape
     gmin = points.min(axis=0) - eps
     gmax = points.max(axis=0) + eps
     dims = (np.ceil((gmax - gmin) / eps)).astype(np.int64) + 1
+    key_dtype = key_dtype_for(dims)
+    if key_dtype == np.int64:
+        _require_int64_keys()
 
     coords = np.floor((points - gmin) / eps).astype(np.int64)
     keys = coords[:, 0]
     for j in range(1, n):
         keys = keys * dims[j] + coords[:, j]
+    keys = keys.astype(key_dtype)
 
     order = np.argsort(keys, kind="stable").astype(np.int32)
     keys_sorted = keys[order]
@@ -168,7 +222,7 @@ def build_grid_host(points: np.ndarray, eps: float) -> GridIndex:
     uniq, start, count = np.unique(keys_sorted, return_index=True, return_counts=True)
     ncells = uniq.shape[0]
 
-    cell_keys = np.full(npts, np.iinfo(np.int64).max, dtype=np.int64)
+    cell_keys = np.full(npts, np.iinfo(key_dtype).max, dtype=key_dtype)
     cell_keys[:ncells] = uniq
     cell_start = np.zeros(npts, dtype=np.int32)
     cell_start[:ncells] = start
@@ -489,8 +543,13 @@ def external_range_descriptors(
     zero_last = jnp.zeros(row_c.shape[:-1] + (1,), row_c.dtype)
     base = linearize(jnp.concatenate([row_c, zero_last], axis=-1),
                      index.dims)
-    lo_key = jnp.where(live, base + lo_last, PAD_KEY)
-    hi_key = jnp.where(live, base + hi_last, PAD_KEY - 1)
+    kd = index.cell_keys.dtype
+    # dead probes get an inverted sentinel span (lo > hi) in the INDEX
+    # key dtype; `live` already masks them, the sentinel just keeps the
+    # searchsorted inputs in range for int32-keyed grids
+    lo_key = _pad_probe(base + lo_last, live, kd)
+    hi_key = jnp.where(live, (base + hi_last).astype(kd),
+                       jnp.asarray(pad_key_for(kd) - 1, kd))
     lo_rank = jnp.searchsorted(index.cell_keys, lo_key,
                                side="left").astype(jnp.int32)
     hi_rank = jnp.searchsorted(index.cell_keys, hi_key,
@@ -557,7 +616,8 @@ def external_window_descriptors(
     dims = index.dims.astype(jnp.int64)
     target = qcoords[None, :, :] + offsets[:, None, :]          # (n_off, Q, n)
     in_grid = jnp.all((target >= 0) & (target < dims), axis=-1)
-    keys = jnp.where(in_grid, linearize(target, index.dims), PAD_KEY)
+    keys = _pad_probe(linearize(target, index.dims), in_grid,
+                      index.cell_keys.dtype)
     nbr = neighbor_rank(index, keys)                            # (n_off, Q)
     live = nbr >= 0
     if q_limit is not None:

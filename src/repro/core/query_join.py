@@ -61,11 +61,37 @@ _EMIT_CAP_MIN = 1024
 # Trace-time event counters: the body of a jitted function executes only
 # while TRACING, so these increments count compilations, not calls. The
 # serve smoke and the no-retrace tests snapshot this dict across requests.
+#
+# Keys prefixed ``metric:`` are SERVING metrics, not compile events: the
+# continuous-batching service (launch/serve.py) publishes its queue-depth
+# and coalescing counters here so one observability surface carries both.
+# They move on every steady-state request, so every no-retrace freeze/
+# comparison must drop them (``metric_free`` below does).
 TRACE_EVENTS: collections.Counter = collections.Counter()
+
+METRIC_PREFIX = "metric:"
 
 
 def _bump(name: str) -> None:
     TRACE_EVENTS[name] += 1
+
+
+def note_metric(name: str, inc: int = 1) -> None:
+    """Accumulate a serving metric (``metric:``-prefixed TRACE_EVENTS key)."""
+    TRACE_EVENTS[METRIC_PREFIX + name] += int(inc)
+
+
+def note_metric_peak(name: str, value: int) -> None:
+    """Record the running peak of a serving metric (e.g. queue depth)."""
+    key = METRIC_PREFIX + name
+    TRACE_EVENTS[key] = max(TRACE_EVENTS[key], int(value))
+
+
+def metric_free(trace_events: dict) -> dict:
+    """Drop ``metric:`` keys: the compile-event view of TRACE_EVENTS that
+    no-retrace comparisons must use (metrics move per request by design)."""
+    return {k: v for k, v in trace_events.items()
+            if not k.startswith(METRIC_PREFIX)}
 
 
 def _next_pow2(x: int) -> int:
@@ -193,6 +219,151 @@ class QueryJoinResult:
         return int(self.counts.sum())
 
 
+def coalesce_requests(batches) -> tuple[np.ndarray, np.ndarray]:
+    """Concatenate request query batches into ONE joint batch.
+
+    The continuous-batching service (launch/serve.py BatchingJoinService)
+    merges queued requests into a single fused launch; ``bounds`` records
+    each request's row span so ``slice_result`` can hand every caller its
+    own answer back. Empty requests are legal (zero-width spans).
+
+    Returns (queries (sum Q_i, n), bounds (k+1,) int64) with request i
+    owning joint rows [bounds[i], bounds[i+1]).
+    """
+    if not batches:
+        raise ValueError("coalesce_requests needs at least one request")
+    arrs = [np.asarray(b) for b in batches]
+    n = arrs[0].shape[1] if arrs[0].ndim == 2 else -1
+    for a in arrs:
+        if a.ndim != 2 or a.shape[1] != n:
+            raise ValueError(
+                f"coalesced requests must share (Q_i, n) shape; got "
+                f"{[tuple(x.shape) for x in arrs]}")
+    sizes = np.asarray([a.shape[0] for a in arrs], np.int64)
+    bounds = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    return np.concatenate(arrs, axis=0), bounds
+
+
+def slice_result(res: QueryJoinResult, lo: int, hi: int) -> QueryJoinResult:
+    """One request's view of a coalesced result: rows [lo, hi).
+
+    Counts slice directly; pairs require the coalesced result SORTED by
+    query row (``sort_pairs=True``, the default) so each request's pairs
+    are one contiguous span found by binary search, with query ids
+    rebased to the request's own row numbering.
+    """
+    lo, hi = int(lo), int(hi)
+    pairs = None
+    if res.pairs is not None:
+        if res.pairs.shape[0] and np.any(np.diff(res.pairs[:, 0]) < 0):
+            raise ValueError(
+                "slice_result needs the coalesced pairs sorted by query "
+                "row (join with sort_pairs=True)")
+        a = np.searchsorted(res.pairs[:, 0], lo, side="left")
+        b = np.searchsorted(res.pairs[:, 0], hi, side="left")
+        pairs = res.pairs[a:b].copy()
+        pairs[:, 0] -= lo
+    return QueryJoinResult(
+        counts=res.counts[lo:hi], pairs=pairs, n_offsets=res.n_offsets,
+        bucket_rows=res.bucket_rows, emit=res.emit, candidates_checked=None)
+
+
+@dataclasses.dataclass
+class _FusedLaunch:
+    """One dispatched fused sweep: the request rows it serves, the device
+    handles (counts / hit bitmap / slot bases), and the static shapes its
+    pair emit needs. ``rows`` is None for a whole-batch (unbucketed)
+    launch."""
+
+    rows: Optional[np.ndarray]
+    n_rows: int
+    hits: Optional[jax.Array]
+    counts: jax.Array
+    base: jax.Array
+    ws: jax.Array
+    c: int
+    tile: int
+
+
+class PendingJoin:
+    """An in-flight request: every device computation has been DISPATCHED
+    but nothing is materialized on the host yet. ``result()`` blocks on
+    the device values, emits pairs, and assembles the final
+    ``QueryJoinResult``.
+
+    This is the double-buffering seam of the batching service (DESIGN.md
+    S8): on an asynchronous backend the host can assemble and dispatch
+    batch k+1 between ``join_async(batch_k)`` and ``pending_k.result()``,
+    overlapping host-side batch assembly with device execution. The
+    split is also what lets a sharded service dispatch every slab's sweep
+    before blocking on any of them."""
+
+    def __init__(self, prepared: "PreparedJoin", launches: list, *,
+                 wc, qp: int, n_queries: int, return_pairs: bool,
+                 sort_pairs: bool, emit: Optional[str], with_stats: bool):
+        self._pj = prepared
+        self._launches = launches
+        self._wc = wc
+        self._qp = qp
+        self._n_queries = n_queries
+        self._return_pairs = return_pairs
+        self._sort_pairs = sort_pairs
+        self._emit = emit
+        self._with_stats = with_stats
+        self._result: Optional[QueryJoinResult] = None
+
+    def ready(self) -> bool:
+        """True once every launch's device values have landed, i.e.
+        ``result()`` will not block on execution. Non-blocking; a backend
+        whose arrays lack ``is_ready`` reports True (result() then blocks
+        as usual)."""
+        if self._result is not None:
+            return True
+        for ln in self._launches:
+            for arr in (ln.counts, ln.hits, ln.base):
+                if arr is not None and hasattr(arr, "is_ready"):
+                    if not arr.is_ready():
+                        return False
+        return True
+
+    def result(self) -> QueryJoinResult:
+        """Block on the device work and assemble the answer (idempotent)."""
+        if self._result is not None:
+            return self._result
+        pj, n_queries = self._pj, self._n_queries
+        counts_np = np.zeros(n_queries, np.int32)
+        chunks = []
+        for ln in self._launches:
+            counts_b = np.asarray(ln.counts)[: ln.n_rows]
+            if ln.rows is None:
+                counts_np[: ln.n_rows] = counts_b
+            else:
+                counts_np[ln.rows] = counts_b
+            if self._return_pairs:
+                p = pj._emit(self._emit, ln.hits, ln.counts, ln.base, ln.ws,
+                             c=ln.c, tq=ln.tile, total=int(counts_b.sum()))
+                if ln.rows is not None:
+                    p[:, 0] = ln.rows[p[:, 0]]   # launch row -> request row
+                chunks.append(p)
+        pairs = None
+        if self._return_pairs:
+            pairs = (chunks[0] if len(chunks) == 1
+                     else np.concatenate(chunks, axis=0) if chunks
+                     else np.empty((0, 2), np.int32))
+            assert pairs.shape[0] == int(counts_np.sum())
+            if self._sort_pairs:
+                pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+        cands = (int(np.asarray(self._wc).sum())
+                 if self._with_stats else None)
+        self._result = QueryJoinResult(
+            counts=counts_np, pairs=pairs, n_offsets=pj.n_offsets,
+            bucket_rows=self._qp,
+            emit=self._emit if self._return_pairs else None,
+            candidates_checked=cands)
+        self._launches = self._wc = None   # release device references
+        return self._result
+
+
 class PreparedJoin:
     """A grid index prepared for serving: offset tables, the padded points
     copy, and the occupancy capacity classes (DESIGN.md S6) are built ONCE;
@@ -295,24 +466,21 @@ class PreparedJoin:
                 [np.asarray(keys)[:total], np.asarray(vals)[:total]], axis=1)
         raise ValueError(f"unknown emit backend {emit!r}")
 
-    def join(self, queries, *, eps: Optional[float] = None,
-             return_pairs: bool = True, sort_pairs: bool = True,
-             emit: Optional[str] = None, method: Optional[str] = None,
-             with_stats: bool = False) -> QueryJoinResult:
-        """Epsilon join of a query batch against the prepared index.
+    def join_async(self, queries, *, eps: Optional[float] = None,
+                   return_pairs: bool = True, sort_pairs: bool = True,
+                   emit: Optional[str] = None, method: Optional[str] = None,
+                   with_stats: bool = False) -> PendingJoin:
+        """Dispatch an epsilon join and return WITHOUT materializing.
 
-        ``eps`` defaults to the index's build epsilon and may be smaller
-        (the +/-1-cell stencil only covers the build radius; a larger
-        radius needs a rebuilt grid). Counts include an indexed point that
-        exactly coincides with a query (external queries have no self).
-
-        On a skewed index the batch is served through the occupancy
-        buckets: per-query capacities from the window descriptors, one
-        fused launch per populated class at its own static capacity,
-        counts scattered back to request rows and pair query-ids remapped.
-        The pair SET matches the single-capacity launch bit-for-bit after
-        sorting (row order across classes differs; ``sort_pairs``
-        canonicalizes).
+        Runs the launch half of ``join`` -- query padding, window
+        descriptors, every fused-sweep dispatch -- and hands back a
+        ``PendingJoin`` whose ``result()`` blocks on the device values and
+        assembles the ``QueryJoinResult``. The batching service overlaps
+        host assembly of the next coalesced batch with the device
+        execution of this one through exactly this seam (DESIGN.md S8);
+        the occupancy partition of a skewed index still costs one small
+        host sync here (the per-query capacity vector decides the launch
+        shapes, so it cannot be deferred).
         """
         from repro.kernels import ops
 
@@ -338,6 +506,7 @@ class PreparedJoin:
                 jnp.asarray(n_queries, jnp.int32))
         if return_pairs and emit is None:
             emit = "device" if jax.default_backend() == "tpu" else "host"
+        launches = []
         if not self.bucketed:
             tile = self.tiles[self.c]
             hits, counts, base = ops.fused_join_hits(
@@ -345,17 +514,13 @@ class PreparedJoin:
                 self._q_pos(qp), eps, c=self.c, n_real=self.n_dims,
                 unicomp=False, external=True, merged=self.merged, tq=tile,
                 keep_hits=return_pairs, method=method)
-            counts_np = np.asarray(counts)[:n_queries]
-            pairs = None
-            if return_pairs:
-                pairs = self._emit(emit, hits, counts, base, ws, c=self.c,
-                                   tq=tile, total=int(counts_np.sum()))
+            launches.append(_FusedLaunch(
+                rows=None, n_rows=n_queries, hits=hits, counts=counts,
+                base=base, ws=ws, c=self.c, tile=tile))
         else:
             caps = np.asarray(_window_caps(wc))[:n_queries]
             caps_aligned = np.minimum(_round_up(caps, _C_ALIGN), self.c)
             cls = np.searchsorted(np.asarray(self.classes), caps_aligned)
-            counts_np = np.zeros(n_queries, np.int32)
-            chunks = []
             for k, cb in enumerate(self.classes):
                 rows = np.flatnonzero((cls == k) & (caps > 0))
                 if not rows.size:
@@ -372,26 +537,39 @@ class PreparedJoin:
                     self._q_pos(qp_b), eps, c=cb, n_real=self.n_dims,
                     unicomp=False, external=True, merged=self.merged,
                     tq=tile, keep_hits=return_pairs, method=method)
-                counts_b = np.asarray(counts)[:rows.size]
-                counts_np[rows] = counts_b
-                if return_pairs:
-                    p = self._emit(emit, hits, counts, base, ws_b, c=cb,
-                                   tq=tile, total=int(counts_b.sum()))
-                    p[:, 0] = rows[p[:, 0]]    # bucket row -> request row
-                    chunks.append(p)
-            pairs = None
-            if return_pairs:
-                pairs = (np.concatenate(chunks, axis=0) if chunks
-                         else np.empty((0, 2), np.int32))
-        if return_pairs:
-            assert pairs.shape[0] == int(counts_np.sum())
-            if sort_pairs:
-                pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
-        cands = int(np.asarray(wc).sum()) if with_stats else None
-        return QueryJoinResult(
-            counts=counts_np, pairs=pairs, n_offsets=self.n_offsets,
-            bucket_rows=qp, emit=emit if return_pairs else None,
-            candidates_checked=cands)
+                launches.append(_FusedLaunch(
+                    rows=rows, n_rows=rows.size, hits=hits, counts=counts,
+                    base=base, ws=ws_b, c=cb, tile=tile))
+        return PendingJoin(
+            self, launches, wc=wc, qp=qp, n_queries=n_queries,
+            return_pairs=return_pairs, sort_pairs=sort_pairs, emit=emit,
+            with_stats=with_stats)
+
+    def join(self, queries, *, eps: Optional[float] = None,
+             return_pairs: bool = True, sort_pairs: bool = True,
+             emit: Optional[str] = None, method: Optional[str] = None,
+             with_stats: bool = False) -> QueryJoinResult:
+        """Epsilon join of a query batch against the prepared index.
+
+        ``eps`` defaults to the index's build epsilon and may be smaller
+        (the +/-1-cell stencil only covers the build radius; a larger
+        radius needs a rebuilt grid). Counts include an indexed point that
+        exactly coincides with a query (external queries have no self).
+        The epsilon threshold is a traced operand of the fused sweep, so
+        serving a MIX of radii (all <= build eps) hits one executable.
+
+        On a skewed index the batch is served through the occupancy
+        buckets: per-query capacities from the window descriptors, one
+        fused launch per populated class at its own static capacity,
+        counts scattered back to request rows and pair query-ids remapped.
+        The pair SET matches the single-capacity launch bit-for-bit after
+        sorting (row order across classes differs; ``sort_pairs``
+        canonicalizes). ``join_async`` is the non-blocking half.
+        """
+        return self.join_async(
+            queries, eps=eps, return_pairs=return_pairs,
+            sort_pairs=sort_pairs, emit=emit, method=method,
+            with_stats=with_stats).result()
 
     def counts(self, queries, *, eps: Optional[float] = None,
                method: Optional[str] = None) -> np.ndarray:

@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grid import (GridIndex, PAD_KEY, build_grid_host,
+from repro.core.grid import (GridIndex, build_grid_host,
                              neighbor_rank, round_up as _round_up)
 from repro.core.stencil import stencil_offsets
 
@@ -123,9 +123,11 @@ def _neighbor_ranks_for_delta(index: GridIndex, delta: jax.Array) -> jax.Array:
     Padding cells resolve to padding slots whose cell_count is 0, so they
     contribute no candidates downstream.
     """
+    from repro.core.grid import _pad_probe
+
     valid = jnp.arange(index.num_points) < index.num_cells
     base = jnp.where(valid, index.cell_keys, 0)
-    qk = jnp.where(valid, base + delta, PAD_KEY)
+    qk = _pad_probe(base + delta, valid, index.cell_keys.dtype)
     return neighbor_rank(index, qk)
 
 

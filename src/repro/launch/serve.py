@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
+from collections import deque
 from typing import Optional
 
 import jax
@@ -38,45 +40,82 @@ from repro.models.lm import LMModel
 
 
 class _JoinServiceBase:
-    """Serving-side bookkeeping shared by the single-index and the
-    slab-sharded services: steady-state latency percentiles that reflect
+    """Serving-side bookkeeping shared by the single-index, slab-sharded
+    and batching services: steady-state latency percentiles that reflect
     execution rather than trace time, and a compilation-cache watchdog
     (``assert_no_retrace``) so a regression back to per-request tracing
-    can never pass silently."""
+    can never pass silently.
+
+    Latency samples taken before ``mark_steady`` land in
+    ``warmup_latencies_ms`` and are EXCLUDED from ``percentiles`` /
+    ``requests_per_sec``; every ``warmup()`` implementation auto-marks
+    steady (with a warning) so a caller that forgets ``mark_steady`` can
+    no longer report warmup-tainted stats.
+    """
 
     def __init__(self, return_pairs: bool = False):
         self.return_pairs = return_pairs
-        self.latencies_ms: list[float] = []   # steady-state only
+        self.latencies_ms: list[float] = []        # steady-state window
+        self.warmup_latencies_ms: list[float] = []  # pre-steady samples
         self.total_neighbors = 0
         self.requests = 0
+        self._steady = False
         self._warm_buckets: set[int] = set()
         self._cache_mark: Optional[dict] = None
 
-    def _answer(self, queries: np.ndarray):
+    def _answer(self, queries: np.ndarray, eps: Optional[float]):
         raise NotImplementedError
 
     def mark_steady(self) -> None:
-        """Snapshot compilation caches; later requests must not grow them."""
+        """Snapshot compilation caches; later requests must not grow them,
+        and later latency samples enter the steady-state window."""
         from repro.core.query_join import executable_cache_stats
 
+        self._steady = True
         self._cache_mark = executable_cache_stats()
 
-    def query(self, queries: np.ndarray):
-        """Answer one request; records steady-state latency."""
+    def _auto_steady(self) -> None:
+        """Called by ``warmup()``: enter steady state if the caller has
+        not done so explicitly (warn -- forgetting ``mark_steady`` used to
+        silently mix compile latencies into the report)."""
+        if not self._steady:
+            warnings.warn(
+                "mark_steady() was never called; auto-marking steady "
+                "after warmup() so reported stats exclude the warmup "
+                "window", stacklevel=3)
+            self.mark_steady()
+
+    def query(self, queries: np.ndarray, *, eps: Optional[float] = None):
+        """Answer one request; records the latency sample in the steady
+        or warmup window depending on ``mark_steady``."""
         t0 = time.perf_counter()
-        res = self._answer(queries)
-        self.latencies_ms.append(1000 * (time.perf_counter() - t0))
+        res = self._answer(queries, eps)
+        dt_ms = 1000 * (time.perf_counter() - t0)
+        (self.latencies_ms if self._steady
+         else self.warmup_latencies_ms).append(dt_ms)
         self.requests += 1
         self.total_neighbors += res.total
         return res
 
+    def _steady_window(self) -> list[float]:
+        if self.latencies_ms:
+            return self.latencies_ms
+        if self.warmup_latencies_ms:
+            warnings.warn(
+                "no steady-state samples recorded (mark_steady/warmup "
+                "never ran before queries); falling back to the warmup "
+                "window -- stats include compile time", stacklevel=3)
+            return self.warmup_latencies_ms
+        return []
+
     def percentiles(self) -> tuple[float, float]:
-        lat = np.asarray(self.latencies_ms)
+        lat = np.asarray(self._steady_window())
         return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
 
     def requests_per_sec(self) -> float:
-        total_s = sum(self.latencies_ms) / 1000
-        return self.requests / total_s if total_s > 0 else float("inf")
+        win = self._steady_window()
+        total_s = sum(win) / 1000
+        return len(win) / total_s if total_s > 0 else float("inf")
 
     def assert_no_retrace(self) -> None:
         """Raise if any request since ``mark_steady`` traced or compiled.
@@ -85,16 +124,19 @@ class _JoinServiceBase:
         static shape bucketed to powers of two (with a floor), so a
         pair-serving service legitimately compiles O(log max_result) emit
         executables on demand as larger results first appear -- warmup
-        cannot know result sizes in advance. The request-path functions
-        (window descriptors, fused sweep) must stay frozen; those are
-        what the per-request re-tracing bug burned."""
-        from repro.core.query_join import executable_cache_stats
+        cannot know result sizes in advance. Observability counters
+        (``metric:`` trace events, e.g. the batching service's coalesce
+        counters) are also exempt: they bump per launch without tracing.
+        The request-path functions (window descriptors, fused sweep) must
+        stay frozen; those are what the per-request re-tracing bug
+        burned."""
+        from repro.core.query_join import executable_cache_stats, metric_free
 
         def freeze(stats: dict) -> dict:
             out = {k: v for k, v in stats.items()
                    if k not in ("emit_pairs_device", "trace_events")}
             out["trace_events"] = {
-                k: v for k, v in stats["trace_events"].items()
+                k: v for k, v in metric_free(stats["trace_events"]).items()
                 if k != "emit_pairs_device"}
             return out
 
@@ -139,10 +181,12 @@ class JoinService(_JoinServiceBase):
         if qp not in self._warm_buckets:
             self.prepared.warm(batch_size, return_pairs=self.return_pairs)
             self._warm_buckets.add(qp)
+        self._auto_steady()
         return qp
 
-    def _answer(self, queries: np.ndarray):
-        return self.prepared.join(queries, return_pairs=self.return_pairs)
+    def _answer(self, queries: np.ndarray, eps: Optional[float] = None):
+        return self.prepared.join(queries, eps=eps,
+                                  return_pairs=self.return_pairs)
 
 
 class ShardedJoinService(_JoinServiceBase):
@@ -198,40 +242,378 @@ class ShardedJoinService(_JoinServiceBase):
             for pj in self.prepared:
                 pj.warm(batch_size, return_pairs=self.return_pairs)
             self._warm_buckets.add(qp)
+        self._auto_steady()
         return qp
 
-    def _answer(self, queries: np.ndarray):
+    def _answer(self, queries: np.ndarray, eps: Optional[float] = None):
+        # dispatch EVERY slab before resolving ANY: the k-th slab's fused
+        # sweep executes on device while the (k+1)-th is still being set
+        # up on the host (join_async seam, DESIGN.md S8)
+        pendings = [pj.join_async(queries, eps=eps,
+                                  return_pairs=self.return_pairs,
+                                  sort_pairs=False)
+                    for pj in self.prepared]
+        return _merge_slab_results([p.result() for p in pendings],
+                                   self.slab_gids, self.return_pairs)
+
+
+def _merge_slab_results(results, slab_gids, return_pairs: bool):
+    """Scatter-gather merge of per-slab join results into the single-index
+    answer: counts sum, pair point-ids remap through each slab's global-id
+    table, merged pairs lexsort to the canonical order."""
+    from repro.core.query_join import QueryJoinResult
+
+    counts = None
+    chunks = []
+    bucket = 0
+    n_off = 0
+    emit = None
+    for res, sg in zip(results, slab_gids):
+        counts = res.counts if counts is None else counts + res.counts
+        bucket, n_off, emit = res.bucket_rows, res.n_offsets, res.emit
+        if return_pairs and res.pairs.shape[0]:
+            p = res.pairs.copy()
+            p[:, 1] = sg[p[:, 1]]             # slab point id -> global id
+            chunks.append(p)
+    pairs = None
+    if return_pairs:
+        pairs = (np.concatenate(chunks, axis=0) if chunks
+                 else np.empty((0, 2), np.int32))
+        pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+    return QueryJoinResult(
+        counts=counts, pairs=pairs, n_offsets=n_off,
+        bucket_rows=bucket, emit=emit,
+        candidates_checked=None)
+
+
+class BatchTicket:
+    """Handle for one submitted request: completes when every part of the
+    request (a request wider than ``max_batch`` is split) has been sliced
+    out of its coalesced launch."""
+
+    def __init__(self, n_parts: int, n_queries: int):
+        self.n_parts = n_parts
+        self.n_queries = n_queries
+        self.t_submit = time.perf_counter()
+        self.t_done: Optional[float] = None
+        self._parts: dict = {}
+
+    def done(self) -> bool:
+        return len(self._parts) == self.n_parts
+
+    def _add_part(self, part: int, res) -> None:
+        self._parts[part] = res
+        if self.done() and self.t_done is None:
+            self.t_done = time.perf_counter()
+
+    def result(self):
+        """The request's QueryJoinResult, identical to serving it alone
+        (parts concatenate back in submission order; pair query-rows of
+        part k rebase by the rows of parts < k)."""
         from repro.core.query_join import QueryJoinResult
 
-        counts = None
-        chunks = []
-        bucket = 0
-        n_off = 0
-        emit = None
-        for pj, sg in zip(self.prepared, self.slab_gids):
-            res = pj.join(queries, return_pairs=self.return_pairs,
-                          sort_pairs=False)
-            counts = res.counts if counts is None else counts + res.counts
-            bucket, n_off, emit = res.bucket_rows, res.n_offsets, res.emit
-            if self.return_pairs and res.pairs.shape[0]:
-                p = res.pairs.copy()
-                p[:, 1] = sg[p[:, 1]]         # slab point id -> global id
-                chunks.append(p)
+        if not self.done():
+            raise RuntimeError(
+                f"ticket incomplete: {len(self._parts)}/{self.n_parts} "
+                f"parts resolved (call service.drain() first)")
+        parts = [self._parts[i] for i in range(self.n_parts)]
+        if len(parts) == 1:
+            return parts[0]
+        counts = np.concatenate([p.counts for p in parts])
         pairs = None
-        if self.return_pairs:
-            pairs = (np.concatenate(chunks, axis=0) if chunks
-                     else np.empty((0, 2), np.int32))
-            pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+        if parts[0].pairs is not None:
+            chunks = []
+            row0 = 0
+            for p in parts:
+                q = p.pairs.copy()
+                q[:, 0] += row0
+                chunks.append(q)
+                row0 += p.counts.shape[0]
+            pairs = np.concatenate(chunks, axis=0)
         return QueryJoinResult(
-            counts=counts, pairs=pairs, n_offsets=n_off,
-            bucket_rows=bucket, emit=emit,
+            counts=counts, pairs=pairs, n_offsets=parts[0].n_offsets,
+            bucket_rows=parts[0].bucket_rows, emit=parts[0].emit,
             candidates_checked=None)
+
+    def latency_ms(self) -> float:
+        if self.t_done is None:
+            raise RuntimeError("ticket not complete")
+        return 1000 * (self.t_done - self.t_submit)
+
+
+class _Sub:
+    """One admission-queue entry: a request part awaiting coalescing."""
+
+    __slots__ = ("queries", "eps_key", "ticket", "part", "t_arrival")
+
+    def __init__(self, queries, eps_key, ticket, part):
+        self.queries = queries
+        self.eps_key = eps_key
+        self.ticket = ticket
+        self.part = part
+        self.t_arrival = time.perf_counter()
+
+
+class _Inflight:
+    """A launched coalesced batch whose device results are outstanding."""
+
+    __slots__ = ("pendings", "subs", "bounds")
+
+    def __init__(self, pendings, subs, bounds):
+        self.pendings = pendings      # one PendingJoin per slab
+        self.subs = subs
+        self.bounds = bounds
+
+
+class BatchingJoinService(_JoinServiceBase):
+    """Continuous-batching epsilon-join service (DESIGN.md S8).
+
+    Requests from independent callers enter an admission queue
+    (``submit``) and are coalesced -- FIFO, same epsilon -- into single
+    fused launches of up to ``max_batch`` queries, so the per-launch
+    dispatch overhead that dominates small requests amortizes across
+    callers and the kernel runs at the occupancy the paper's batching
+    scheme targets. Coalesced batch sizes land on the same pow2 bucket
+    ladder as direct requests (``bucket_rows``), and ``warmup`` compiles
+    EVERY rung up to ``max_batch``, so ``PreparedJoin.warm``'s no-retrace
+    contract holds over arbitrary coalescing patterns. A flushed batch
+    dispatches through ``join_async`` and resolves lazily: up to two
+    batches stay in flight, so host-side assembly (queue scan, request
+    concatenation, descriptor setup) of batch k+1 overlaps device
+    execution of batch k (double buffering). Per-request results slice
+    back out of the coalesced ``QueryJoinResult`` by query-row range
+    (``slice_result``) -- bitwise identical to serving the request alone
+    (tests/test_serve_batching.py property-tests arbitrary partitions).
+
+    A request wider than ``max_batch`` splits into parts that ride
+    separate launches and concatenate on completion; an empty request
+    completes immediately. With ``n_slabs > 1`` each coalesced batch
+    scatter-gathers across the slab-sharded indexes exactly like
+    ``ShardedJoinService``.
+    """
+
+    def __init__(self, points: np.ndarray, eps: float, *,
+                 index=None, n_slabs: int = 1, return_pairs: bool = False,
+                 merge_last_dim: Optional[bool] = None,
+                 max_batch: int = 1024, max_wait_ms: float = 2.0):
+        from repro.core.grid import build_grid_host
+        from repro.core.query_join import prepare
+
+        super().__init__(return_pairs)
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.eps = float(eps)
+        t0 = time.perf_counter()
+        if n_slabs > 1:
+            from repro.core.distributed import partition_points_host
+
+            pts = np.asarray(points)
+            coords, gids, _ = partition_points_host(pts, n_slabs)
+            self.slab_gids = []
+            self.indexes = []
+            self.prepared = []
+            for k in range(n_slabs):
+                own = gids[k] >= 0
+                if not own.any():
+                    continue
+                self.slab_gids.append(gids[k][own])
+                idx = build_grid_host(coords[k][own], float(eps))
+                self.indexes.append(idx)
+                self.prepared.append(
+                    prepare(idx, merge_last_dim=merge_last_dim))
+        else:
+            idx = index if index is not None else build_grid_host(
+                np.asarray(points), float(eps))
+            self.slab_gids = None
+            self.indexes = [idx]
+            self.prepared = [prepare(idx, merge_last_dim=merge_last_dim)]
+        self.n_slabs = len(self.prepared)
+        self.build_s = time.perf_counter() - t0
+        self._queue: deque[_Sub] = deque()
+        self._queued_rows = 0
+        self._inflight: deque[_Inflight] = deque()
+        self.n_launches = 0
+        self.n_coalesced = 0
+        self.rows_launched = 0
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, queries: np.ndarray, *,
+               eps: Optional[float] = None) -> BatchTicket:
+        """Enqueue one request; returns a ticket that completes once every
+        part has been served from a coalesced launch (``pump``/``drain``
+        advance the pipeline). Does not block."""
+        from repro.core.query_join import QueryJoinResult, note_metric_peak
+
+        pj0 = self.prepared[0]
+        q = np.asarray(queries, pj0.dtype)
+        if q.ndim != 2 or q.shape[1] != pj0.n_dims:
+            raise ValueError(f"queries must be (Q, {pj0.n_dims}), "
+                             f"got {q.shape}")
+        eps_key = float(self.eps if eps is None else eps)
+        n = q.shape[0]
+        if n == 0:
+            t = BatchTicket(1, 0)
+            t._add_part(0, QueryJoinResult(
+                counts=np.zeros(0, np.int32),
+                pairs=(np.empty((0, 2), np.int32) if self.return_pairs
+                       else None),
+                n_offsets=pj0.n_offsets, bucket_rows=0, emit=None,
+                candidates_checked=None))
+            return t
+        parts = [q[i:i + self.max_batch]
+                 for i in range(0, n, self.max_batch)]
+        ticket = BatchTicket(len(parts), n)
+        for i, p in enumerate(parts):
+            self._queue.append(_Sub(p, eps_key, ticket, i))
+            self._queued_rows += p.shape[0]
+        note_metric_peak("batch.queue_depth_peak", len(self._queue))
+        return ticket
+
+    # -- pipeline ----------------------------------------------------------
+
+    def _flush_due(self, now: float) -> bool:
+        if not self._queue:
+            return False
+        if self._queued_rows >= self.max_batch:
+            return True
+        return 1000 * (now - self._queue[0].t_arrival) >= self.max_wait_ms
+
+    def _form_group(self) -> list[_Sub]:
+        """Pop the next coalesced batch off the queue: FIFO from the head,
+        same epsilon (the threshold is one traced scalar per launch), up
+        to ``max_batch`` rows. Skipped entries (different eps, or too wide
+        to fit the remaining budget) keep their queue position."""
+        head_eps = self._queue[0].eps_key
+        group: list[_Sub] = []
+        rows = 0
+        keep: list[_Sub] = []
+        while self._queue:
+            sub = self._queue.popleft()
+            if (sub.eps_key == head_eps
+                    and rows + sub.queries.shape[0] <= self.max_batch):
+                group.append(sub)
+                rows += sub.queries.shape[0]
+            else:
+                keep.append(sub)
+        self._queue.extendleft(reversed(keep))
+        self._queued_rows -= rows
+        return group
+
+    def _launch(self, group: list[_Sub]) -> None:
+        from repro.core.query_join import coalesce_requests, note_metric
+
+        qcat, bounds = coalesce_requests([s.queries for s in group])
+        eps = group[0].eps_key
+        single = self.slab_gids is None
+        pendings = [pj.join_async(qcat, eps=eps,
+                                  return_pairs=self.return_pairs,
+                                  sort_pairs=single)
+                    for pj in self.prepared]
+        self._inflight.append(_Inflight(pendings, group, bounds))
+        self.n_launches += 1
+        self.n_coalesced += len(group)
+        self.rows_launched += qcat.shape[0]
+        note_metric("batch.launches")
+        note_metric("batch.coalesced_requests", len(group))
+        note_metric("batch.rows", qcat.shape[0])
+
+    def _resolve_oldest(self) -> None:
+        from repro.core.query_join import slice_result
+
+        infl = self._inflight.popleft()
+        if self.slab_gids is None:
+            res = infl.pendings[0].result()
+        else:
+            res = _merge_slab_results(
+                [p.result() for p in infl.pendings],
+                self.slab_gids, self.return_pairs)
+        for k, sub in enumerate(infl.subs):
+            part = slice_result(res, int(infl.bounds[k]),
+                                int(infl.bounds[k + 1]))
+            sub.ticket._add_part(sub.part, part)
+            self.total_neighbors += part.total
+
+    def pump(self) -> None:
+        """Advance the pipeline without blocking on admission: launch
+        every due batch (oldest waiter past ``max_wait_ms``, or a full
+        ``max_batch`` of rows queued), then resolve inflight batches --
+        eagerly while their device values are already down (free), and
+        forcibly past the double-buffer depth of two, so the NEXT ``pump``
+        assembles batch k+1 on the host while batch k still executes."""
+        now = time.perf_counter()
+        while self._flush_due(now):
+            self._launch(self._form_group())
+        while self._inflight and (len(self._inflight) > 2
+                                  or all(p.ready() for p
+                                         in self._inflight[0].pendings)):
+            self._resolve_oldest()
+
+    def drain(self) -> None:
+        """Flush and resolve everything: queued requests launch regardless
+        of due time, all inflight batches resolve. Every ticket issued
+        before the call is complete afterwards."""
+        while self._queue:
+            self._launch(self._form_group())
+        while self._inflight:
+            self._resolve_oldest()
+
+    # -- service interface -------------------------------------------------
+
+    @property
+    def coalesce_factor(self) -> float:
+        """Mean requests per fused launch (1.0 = batching is a no-op)."""
+        return self.n_coalesced / self.n_launches if self.n_launches else 0.0
+
+    def warmup(self, batch_size: Optional[int] = None) -> int:
+        """Compile every executable a steady-state coalescing pattern can
+        reach, off the request path: coalesced batches land on ANY pow2
+        rung up to ``max_batch`` rows (not just the one bucket a fixed
+        request size would hit), so the whole ladder warms -- for every
+        slab. ``batch_size`` is accepted for interface parity with the
+        other services but deliberately IGNORED for the ladder top: the
+        coalescer is free to fill any group to ``max_batch`` rows no
+        matter how small individual requests are (and wider requests
+        split into ``max_batch``-row parts), so warming less than the
+        full ladder would retrace in steady state. Returns the top
+        rung's padded row count."""
+        from repro.core.query_join import bucket_rows
+
+        top = bucket_rows(self.max_batch)
+        s = bucket_rows(1)
+        while s <= top:
+            if s not in self._warm_buckets:
+                for pj in self.prepared:
+                    pj.warm(s, return_pairs=self.return_pairs)
+                self._warm_buckets.add(s)
+            s *= 2
+        self._auto_steady()
+        return top
+
+    def _answer(self, queries: np.ndarray, eps: Optional[float] = None):
+        # synchronous convenience path: admit, drain, slice. Throughput
+        # callers should submit()/pump() concurrently instead.
+        ticket = self.submit(queries, eps=eps)
+        self.drain()
+        return ticket.result()
 
 
 def serve_selfjoin(args):
     rng = np.random.default_rng(args.seed)
     pts = rng.uniform(0, 100, size=(args.points, args.dims))
-    if args.slabs > 1:
+    if args.batching:
+        svc = BatchingJoinService(
+            pts, args.eps, n_slabs=args.slabs,
+            return_pairs=args.return_pairs,
+            merge_last_dim=not args.no_merge,
+            max_batch=args.max_batch, max_wait_ms=args.max_wait_ms)
+        print(f"[serve] batching service: {args.points} pts, "
+              f"{svc.n_slabs} slab(s), max_batch={svc.max_batch}, "
+              f"max_wait={svc.max_wait_ms}ms "
+              f"(indexed in {svc.build_s:.3f}s)")
+    elif args.slabs > 1:
         svc = ShardedJoinService(pts, args.eps, args.slabs,
                                  return_pairs=args.return_pairs,
                                  merge_last_dim=not args.no_merge)
@@ -249,19 +631,36 @@ def serve_selfjoin(args):
               f"C={svc.prepared.c}, {svc.prepared.n_offsets} {sweep} "
               f"stencil offsets)")
     t0 = time.perf_counter()
-    qp = svc.warmup(args.request_batch)
+    qp = svc.warmup(args.request_batch)   # auto-marks steady (warns)
     print(f"[serve] warmed bucket {qp} rows in "
           f"{time.perf_counter()-t0:.3f}s (compile, off the request path)")
-    svc.mark_steady()
-    for r in range(args.requests):
-        q = rng.uniform(0, 100, size=(args.request_batch, args.dims))
-        svc.query(q)
-    p50, p99 = svc.percentiles()
-    print(f"[serve] {args.requests} requests x {args.request_batch} queries"
-          f"{' (+pairs)' if args.return_pairs else ''}: "
-          f"p50 {p50:.1f}ms p99 {p99:.1f}ms "
-          f"{svc.requests_per_sec():.1f} req/s "
-          f"({svc.total_neighbors} neighbors found)")
+    if args.batching:
+        # throughput path: admit everything through the queue, pump, drain
+        tickets = [svc.submit(rng.uniform(
+            0, 100, size=(args.request_batch, args.dims)))
+            for _ in range(args.requests)]
+        t0 = time.perf_counter()
+        svc.pump()
+        svc.drain()
+        wall = time.perf_counter() - t0
+        svc.latencies_ms = [t.latency_ms() for t in tickets]
+        svc.requests = len(tickets)
+        p50, p99 = svc.percentiles()
+        print(f"[serve] {args.requests} requests x {args.request_batch} "
+              f"queries coalesced into {svc.n_launches} launches "
+              f"(coalesce factor {svc.coalesce_factor:.1f}): "
+              f"p50 {p50:.1f}ms p99 {p99:.1f}ms "
+              f"{len(tickets) / wall:.1f} req/s")
+    else:
+        for r in range(args.requests):
+            q = rng.uniform(0, 100, size=(args.request_batch, args.dims))
+            svc.query(q)
+        p50, p99 = svc.percentiles()
+        print(f"[serve] {args.requests} requests x {args.request_batch} "
+              f"queries{' (+pairs)' if args.return_pairs else ''}: "
+              f"p50 {p50:.1f}ms p99 {p99:.1f}ms "
+              f"{svc.requests_per_sec():.1f} req/s "
+              f"({svc.total_neighbors} neighbors found)")
     svc.assert_no_retrace()   # regression gate: steady state never compiles
     print("[serve] no-retrace check passed: steady-state requests hit "
           "cached executables only")
@@ -322,6 +721,15 @@ def main(argv=None):
                     help="shard the index into N dim-0 slabs and serve "
                          "requests scatter-gather across them "
                          "(ShardedJoinService, DESIGN.md S3)")
+    ap.add_argument("--batching", action="store_true",
+                    help="serve through the continuous-batching admission "
+                         "queue (BatchingJoinService, DESIGN.md S8); "
+                         "composes with --slabs")
+    ap.add_argument("--max-batch", type=int, default=1024,
+                    help="coalesced launch budget in query rows")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="admission-queue flush deadline for the oldest "
+                         "waiting request")
     # lm service
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)

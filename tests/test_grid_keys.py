@@ -1,0 +1,145 @@
+"""int32 grid-key fast path (core/grid.py key_dtype_for).
+
+Small grids (prod(dims) < 2^31) build int32 cell keys and no longer
+require jax_enable_x64; larger grids keep the int64 path behind the
+explicit x64 guard.  The 6-D boundary regression pins the routing rule
+on a grid whose key-space volume straddles 2^31.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.grid import (build_grid_host, grid_geometry, key_dtype_for,
+                             pad_key_for)
+from repro.core.query_join import prepare
+from repro.core.selfjoin import self_join, self_join_count
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def brute_pairs(pts, eps):
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    i, j = np.nonzero(d2 <= eps * eps)
+    return {(a, b) for a, b in zip(i.tolist(), j.tolist()) if a != b}
+
+
+def test_key_dtype_for_boundary():
+    assert key_dtype_for([46341, 46341]) == np.int64     # 46341^2 > 2^31-1
+    assert key_dtype_for([46340, 46340]) == np.int32     # 46340^2 < 2^31
+    # prod == 2^31-1 is still int32-safe: real keys <= prod-1 == 2^31-2,
+    # so the dtype-max sentinel (2^31-1) never aliases a real cell.
+    assert key_dtype_for([2**31 - 1]) == np.int32
+    assert key_dtype_for([2**31]) == np.int64
+    # product must be exact python-int arithmetic, no int64 overflow
+    assert key_dtype_for([2**20, 2**20, 2**20]) == np.int64
+
+
+def test_pad_key_for_is_dtype_max():
+    assert pad_key_for(np.int32) == np.iinfo(np.int32).max
+    assert pad_key_for(np.int64) == np.iinfo(np.int64).max
+
+
+def test_small_grid_routes_to_int32():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 100, size=(1500, 3))
+    idx = build_grid_host(pts, 3.0)
+    assert idx.key_dtype == np.int32
+    assert np.asarray(idx.cell_keys).dtype == np.int32
+
+
+def test_int32_selfjoin_matches_brute():
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 30, size=(400, 2))
+    eps = 2.0
+    idx = build_grid_host(pts, eps)
+    assert idx.key_dtype == np.int32
+    ref = brute_pairs(pts, eps)
+    stats = self_join_count(pts, eps)
+    assert int(stats.total_pairs) == len(ref)
+    pairs = np.asarray(self_join(pts, eps))
+    got = set(zip(pairs[:, 0].tolist(), pairs[:, 1].tolist()))
+    assert got == ref
+
+
+def test_int32_external_join_matches_brute():
+    rng = np.random.default_rng(2)
+    pts = rng.uniform(0, 50, size=(900, 3))
+    eps = 3.0
+    idx = build_grid_host(pts, eps)
+    assert idx.key_dtype == np.int32
+    pj = prepare(idx)
+    q = rng.uniform(-5, 55, size=(64, 3))       # some queries off-grid
+    d2 = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    ref = (d2 <= eps * eps).sum(1)
+    assert np.array_equal(np.asarray(pj.counts(q)), ref)
+
+
+def test_6d_boundary_grid_still_routes_to_int64():
+    """Regression: a 6-D grid just past 2^31 cells must keep int64 keys.
+
+    Uniform [0,100]^6 at eps=3.2 has prod(dims) ~ 1.79e9 (int32); the
+    same extent at eps=2.9 has ~ 3.01e9 cells and MUST route to int64 --
+    an int32 key there would alias distinct cells.
+    """
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 100, size=(2000, 6))
+    pts[0] = 0.0
+    pts[1] = 100.0                              # pin the extent exactly
+
+    _, dims_small = grid_geometry(pts, 3.2)
+    _, dims_big = grid_geometry(pts, 2.9)
+    vol_small = int(np.prod(np.asarray(dims_small, dtype=object)))
+    vol_big = int(np.prod(np.asarray(dims_big, dtype=object)))
+    assert vol_small < 2**31 <= vol_big         # straddles the boundary
+
+    assert key_dtype_for(np.asarray(dims_small)) == np.int32
+    assert key_dtype_for(np.asarray(dims_big)) == np.int64
+    assert build_grid_host(pts, 3.2).key_dtype == np.int32
+    idx64 = build_grid_host(pts, 2.9)
+    assert idx64.key_dtype == np.int64
+    # and the int64 build still answers correctly near the boundary
+    eps = 2.9
+    d2 = ((pts[:50, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    ref = (d2 <= eps * eps).sum(1)
+    assert np.array_equal(np.asarray(prepare(idx64).counts(pts[:50])), ref)
+
+
+@pytest.mark.slow
+def test_no_x64_subprocess_int32_path_and_int64_guard():
+    """With REPRO_NO_X64 set, small grids work end-to-end on int32 keys
+    and a build that needs int64 keys raises instead of aliasing."""
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.core.grid import build_grid_host
+        from repro.core.query_join import prepare
+        rng = np.random.default_rng(0)
+        pts = rng.uniform(0, 30, size=(500, 2)).astype(np.float32)
+        eps = 2.0
+        idx = build_grid_host(pts, eps)
+        assert idx.key_dtype == np.int32, idx.key_dtype
+        q = pts[:40]
+        d2 = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+        ref = (d2 <= np.float32(eps) * np.float32(eps)).sum(1)
+        got = np.asarray(prepare(idx).counts(q))
+        assert np.array_equal(got, ref), (got, ref)
+        big = rng.uniform(0, 100, size=(64, 6))
+        big[0] = 0.0
+        big[1] = 100.0
+        try:
+            build_grid_host(big, 2.9)           # ~3.0e9 cells: needs int64
+        except RuntimeError as e:
+            assert "int64" in str(e) or "x64" in str(e), e
+            print("OK")
+        else:
+            raise SystemExit("int64-needing build did not raise")
+    """)
+    env = dict(os.environ, REPRO_NO_X64="1",
+               PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout

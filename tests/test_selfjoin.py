@@ -228,9 +228,11 @@ def test_per_point_counts_prebuilt_index_and_degenerates():
 
 
 def test_build_grid_requires_int64_keys():
-    """Regression (satellite): with jax_enable_x64 off, linearized cell
-    keys and PAD_KEY silently truncate to int32 (6-D key spaces alias);
-    the builders must refuse instead."""
+    """Regression (satellite): with jax_enable_x64 off, a grid whose key
+    space exceeds 2^31 cells would silently truncate keys to int32 (6-D
+    key spaces alias); the builders must refuse instead. Grids UNDER the
+    boundary now take the int32 fast path (key_dtype_for) and build fine
+    without x64 — see tests/test_grid_keys.py for that half."""
     import jax
     import jax.numpy as jnp
     import pytest
@@ -239,10 +241,14 @@ def test_build_grid_requires_int64_keys():
 
     rng = np.random.default_rng(7)
     pts = rng.uniform(0, 100, (64, 6))
+    pts[0] = 0.0
+    pts[1] = 100.0                  # pin the extent: eps 2.9 -> ~3.0e9 cells
     jax.config.update("jax_enable_x64", False)
     try:
         with pytest.raises(RuntimeError, match="int64"):
-            build_grid_host(pts, 5.0)
+            build_grid_host(pts, 2.9)
+        # small grids no longer need x64 at all: int32 fast path
+        assert build_grid_host(pts, 5.0).key_dtype == np.int32
         with pytest.raises(RuntimeError, match="jax_enable_x64"):
             gmin = jnp.asarray(pts.min(0) - 5.0, jnp.float32)
             dims = jnp.full((6,), 23, jnp.int32)
@@ -250,10 +256,10 @@ def test_build_grid_requires_int64_keys():
                                      gmin, dims)
     finally:
         jax.config.update("jax_enable_x64", True)
-    # restored: the guarded builders work again and keys really are int64
-    idx = build_grid_host(pts, 5.0)
+    # restored: the guarded builders work again and big grids are int64
+    idx = build_grid_host(pts, 2.9)
     assert np.asarray(idx.cell_keys).dtype == np.int64
-    g = grid_geometry(jnp.asarray(pts), 5.0)
+    g = grid_geometry(jnp.asarray(pts), 2.9)
     assert np.asarray(g[1]).dtype == np.int64
 
 

@@ -1,0 +1,322 @@
+"""Continuous-batching serving pipeline (DESIGN.md S8).
+
+Covers the BatchingJoinService tentpole: coalescing correctness under
+ARBITRARY partitions of a query set (the per-request slice must be
+bitwise identical to serving the chunk alone), the admission-queue knobs,
+split/merge of oversized requests, the mixed-size mixed-eps no-retrace
+contract, the sharded scatter-gather integration, the steady-state stats
+fix of _JoinServiceBase, and the load generator.
+"""
+import numpy as np
+import pytest
+
+from repro.core.grid import build_grid_host
+from repro.core.query_join import (PendingJoin, coalesce_requests, prepare,
+                                   slice_result)
+from repro.launch.serve import (BatchingJoinService, JoinService,
+                                ShardedJoinService)
+
+
+def brute_counts(queries, pts, eps):
+    d2 = ((queries[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    return (d2 <= eps * eps).sum(1).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(7)
+    pts = rng.uniform(0, 100, size=(2500, 3))
+    return pts, 3.0
+
+
+@pytest.fixture(scope="module")
+def prepared(dataset):
+    pts, eps = dataset
+    return prepare(build_grid_host(pts, eps))
+
+
+# ---------------------------------------------------------------------------
+# coalesce/slice primitives
+# ---------------------------------------------------------------------------
+
+def test_coalesce_requests_bounds():
+    a = np.zeros((3, 2))
+    b = np.ones((0, 2))
+    c = np.full((5, 2), 2.0)
+    cat, bounds = coalesce_requests([a, b, c])
+    assert cat.shape == (8, 2)
+    assert bounds.tolist() == [0, 3, 3, 8]
+
+
+def test_coalesce_requests_rejects_empty_list():
+    with pytest.raises(ValueError):
+        coalesce_requests([])
+
+
+def test_coalesce_requests_rejects_mixed_dims():
+    with pytest.raises(ValueError):
+        coalesce_requests([np.zeros((2, 2)), np.zeros((2, 3))])
+
+
+def test_slice_result_matches_solo(prepared, dataset):
+    pts, eps = dataset
+    rng = np.random.default_rng(0)
+    q = rng.uniform(0, 100, size=(90, 3))
+    res = prepared.join(q, return_pairs=True)
+    mid = slice_result(res, 30, 70)
+    solo = prepared.join(q[30:70], return_pairs=True)
+    assert np.array_equal(mid.counts, solo.counts)
+    assert np.array_equal(mid.pairs, solo.pairs)
+    empty = slice_result(res, 12, 12)
+    assert empty.counts.shape == (0,) and empty.pairs.shape == (0, 2)
+
+
+def test_join_async_matches_join(prepared):
+    rng = np.random.default_rng(1)
+    q = rng.uniform(0, 100, size=(150, 3))
+    pending = prepared.join_async(q, return_pairs=True)
+    assert isinstance(pending, PendingJoin)
+    res = pending.result()
+    ref = prepared.join(q, return_pairs=True)
+    assert np.array_equal(res.counts, ref.counts)
+    assert np.array_equal(res.pairs, ref.pairs)
+    assert pending.ready()                     # resolved => trivially ready
+    assert pending.result() is res             # idempotent
+
+
+# ---------------------------------------------------------------------------
+# BatchingJoinService: coalescing correctness (the satellite property test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_sizes", [
+    [40],                        # single request
+    [0, 40, 0],                  # empty requests interleaved
+    [17, 1, 63, 9],              # ragged partition
+    [200],                       # larger than max_batch: split into parts
+    [130, 0, 70, 200, 5],        # everything at once
+])
+def test_partition_property(dataset, prepared, chunk_sizes):
+    """ANY partition of a query set served through BatchingJoinService
+    yields per-request results identical to serving each chunk alone
+    through PreparedJoin.join -- including empty requests and requests
+    wider than max_batch."""
+    pts, eps = dataset
+    rng = np.random.default_rng(3)
+    chunks = [rng.uniform(0, 100, size=(n, 3)) for n in chunk_sizes]
+    solos = [prepared.join(c, return_pairs=True) if c.shape[0] else None
+             for c in chunks]
+
+    svc = BatchingJoinService(pts, eps, return_pairs=True,
+                              max_batch=128, max_wait_ms=0.5)
+    svc.warmup()
+    tickets = [svc.submit(c) for c in chunks]
+    svc.pump()
+    svc.drain()
+    for t, c, solo in zip(tickets, chunks, solos):
+        assert t.done()
+        got = t.result()
+        if c.shape[0] == 0:
+            assert got.counts.shape == (0,)
+            assert got.pairs.shape == (0, 2)
+            continue
+        assert np.array_equal(got.counts, solo.counts)
+        assert np.array_equal(got.pairs, solo.pairs)
+
+
+def test_oversized_request_splits_and_merges(dataset, prepared):
+    pts, eps = dataset
+    rng = np.random.default_rng(4)
+    q = rng.uniform(0, 100, size=(300, 3))
+    svc = BatchingJoinService(pts, eps, return_pairs=True, max_batch=128)
+    svc.warmup()
+    t = svc.submit(q)
+    assert t.n_parts == 3                       # 128 + 128 + 44
+    svc.drain()
+    got = t.result()
+    ref = prepared.join(q, return_pairs=True)
+    assert np.array_equal(got.counts, ref.counts)
+    assert np.array_equal(got.pairs, ref.pairs)
+
+
+def test_incomplete_ticket_raises(dataset):
+    pts, eps = dataset
+    svc = BatchingJoinService(pts, eps, max_batch=128,
+                              max_wait_ms=1e6)     # never due on its own
+    svc.warmup()
+    t = svc.submit(np.zeros((4, 3)))
+    with pytest.raises(RuntimeError, match="incomplete"):
+        t.result()
+    svc.drain()
+    assert t.result().counts.shape == (4,)
+
+
+def test_mixed_eps_never_coalesce_but_both_answer(dataset, prepared):
+    pts, eps = dataset
+    rng = np.random.default_rng(5)
+    qa = rng.uniform(0, 100, size=(30, 3))
+    qb = rng.uniform(0, 100, size=(30, 3))
+    svc = BatchingJoinService(pts, eps, max_batch=256)
+    svc.warmup()
+    ta = svc.submit(qa, eps=eps)
+    tb = svc.submit(qb, eps=0.5 * eps)          # different traced radius
+    svc.drain()
+    assert svc.n_launches == 2                  # eps mismatch: no coalesce
+    assert np.array_equal(ta.result().counts, prepared.counts(qa))
+    assert np.array_equal(tb.result().counts,
+                          prepared.counts(qb, eps=0.5 * eps))
+
+
+def test_no_retrace_and_coalescing_under_mixed_load(dataset):
+    """Steady-state mixed-size mixed-eps load through the batching service
+    must hit cached executables only, and must actually coalesce."""
+    pts, eps = dataset
+    rng = np.random.default_rng(6)
+    svc = BatchingJoinService(pts, eps, max_batch=256, max_wait_ms=0.2)
+    svc.warmup()                                # auto-marks steady
+    for _ in range(30):
+        n = int(rng.choice([1, 7, 32, 64, 300]))
+        e = float(rng.choice([eps, 0.7 * eps]))
+        svc.submit(rng.uniform(0, 100, size=(n, 3)), eps=e)
+        svc.pump()
+    svc.drain()
+    svc.assert_no_retrace()
+    assert svc.coalesce_factor > 1.0
+    stats = svc.n_coalesced / max(svc.n_launches, 1)
+    assert stats == pytest.approx(svc.coalesce_factor)
+
+
+def test_sharded_batching_matches_single(dataset, prepared):
+    pts, eps = dataset
+    rng = np.random.default_rng(8)
+    q = rng.uniform(0, 100, size=(120, 3))
+    svc = BatchingJoinService(pts, eps, n_slabs=3, return_pairs=True,
+                              max_batch=256)
+    svc.warmup()
+    t = svc.submit(q)
+    svc.drain()
+    got = t.result()
+    ref = prepared.join(q, return_pairs=True)
+    assert np.array_equal(got.counts, ref.counts)
+    assert np.array_equal(got.pairs, ref.pairs)
+    svc.assert_no_retrace()
+
+
+def test_sync_query_path(dataset, prepared):
+    pts, eps = dataset
+    rng = np.random.default_rng(9)
+    q = rng.uniform(0, 100, size=(50, 3))
+    svc = BatchingJoinService(pts, eps, max_batch=128)
+    svc.warmup()
+    res = svc.query(q)
+    assert np.array_equal(res.counts, prepared.counts(q))
+    assert len(svc.latencies_ms) == 1           # steady after warmup
+
+
+# ---------------------------------------------------------------------------
+# _JoinServiceBase steady-state stats fix (satellite)
+# ---------------------------------------------------------------------------
+
+def test_warmup_auto_marks_steady_with_warning(dataset):
+    pts, eps = dataset
+    svc = JoinService(pts, eps)
+    with pytest.warns(UserWarning, match="auto-marking steady"):
+        svc.warmup(32)
+    assert svc._steady
+
+
+def test_stats_exclude_warmup_window(dataset):
+    pts, eps = dataset
+    rng = np.random.default_rng(10)
+    svc = JoinService(pts, eps)
+    q = rng.uniform(0, 100, size=(32, 3))
+    svc.query(q)                                # pre-steady: warmup sample
+    assert len(svc.warmup_latencies_ms) == 1
+    assert len(svc.latencies_ms) == 0
+    with pytest.warns(UserWarning):
+        svc.warmup(32)
+    for _ in range(3):
+        svc.query(q)
+    assert len(svc.latencies_ms) == 3           # steady window only
+    p50, p99 = svc.percentiles()
+    lat = np.asarray(svc.latencies_ms)
+    assert p50 == pytest.approx(float(np.percentile(lat, 50)))
+    # requests_per_sec counts the steady window, not the tainted sample
+    assert svc.requests_per_sec() == pytest.approx(
+        3 / (lat.sum() / 1000), rel=1e-6)
+
+
+def test_stats_fallback_warns_when_never_steady(dataset):
+    pts, eps = dataset
+    rng = np.random.default_rng(11)
+    svc = JoinService(pts, eps)
+    svc.query(rng.uniform(0, 100, size=(32, 3)))
+    with pytest.warns(UserWarning, match="falling back to the warmup"):
+        p50, _ = svc.percentiles()
+    assert p50 > 0
+
+
+def test_explicit_mark_steady_suppresses_warning(dataset):
+    pts, eps = dataset
+    svc = JoinService(pts, eps)
+    import warnings
+
+    svc.prepared.warm(32)        # compile first so the mark is post-compile
+    svc.mark_steady()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        svc.warmup(32)           # already steady: no warning
+    assert svc._steady
+
+
+# ---------------------------------------------------------------------------
+# load generator
+# ---------------------------------------------------------------------------
+
+def test_poisson_schedule_shape_and_rate():
+    from repro.launch.loadgen import poisson_schedule
+
+    s = poisson_schedule(2000, 100.0, seed=0)
+    assert s.shape == (2000,)
+    assert np.all(np.diff(s) > 0)
+    # mean inter-arrival ~ 1/rate
+    assert np.mean(np.diff(s)) == pytest.approx(0.01, rel=0.15)
+
+
+def test_loadgen_open_and_closed_loops(dataset):
+    from repro.launch.loadgen import (RequestMix, make_request_stream,
+                                      run_closed_loop, run_open_loop)
+
+    pts, eps = dataset
+    mix = RequestMix(sizes=(8, 16), eps_values=(eps, 0.5 * eps))
+    stream = make_request_stream(12, mix, 3, seed=1)
+    assert all(q.shape[1] == 3 for q, _ in stream)
+
+    svc = BatchingJoinService(pts, eps, max_batch=128, max_wait_ms=0.5)
+    svc.warmup()
+    rep = run_open_loop(svc, stream, 300.0, seed=2)
+    assert rep.n_requests == 12
+    assert rep.p99_ms >= rep.p50_ms > 0
+    assert rep.coalesce_factor >= 1.0
+    d = rep.to_dict()
+    assert {"mode", "offered_rps", "achieved_rps", "p50_ms", "p99_ms",
+            "coalesce_factor"} <= set(d)
+
+    base = JoinService(pts, eps)
+    base.warmup(16)
+    rep2 = run_closed_loop(base, stream)
+    assert rep2.mode == "closed" and rep2.offered_rps is None
+    assert rep2.n_requests == 12
+    rep3 = run_open_loop(base, stream, 300.0, seed=2)
+    assert rep3.coalesce_factor is None
+
+
+def test_sharded_service_eps_threading(dataset, prepared):
+    """ShardedJoinService must honour per-request eps (the loadgen's
+    mixed-eps stream goes through query(eps=...))."""
+    pts, eps = dataset
+    rng = np.random.default_rng(12)
+    q = rng.uniform(0, 100, size=(40, 3))
+    svc = ShardedJoinService(pts, eps, 3)
+    svc.warmup(40)
+    got = svc.query(q, eps=0.6 * eps)
+    assert np.array_equal(got.counts, prepared.counts(q, eps=0.6 * eps))
