@@ -1,12 +1,19 @@
 # Developer entry points. `make verify` is the pre-merge gate: tier-1
 # tests plus the serving-path no-retrace smoke (scripts/ci.sh).
-.PHONY: verify test serve-smoke bench bench-serve bench-smoke
+.PHONY: verify test lint serve-smoke bench bench-serve bench-smoke
 
 verify:
 	bash scripts/ci.sh
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# static gate: contract prover + retrace/dtype linter vs the committed
+# baseline (scripts/analysis_baseline.json), then the mutation check
+# that proves the gate still has teeth.
+lint:
+	PYTHONPATH=src python -m repro.analysis
+	PYTHONPATH=src python scripts/mutation_check.py
 
 serve-smoke:
 	PYTHONPATH=src python -m repro.launch.serve --arch selfjoin --requests 4

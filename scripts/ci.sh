@@ -10,6 +10,12 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "[ci] static analysis gate (contract prover + retrace/dtype linter vs baseline)"
+timeout 300 python -m repro.analysis
+
+echo "[ci] analysis mutation check (seeded bugs must each produce a new finding)"
+timeout 300 python scripts/mutation_check.py
+
 echo "[ci] tier-1: pytest"
 python -m pytest -x -q
 
@@ -28,6 +34,9 @@ timeout 300 python benchmarks/bench_selfjoin.py --smoke
 
 echo "[ci] bench smoke, per-cell sweep oracle (--no-merge; parity asserted again)"
 timeout 300 python benchmarks/bench_selfjoin.py --smoke --no-merge
+
+echo "[ci] bench smoke under REPRO_SANITIZE=1 (sanitized kernel mode: invariant checks must stay clean)"
+REPRO_SANITIZE=1 timeout 300 python benchmarks/bench_selfjoin.py --smoke --no-assert-floor
 
 echo "[ci] distributed bench smoke (2 slabs: pair-set parity vs single-device fused join)"
 XLA_FLAGS="--xla_force_host_platform_device_count=2" \

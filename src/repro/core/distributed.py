@@ -380,7 +380,9 @@ def distributed_self_join_count(
     gids_dev = jax.device_put(gids_flat, in_sh[1])
     total, halo_of, cell_of = step(coords_dev, gids_dev, jnp.asarray(eps, pts.dtype))
     if int(halo_of):
-        raise RuntimeError("halo capacity overflow")
+        raise _halo_overflow_error(
+            cfg.halo_capacity,
+            halo_capacity_plan(coords, gids, mins, maxs, eps, k_hops))
     if int(cell_of):
         raise RuntimeError("max_per_cell overflow")
     return int(total)
@@ -443,16 +445,35 @@ def make_halo_step(mesh: Mesh, cfg: DistJoinConfig):
     return step, in_shardings
 
 
-def exact_halo_capacity(coords: np.ndarray, gids: np.ndarray,
-                        mins: np.ndarray, maxs: np.ndarray, eps: float,
-                        k_hops: int) -> int:
-    """Largest parcel any (slab, hop, direction) ship needs -- exact, from
-    the partition (slabs hold x0-sorted points, so each parcel count is one
-    ``searchsorted``). This is the per-slab capacity plan of the fused path:
-    the default ``halo_capacity`` that makes overflow impossible, and the
-    bound user-supplied capacities are checked against on-device."""
+@dataclasses.dataclass(frozen=True)
+class HaloParcel:
+    """One (shipping slab, hop, direction) halo parcel and its exact size."""
+    slab: int          # slab shipping the parcel
+    hop: int           # 1..k_hops
+    direction: int     # -1 toward lower slabs, +1 toward higher
+    need: int          # rows the parcel must carry
+
+    @property
+    def dest(self) -> int:
+        return self.slab + self.direction * self.hop
+
+    def describe(self) -> str:
+        return (f"slab {self.slab} -> slab {self.dest} (hop {self.hop}, "
+                f"direction {self.direction:+d}) ships {self.need} rows")
+
+
+def halo_capacity_plan(coords: np.ndarray, gids: np.ndarray,
+                       mins: np.ndarray, maxs: np.ndarray, eps: float,
+                       k_hops: int) -> list:
+    """Every halo parcel the exchange ships, with exact sizes.
+
+    Slabs hold x0-sorted points, so each parcel count is one
+    ``searchsorted`` against the receiving slab's boundary. This is the
+    full per-parcel capacity plan behind ``exact_halo_capacity`` -- the
+    overflow raises report its worst parcel so an under-capacity failure
+    names the slab/hop/direction to act on."""
     n_slabs = coords.shape[0]
-    cap = 1
+    plan = []
     for j in range(n_slabs):
         x0 = coords[j, gids[j] >= 0, 0]          # sorted ascending
         if not x0.size:
@@ -460,13 +481,44 @@ def exact_halo_capacity(coords: np.ndarray, gids: np.ndarray,
         for h in range(1, k_hops + 1):
             if j - h >= 0 and np.isfinite(maxs[j - h]):
                 # parcel j -> j-h: points with x0 <= maxs[j-h] + eps
-                cap = max(cap, int(np.searchsorted(
-                    x0, maxs[j - h] + eps, side="right")))
+                need = int(np.searchsorted(x0, maxs[j - h] + eps,
+                                           side="right"))
+                plan.append(HaloParcel(j, h, -1, need))
             if j + h < n_slabs and np.isfinite(mins[j + h]):
                 # parcel j -> j+h: points with x0 >= mins[j+h] - eps
-                cap = max(cap, int(x0.size - np.searchsorted(
-                    x0, mins[j + h] - eps, side="left")))
-    return cap
+                need = int(x0.size - np.searchsorted(
+                    x0, mins[j + h] - eps, side="left"))
+                plan.append(HaloParcel(j, h, +1, need))
+    return plan
+
+
+def worst_halo_parcel(plan) -> Optional[HaloParcel]:
+    return max(plan, key=lambda p: p.need) if plan else None
+
+
+def exact_halo_capacity(coords: np.ndarray, gids: np.ndarray,
+                        mins: np.ndarray, maxs: np.ndarray, eps: float,
+                        k_hops: int) -> int:
+    """Largest parcel any (slab, hop, direction) ship needs -- the max of
+    ``halo_capacity_plan``. This is the per-slab capacity plan of the fused
+    path: the default ``halo_capacity`` that makes overflow impossible, and
+    the bound user-supplied capacities are checked against on-device."""
+    worst = worst_halo_parcel(
+        halo_capacity_plan(coords, gids, mins, maxs, eps, k_hops))
+    return worst.need if worst is not None else 1
+
+
+def _halo_overflow_error(capacity: int, plan) -> RuntimeError:
+    """Actionable under-capacity report: worst parcel + minimal fix."""
+    worst = worst_halo_parcel(plan)
+    if worst is None:
+        return RuntimeError(f"halo capacity overflow: capacity {capacity}")
+    over = [p for p in plan if p.need > capacity]
+    return RuntimeError(
+        f"halo capacity overflow: capacity {capacity} < required "
+        f"{worst.need}; {len(over)} parcel(s) exceed it, worst: "
+        f"{worst.describe()}. Pass halo_capacity >= {worst.need}, or "
+        f"omit it for the exact default.")
 
 
 def distributed_self_join(
@@ -565,10 +617,9 @@ def distributed_self_join(
     cand_c, cand_g, cand_v, cand_o, halo_of = step(
         coords_dev, gids_dev, jnp.asarray(eps, pts.dtype))
     if int(halo_of):
-        raise RuntimeError(
-            f"halo capacity overflow: capacity {cfg.halo_capacity} < "
-            f"required {h_need} (pass halo_capacity >= the requirement, "
-            f"or omit it for the exact default)")
+        raise _halo_overflow_error(
+            cfg.halo_capacity,
+            halo_capacity_plan(coords, gids, mins, maxs, eps, k_hops))
     pc = cfg.pts_per_device + 2 * cfg.halo_capacity * k_hops
     cand_c = np.asarray(cand_c).reshape(n_slabs, pc, n)
     cand_g = np.asarray(cand_g).reshape(n_slabs, pc)

@@ -65,6 +65,22 @@ def pad_key_for(dtype) -> int:
     return int(np.iinfo(np.dtype(dtype)).max)
 
 
+def sentinel_margin(dims, key_dtype=None) -> int:
+    """``pad_key_for`` sentinel minus the largest possible real key, in
+    exact python-int arithmetic (no numpy wrap-around on 6-D volumes).
+
+    Positive margin proves the sentinel can never alias a real cell key;
+    0 means the out-of-grid sentinel cell of a padded build (key ==
+    prod(dims)) coincides with the padding sentinel. The contract prover
+    (analysis/contracts.py C4) checks this for every index geometry."""
+    if key_dtype is None:
+        key_dtype = key_dtype_for(dims)
+    volume = 1
+    for d in np.asarray(dims).ravel():
+        volume *= int(d)
+    return pad_key_for(key_dtype) - (volume - 1)
+
+
 def _pad_probe(arr: jax.Array, mask: jax.Array, key_dtype) -> jax.Array:
     """``arr`` cast to the index's key dtype with ``~mask`` lanes set to
     the dtype's miss sentinel (the dtype-aware form of

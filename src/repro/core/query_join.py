@@ -330,6 +330,8 @@ class PendingJoin:
         """Block on the device work and assemble the answer (idempotent)."""
         if self._result is not None:
             return self._result
+        from repro.analysis import sanitize
+        sanitize.raise_pending()   # REPRO_SANITIZE: we block on devices here
         pj, n_queries = self._pj, self._n_queries
         counts_np = np.zeros(n_queries, np.int32)
         chunks = []

@@ -675,6 +675,8 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
         prev = (ws, hits, counts, base, q_pos, cap, tile)
     if prev is not None:
         chunks.append(finish(prev))
+    from repro.analysis import sanitize
+    sanitize.raise_pending()   # REPRO_SANITIZE: launches already drained
     out = (np.concatenate(chunks, axis=0) if chunks
            else np.empty((0, 2), np.int32))
     if sort_result:
@@ -743,6 +745,8 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
         total += mult * int(counts.sum(dtype=jnp.int64))
         cells += int(wcells.sum(dtype=jnp.int64))
         cands += int(wc.sum(dtype=jnp.int64))
+    from repro.analysis import sanitize
+    sanitize.raise_pending()   # REPRO_SANITIZE: counts already drained
     return JoinStats(
         total_pairs=total,
         cells_visited=cells,
@@ -867,7 +871,7 @@ def _sparse_lookup(index: GridIndex):
     preserving sort order and never matching a probe; int32 halves the
     binary search's bandwidth.
     """
-    from repro.core.grid import index_cached
+    from repro.core.grid import index_cached, pad_key_for
 
     def build():
         volume = float(np.prod(np.asarray(index.dims, dtype=np.float64)))
@@ -884,8 +888,12 @@ def _sparse_lookup(index: GridIndex):
             table[keys[ok]] = np.arange(ncells, dtype=np.int32)[ok]
             return ("table", jnp.asarray(table))
         if volume < float(1 << 30):
-            k = np.asarray(index.cell_keys).copy()
-            k[k == np.iinfo(np.int64).max] = np.iinfo(np.int32).max
+            k = np.asarray(index.cell_keys)
+            if k.dtype == np.int32:
+                # int32 key fast path: B already carries the right sentinel
+                return ("keys", index.cell_keys)
+            k = k.copy()
+            k[k == pad_key_for(k.dtype)] = pad_key_for(np.dtype(np.int32))
             return ("keys", jnp.asarray(k.astype(np.int32)))
         return ("keys", index.cell_keys)
 
@@ -1608,6 +1616,58 @@ def range_query(
     return res.counts
 
 
+# Module-level jits for per_point_neighbor_counts: these used to be defined
+# inside the function body (the PR-2 per-call @jax.jit retrace pattern --
+# every call re-traced from an empty cache; analysis/lint.py's per-call-jit
+# rule now bans the shape). ``cap`` is the only closed-over value and rides
+# as a static argname, so the executable cache is shared across calls.
+@partial(jax.jit, static_argnames=("cap",))
+def _neighbor_counts_merged(index, dtab, *, cap: int):
+    from repro.core.grid import range_window_descriptors_at
+
+    npts = index.num_points
+    q_pos = jnp.arange(npts, dtype=jnp.int32)
+    ws, wc, _ = range_window_descriptors_at(
+        index, dtab[0], dtab[1], dtab[2], q_pos)
+    q = index.points_sorted
+    slots = jnp.arange(cap, dtype=jnp.int32)
+
+    def body(deg, xs):
+        ws_o, wc_o = xs
+        cand_pos = jnp.minimum(
+            ws_o[:, None] + slots[None, :], npts - 1)
+        valid = slots[None, :] < wc_o[:, None]
+        cand = index.points_sorted[cand_pos]
+        hits = _distance_hits_jnp(q, cand, valid, index.eps)
+        hits = hits & (cand_pos != q_pos[:, None])
+        deg = deg.at[index.order].add(
+            hits.sum(axis=1).astype(jnp.int32))
+        return deg, None
+
+    deg0 = jnp.zeros((npts,), jnp.int32)
+    deg, _ = jax.lax.scan(body, deg0, (ws, wc))
+    return deg
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def _neighbor_counts_dense(index, deltas, is_zero, *, cap: int):
+    def body(deg, xs):
+        delta, _ = xs
+        nbr_cells = _neighbor_ranks_for_delta(index, delta)
+        q, cand, cand_pos, valid, q_pos, _ = _gather_batch(
+            index, nbr_cells, jnp.asarray(0, jnp.int32),
+            index.num_points, cap,
+        )
+        hits = _distance_hits_jnp(q, cand, valid, index.eps)
+        hits = hits & (cand_pos != q_pos[:, None])
+        deg = deg.at[index.order[q_pos]].add(hits.sum(axis=1).astype(jnp.int32))
+        return deg, None
+
+    deg0 = jnp.zeros((index.num_points,), jnp.int32)
+    deg, _ = jax.lax.scan(body, deg0, (deltas, is_zero))
+    return deg
+
+
 def per_point_neighbor_counts(
     points,
     eps,
@@ -1626,56 +1686,7 @@ def per_point_neighbor_counts(
         from repro.core.grid import global_window_cap
         dtab, _ = _merged_offset_tables(index, unicomp=False)
         cap = global_window_cap(index, merged=True)
-    else:
-        deltas, is_zero = _offset_tables(index, unicomp=False)
-        cap = _round_up(max(int(index.max_per_cell), 1), 8)
-
-    if merged:
-        @jax.jit
-        def run_merged(index, dtab):
-            from repro.core.grid import range_window_descriptors_at
-
-            npts = index.num_points
-            q_pos = jnp.arange(npts, dtype=jnp.int32)
-            ws, wc, _ = range_window_descriptors_at(
-                index, dtab[0], dtab[1], dtab[2], q_pos)
-            q = index.points_sorted
-            slots = jnp.arange(cap, dtype=jnp.int32)
-
-            def body(deg, xs):
-                ws_o, wc_o = xs
-                cand_pos = jnp.minimum(
-                    ws_o[:, None] + slots[None, :], npts - 1)
-                valid = slots[None, :] < wc_o[:, None]
-                cand = index.points_sorted[cand_pos]
-                hits = _distance_hits_jnp(q, cand, valid, index.eps)
-                hits = hits & (cand_pos != q_pos[:, None])
-                deg = deg.at[index.order].add(
-                    hits.sum(axis=1).astype(jnp.int32))
-                return deg, None
-
-            deg0 = jnp.zeros((npts,), jnp.int32)
-            deg, _ = jax.lax.scan(body, deg0, (ws, wc))
-            return deg
-
-        return np.asarray(run_merged(index, dtab))
-
-    @jax.jit
-    def run(index):
-        def body(deg, xs):
-            delta, _ = xs
-            nbr_cells = _neighbor_ranks_for_delta(index, delta)
-            q, cand, cand_pos, valid, q_pos, _ = _gather_batch(
-                index, nbr_cells, jnp.asarray(0, jnp.int32),
-                index.num_points, cap,
-            )
-            hits = _distance_hits_jnp(q, cand, valid, index.eps)
-            hits = hits & (cand_pos != q_pos[:, None])
-            deg = deg.at[index.order[q_pos]].add(hits.sum(axis=1).astype(jnp.int32))
-            return deg, None
-
-        deg0 = jnp.zeros((index.num_points,), jnp.int32)
-        deg, _ = jax.lax.scan(body, deg0, (deltas, is_zero))
-        return deg
-
-    return np.asarray(run(index))
+        return np.asarray(_neighbor_counts_merged(index, dtab, cap=cap))
+    deltas, is_zero = _offset_tables(index, unicomp=False)
+    cap = _round_up(max(int(index.max_per_cell), 1), 8)
+    return np.asarray(_neighbor_counts_dense(index, deltas, is_zero, cap=cap))

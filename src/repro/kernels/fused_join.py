@@ -440,6 +440,53 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     raise ValueError(f"unknown fused_join method {method!r}")
 
 
+@functools.partial(jax.jit, static_argnames=("c", "tq", "check_hits"))
+def sanitize_errcodes(points_pad, q_batch, win_start, win_count, counts,
+                      base, hits, *, c, tq, check_hits=False):
+    """Device-side invariant reduction for one fused launch -> int32 bitmask.
+
+    The sanitized-mode checker (``REPRO_SANITIZE=1``, analysis/sanitize.py):
+    recomputes the launch's safety conditions with plain jnp ops over the
+    SAME descriptors and outputs the kernel consumed/produced, so the kernel
+    and its checker cannot share a miscompile. Stays async -- the caller
+    queues the scalar and the driver forces it at its existing sync points.
+
+    Bits (constants in analysis/sanitize.py):
+      oob-gather     a live window's [start, start + c) gather would leave
+                     the padded points buffer (corrupted descriptor).
+      cap-overflow   win_count > c: the granted capacity silently truncates
+                     the window (undersized ``cell_window_caps``).
+      scan-mismatch  slot_base is not the per-tile exclusive scan of counts
+                     (or, with ``check_hits``, counts disagree with the hits
+                     mask) -- the emit path's slot writes would collide.
+      nonfinite      NaN/Inf in the points or query coordinates.
+      count-range    negative window counts, or per-query totals outside
+                     [0, n_off * c].
+    """
+    from repro.analysis import sanitize as _san
+
+    np_total = points_pad.shape[0]
+    n_off, _ = win_start.shape
+    live = win_count > 0
+    oob = live & ((win_start < 0) | (win_start + c > np_total))
+    code = jnp.where(jnp.any(oob), _san.E_OOB_GATHER, 0)
+    code = code | jnp.where(jnp.any(win_count > c), _san.E_CAP_OVERFLOW, 0)
+    bad_range = ((win_count < 0).any() | (counts < 0).any()
+                 | (counts > n_off * c).any())
+    code = code | jnp.where(bad_range, _san.E_COUNT_RANGE, 0)
+    ctile = counts.reshape(-1, tq)
+    scan_bad = jnp.any(
+        ((jnp.cumsum(ctile, axis=1) - ctile).reshape(-1)) != base)
+    if check_hits:
+        scan_bad = scan_bad | jnp.any(
+            hits.astype(jnp.int32).sum(axis=(0, 2)) != counts)
+    code = code | jnp.where(scan_bad, _san.E_SCAN_MISMATCH, 0)
+    finite = (jnp.all(jnp.isfinite(points_pad))
+              & jnp.all(jnp.isfinite(q_batch)))
+    code = code | jnp.where(~finite, _san.E_NONFINITE, 0)
+    return code.astype(jnp.int32)
+
+
 def fused_window_hits(points_sorted, q, cand_pos, valid, eps):
     """Positional drop-in for selfjoin._distance_hits_jnp without the gather.
 

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitize as _sanitize
 from repro.kernels import cell_join as _cell_join
 from repro.kernels import distance_tile as _distance_tile
 from repro.kernels import fused_join as _fused_join
@@ -69,12 +70,23 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     DESIGN.md S3; ids < 2^24, exact in f32).
     """
     dt = _kernel_dtype(points_pad.dtype)
-    return _fused_join.fused_join_hits(
-        points_pad.astype(dt), q_batch.astype(dt), win_start, win_count,
+    pts, qb = points_pad.astype(dt), q_batch.astype(dt)
+    out = _fused_join.fused_join_hits(
+        pts, qb, win_start, win_count,
         is_zero, q_pos, eps, c=c, n_real=n_real, unicomp=unicomp,
         external=external, merged=merged, gid_pairs=gid_pairs, tq=tq,
         keep_hits=keep_hits, method=method, interpret=_INTERPRET,
     )
+    if _sanitize.enabled():
+        hits, counts, base = out
+        code = _fused_join.sanitize_errcodes(
+            pts, qb, jnp.asarray(win_start, jnp.int32),
+            jnp.asarray(win_count, jnp.int32), counts, base, hits,
+            c=c, tq=tq, check_hits=keep_hits)
+        _sanitize.record(
+            f"fused_join[c={c},tq={tq},merged={merged},ext={external}]",
+            code)
+    return out
 
 
 def fused_window_hits(points_sorted, q, cand_pos, valid, eps):

@@ -36,6 +36,29 @@ HBM_BW = 819e9             # bytes/s / chip
 ICI_BW = 50e9              # bytes/s / link
 DCN_BW = 25e9              # bytes/s cross-pod (assumed)
 POD_SIZE = 256
+VMEM_BYTES = 128 * 2 ** 20  # v5e VMEM per core; the fused kernel's budget
+
+
+def fused_join_vmem_bytes(*, c: int, tq: int, np_pad: int = 8,
+                          dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one fused-join grid step (bytes).
+
+    Mirrors the block/scratch shapes of ``kernels.fused_join
+    ._fused_join_hits_pallas``: the pipelined blocks -- query tile
+    (tq, np_pad), hits (1, tq, c) int8, counts + slot_base (tq, 1) int32,
+    the eps scalar -- are counted TWICE (Pallas double-buffers revolving
+    in/out blocks across grid steps), plus the explicitly double-buffered
+    (2, c, np_pad) window scratch. Scalar-prefetch descriptors live in
+    SMEM and are excluded. The contract prover (analysis/contracts.py C6)
+    checks every (class, tile) the occupancy plan can launch against
+    ``VMEM_BYTES``.
+    """
+    blocks = (tq * np_pad * dtype_bytes   # query tile
+              + tq * c                    # int8 hits block
+              + 2 * tq * 4                # counts + slot_base
+              + dtype_bytes)              # eps2
+    scratch = 2 * c * np_pad * dtype_bytes
+    return 2 * blocks + scratch
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
