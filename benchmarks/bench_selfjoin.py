@@ -39,6 +39,14 @@ with coalescing active and no retrace. Records the frontier and an SLO
 gate workload with fewer requests and fails CI if p99 exceeds the
 recorded SLO or the coalesce factor is 1.0.
 
+--mode index measures the device-resident index lifecycle (DESIGN.md
+S10): host-vs-device build and host-vs-device merged-planning latency
+(compile excluded), cold JoinService construction, and a live
+``reindex`` swap with its build/plan/warm/swap breakdown -- AFTER
+asserting the device build is bit-identical to ``build_grid_host``
+field-for-field and pair-for-pair on every workload. Records the
+"index" section; ``--mode index --smoke`` is the CI parity smoke.
+
 --smoke shrinks the impl sweep to one tiny workload (seconds), writes to a
 temp file by default, skips the floor assert (noise at this scale), and
 schema-validates the payload -- wired into scripts/ci.sh so the harness
@@ -134,6 +142,8 @@ def validate_schema(payload: dict) -> None:
             assert "n_offsets_swept" in e["impls"]["fused"], e["workload"]
     if "load" in payload:
         validate_load_schema(payload["load"])
+    if "index" in payload:
+        validate_index_schema(payload["index"])
 
 
 def validate_load_schema(load: dict) -> None:
@@ -490,11 +500,130 @@ def bench_distributed(args):
     }
 
 
+_INDEX_FIELDS = ("grid_min", "eps", "dims", "order", "points_sorted",
+                 "cell_keys", "cell_start", "cell_count", "point_cell_rank",
+                 "num_cells", "max_per_cell")
+
+
+def assert_index_parity(host_index, device_index, name: str) -> None:
+    """Field-for-field bit-parity of two GridIndex builds (values AND
+    dtypes) -- the --mode index acceptance gate."""
+    for f in _INDEX_FIELDS:
+        a = np.asarray(getattr(host_index, f))
+        b = np.asarray(getattr(device_index, f))
+        assert a.dtype == b.dtype, (
+            f"index dtype mismatch on {name}.{f}: {a.dtype} vs {b.dtype}")
+        assert np.array_equal(a, b), (
+            f"index bit-parity failure on {name}.{f}")
+
+
+def bench_index(args):
+    """Device-resident index build + planning (DESIGN.md S10).
+
+    Per workload: host (numpy) vs device (jitted) build time, host vs
+    device merged-capacity planning time, cold prepare time, and the
+    JoinService.reindex build/plan/warm/swap breakdown -- after asserting
+    the device index is BIT-IDENTICAL to ``build_grid_host`` field-for-
+    field and that downstream pairs match exactly (the acceptance gate).
+    Times exclude compile (best_of warms first); the jitted builder is
+    shared with the distributed slab join, so these executables are the
+    ones a real service re-uses.
+    """
+    import jax
+
+    from repro.core.grid import (build_grid, cell_window_caps,
+                                 cell_window_caps_host)
+    from repro.core.selfjoin import self_join
+    from repro.launch.serve import JoinService
+
+    rng = np.random.default_rng(args.seed)
+    results = []
+    for name, pts, eps in workloads(args):
+        h_index = build_grid_host(pts, eps)
+        d_index = build_grid(pts, eps)
+        assert_index_parity(h_index, d_index, name)
+        ref = self_join(pts, eps, index=h_index, sort_result=True)
+        got = self_join(pts, eps, index=d_index, sort_result=True)
+        assert np.array_equal(np.asarray(ref), np.asarray(got)), (
+            f"pair-set parity failure on device-built index for {name}")
+        print(f"[bench-index] {name:14s} parity OK: {len(_INDEX_FIELDS)} "
+              f"fields bit-identical, {ref.shape[0]} pairs identical",
+              flush=True)
+
+        t_host = best_of(lambda: build_grid_host(pts, eps), args.trials)
+        t_dev = best_of(
+            lambda: jax.block_until_ready(build_grid(pts, eps)), args.trials)
+        tp_host = best_of(
+            lambda: cell_window_caps_host(d_index, merged=True), args.trials)
+        tp_dev = best_of(
+            lambda: cell_window_caps(d_index, merged=True), args.trials)
+        # cold prepare on a FRESH device build: what a re-index pays
+        # (per-index plan caches cannot help a new index object)
+        t0 = time.perf_counter()
+        svc = JoinService(pts, eps)
+        prepare_cold_s = time.perf_counter() - t0
+        q = pts[:min(256, pts.shape[0])]
+        svc.warmup(q.shape[0])
+        svc.reindex(rng.permutation(pts))
+        svc.query(q)   # same bucket as warmed: swap must not retrace
+        svc.assert_no_retrace()   # warmed executables survived the swap
+
+        entry = {
+            "workload": name,
+            "n_points": int(pts.shape[0]),
+            "n_dims": int(pts.shape[1]),
+            "eps": float(eps),
+            "key_dtype": str(np.asarray(d_index.cell_keys).dtype),
+            "num_cells": int(d_index.num_cells),
+            "build_host_s": t_host,
+            "build_device_s": t_dev,
+            "build_device_over_host": t_dev / t_host,
+            "plan_host_s": tp_host,
+            "plan_device_s": tp_dev,
+            "plan_device_over_host": tp_dev / tp_host,
+            "prepare_cold_s": prepare_cold_s,
+            "reindex": dict(svc.reindex_timings),
+            "snapshot_swaps": int(svc.swaps),
+            "bit_parity": True,
+            "pair_parity": True,
+            "total_pairs": int(ref.shape[0]),
+        }
+        results.append(entry)
+        rt = entry["reindex"]
+        print(f"[bench-index] {name:14s} build host {t_host*1e3:8.1f} ms  "
+              f"device {t_dev*1e3:8.1f} ms   plan host {tp_host*1e3:7.1f} ms"
+              f"  device {tp_dev*1e3:7.1f} ms", flush=True)
+        print(f"[bench-index] {name:14s} reindex build {rt['build_s']*1e3:.1f}"
+              f" ms + plan {rt['plan_s']*1e3:.1f} ms + warm "
+              f"{rt['warm_s']*1e3:.1f} ms + swap {rt['swap_s']*1e6:.0f} us "
+              f"(no retrace across swap)", flush=True)
+    return {
+        "note": ("device build/plan on the shared jitted executables "
+                 "(grid.build_grid_with_geometry_jit + batched searchsorted "
+                 "planners); compile excluded (warmed), parity asserted "
+                 "field-for-field and on downstream pairs before timing"),
+        "results": results,
+    }
+
+
+def validate_index_schema(section: dict) -> None:
+    """Contract of the "index" section (EXPERIMENTS.md SIndexBuild)."""
+    assert "results" in section and section["results"], "empty index section"
+    for e in section["results"]:
+        for key in ("workload", "n_points", "n_dims", "eps", "key_dtype",
+                    "build_host_s", "build_device_s", "plan_host_s",
+                    "plan_device_s", "prepare_cold_s", "reindex",
+                    "bit_parity", "pair_parity"):
+            assert key in e, (e.get("workload"), key)
+        assert e["bit_parity"] is True and e["pair_parity"] is True
+        assert {"build_s", "plan_s", "warm_s", "swap_s"} <= set(e["reindex"])
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None)
     ap.add_argument("--mode", default="impl",
-                    choices=("impl", "serve", "distributed", "load"))
+                    choices=("impl", "serve", "distributed", "load", "index"))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny impl sweep + schema validation (CI gate); "
                          "writes to a temp file unless --out is given")
@@ -573,7 +702,7 @@ def main(argv=None):
 
     import jax
 
-    if args.mode in ("serve", "distributed", "load"):
+    if args.mode in ("serve", "distributed", "load", "index"):
         payload = existing or {"bench": "selfjoin-distance-impl"}
         payload["backend"] = jax.default_backend()
         payload["jax"] = jax.__version__
@@ -582,6 +711,9 @@ def main(argv=None):
         elif args.mode == "load":
             payload["load"] = bench_load(args)
             validate_load_schema(payload["load"])
+        elif args.mode == "index":
+            payload["index"] = bench_index(args)
+            validate_index_schema(payload["index"])
         else:
             payload["distributed"] = bench_distributed(args)
         with open(out, "w") as f:
@@ -690,7 +822,7 @@ def main(argv=None):
         },
         "results": results,
     }
-    for section in ("serve", "distributed", "load"):  # modes preserve others
+    for section in ("serve", "distributed", "load", "index"):  # modes preserve others
         if section in existing:
             payload[section] = existing[section]
     validate_schema(payload)

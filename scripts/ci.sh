@@ -42,4 +42,10 @@ echo "[ci] distributed bench smoke (2 slabs: pair-set parity vs single-device fu
 XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   timeout 300 python benchmarks/bench_selfjoin.py --mode distributed --smoke
 
+echo "[ci] index bench smoke (device build bit-identical to host, downstream pairs identical)"
+timeout 300 python benchmarks/bench_selfjoin.py --mode index --smoke
+
+echo "[ci] reindex smoke (mid-load snapshot swap must not trip the no-retrace watchdog)"
+timeout 180 python -m repro.launch.serve --arch selfjoin --requests 8 --reindex
+
 echo "[ci] OK"

@@ -3,12 +3,14 @@
 
 Proves the gate has teeth, per ISSUE 7's acceptance criteria: seeding
 (a) an undersized window cap, (b) an int64 key literal on the int32 key
-path, and (c) a per-call ``jax.jit`` closure must each produce a NEW
-failing finding, while the unmutated tree produces zero new findings
-against the committed baseline. Mutations are in-memory -- a tampered
-``BucketPlan`` injected through the prover's ``plan=`` seam and source
-text mutated before ``lint_source`` -- so the working tree is never
-touched.
+path, (c) a per-call ``jax.jit`` closure, and (d) an int32-keyed index
+whose volume leaves no device-probe headroom below the padding sentinel
+must each produce a NEW failing finding, while the unmutated tree
+produces zero new findings against the committed baseline. Mutations are
+in-memory -- a tampered ``BucketPlan`` injected through the prover's
+``plan=`` seam, source text mutated before ``lint_source``, a forged
+``GridIndex`` via ``dataclasses.replace`` -- so the working tree is
+never touched.
 """
 from __future__ import annotations
 
@@ -90,10 +92,30 @@ def main() -> int:
           any(f.key == key for f in F.new_findings(found, baseline)),
           "no new per-call-jit finding")
 
+    # -- (d) int32 keys with no probe headroom below the pad sentinel -----
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    # volume 2 * (2^30 - 1) = 2^31 - 2: key_dtype_for still says int32
+    # (C4 stays clean) but the sentinel margin collapses to 2 -- the
+    # device planners' key+2 probe would reach the padding sentinel
+    forged = dataclasses.replace(
+        index,
+        dims=jnp.asarray([2, 2**30 - 1], jnp.int64),
+        cell_keys=index.cell_keys.astype(jnp.int32))
+    found = contracts.check_device_sentinel(forged, tag="mutated")
+    check("(d) collapsed device-probe sentinel margin is caught",
+          any(f.rule == "device-sentinel" for f in found),
+          "no device-sentinel finding")
+    clean = contracts.check_device_sentinel(index, tag="clean")
+    check("(d) healthy index passes the device-sentinel contract",
+          not clean, "; ".join(f.key for f in clean))
+
     if _FAILED:
-        print(f"mutation check: FAIL ({len(_FAILED)} of 4)", file=sys.stderr)
+        print(f"mutation check: FAIL ({len(_FAILED)} of 6)", file=sys.stderr)
         return 1
-    print("mutation check: OK (4/4)")
+    print("mutation check: OK (6/6)")
     return 0
 
 

@@ -24,6 +24,10 @@ Contracts proved per index (all host-side, no kernel launches):
                        (class, tile) the plan can launch
   C6 vmem-budget       per-(class, tile) kernel VMEM footprint fits the
                        ``launch/roofline.py`` budget
+  C9 device-sentinel   the device build/planners' probe headroom: every
+                       probe key (up to 2 above the largest real key) and
+                       a padded build's out-of-set sentinel cell stay
+                       strictly below the dtype-max padding sentinel
 
 plus, for a slab partition (C7/C8): k-hop halo reach covers every
 eps-close slab pair, and ``exact_halo_capacity`` covers the brute-force
@@ -261,6 +265,34 @@ def check_key_sentinel(index, tag: str = "index") -> list:
     return out
 
 
+def check_device_sentinel(index, tag: str = "index") -> list:
+    """C9: device-planner probe headroom, exact python-int arithmetic.
+
+    The device build pads B with the dtype-max sentinel; the device
+    planners probe up to 2 above the largest real key (the external-span
+    sweep probes [k, k+2]; the merged hi-probe reaches key+1 plus a
+    stencil delta inside the volume) and a padded build stores the
+    out-of-set sentinel cell at key == volume. All of these must stay
+    strictly BELOW the padding sentinel, or a probe ranks into the padding
+    tail as a false hit and window capacities silently shift: require
+    ``sentinel_margin > 2``. ``device_key_dtype`` widens padded builds
+    that would violate this, so a violation here means the index was
+    built with a forced key dtype on a volume within 2 of the dtype max.
+    """
+    from repro.core.grid import sentinel_margin
+
+    dims = np.asarray(index.dims).astype(np.int64)
+    kd = np.dtype(index.key_dtype)
+    margin = sentinel_margin(dims, kd)
+    if margin <= 2:
+        return [Finding(_AN, "device-sentinel", f"{tag}:margin",
+                        f"sentinel margin {margin} <= 2 for key dtype "
+                        f"{kd}: a device probe key (up to max real key "
+                        f"+ 2) or a padded build's sentinel cell reaches "
+                        f"the padding sentinel and aliases padding slots")]
+    return []
+
+
 def _plan_tiles(index, plan) -> dict:
     from repro.kernels import autotune
 
@@ -331,11 +363,12 @@ def check_vmem(index, *, merged: bool, plan=None, tiles=None,
 def prove_index_contracts(index, *, merged: Optional[bool] = None,
                           plan=None, tiles=None,
                           tag: str = "index") -> list:
-    """All per-index contracts (C1-C6). ``merged=None`` proves both sweep
-    modes; ``plan``/``tiles`` override the planner outputs (the mutation
-    harness injects tampered plans through exactly this seam)."""
+    """All per-index contracts (C1-C6, C9). ``merged=None`` proves both
+    sweep modes; ``plan``/``tiles`` override the planner outputs (the
+    mutation harness injects tampered plans through exactly this seam)."""
     modes = (False, True) if merged is None else (bool(merged),)
     out = check_key_sentinel(index, tag)
+    out += check_device_sentinel(index, tag)
     out += check_external_cap(index, tag)
     for m in modes:
         out += check_window_caps(index, merged=m, plan=plan, tag=tag)

@@ -55,7 +55,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import grid as grid_lib
-from repro.core.grid import build_grid_with_geometry, row_major_strides
+from repro.core.grid import (build_grid_with_geometry,
+                             build_grid_with_geometry_jit, device_key_dtype,
+                             host_grid_geometry, row_major_strides)
 from repro.core.selfjoin import _distance_hits_jnp, _gather_batch, _neighbor_ranks_for_delta
 from repro.core.stencil import stencil_offsets
 
@@ -74,6 +76,12 @@ class DistJoinConfig:
     # data at high slab counts) needs points from k>1 slabs away. The driver
     # auto-computes k from the partition boundaries.
     k_hops: int = 1
+    # static cell-key dtype name for the padded device build: the driver
+    # fixes it host-side from the global geometry (device_key_dtype with
+    # padded=True -- the slab grids carry the out-of-set sentinel cell), so
+    # small grids ride the int32 fast path and work under REPRO_NO_X64.
+    # A string keeps the config hashable for the step cache.
+    key_dtype: str = "int64"
 
 
 def partition_points_host(points: np.ndarray, n_slabs: int):
@@ -276,7 +284,9 @@ def make_distributed_count_step(mesh: Mesh, cfg: DistJoinConfig):
         # -- local grid over candidates, global geometry ---------------------
         # invalid padding slots get the sentinel cell: unreachable as
         # candidates and excluded from the max_per_cell bound.
-        index = build_grid_with_geometry(cand_coords, eps, gmin, dims, valid=cand_valid)
+        index = build_grid_with_geometry(cand_coords, eps, gmin, dims,
+                                         valid=cand_valid,
+                                         key_dtype=np.dtype(cfg.key_dtype))
         valid_sorted = cand_valid[index.order]
         owned_sorted = cand_owned[index.order]
         gid_sorted = cand_gids[index.order]
@@ -363,6 +373,9 @@ def distributed_self_join_count(
         from repro.core.grid import build_grid_host
 
         max_per_cell = int(build_grid_host(pts, eps).max_per_cell)
+    # the step derives gmin/dims on-device with the same arithmetic; the key
+    # dtype must be STATIC, so fix it here from the host geometry
+    _, dims_h = host_grid_geometry(pts, eps)
     cfg = DistJoinConfig(
         pts_per_device=coords.shape[1],
         n_dims=pts.shape[1],
@@ -372,6 +385,7 @@ def distributed_self_join_count(
         slab_axis=slab_axis,
         model_axis=model_axis,
         k_hops=k_hops,
+        key_dtype=device_key_dtype(dims_h, padded=True).name,
     )
     step, in_sh = make_distributed_count_step(mesh, cfg)
     coords_flat = coords.reshape(-1, pts.shape[1])
@@ -394,10 +408,10 @@ def distributed_self_join_count(
 # count -> fill -- run per slab over the (local + halo) candidate set.
 # ---------------------------------------------------------------------------
 
-# per-slab grid build against the global geometry (one compile per slab
-# shape; slab blocks share one shape by construction)
-_slab_index = jax.jit(build_grid_with_geometry)
-
+# Per-slab grid builds against the global geometry go through THE shared
+# jitted device builder (grid.build_grid_with_geometry_jit): one executable
+# per (slab shape, key dtype); slab blocks share one shape by construction,
+# and the serving build path reuses the same executable.
 
 _HALO_STEPS: dict = {}
 
@@ -626,12 +640,14 @@ def distributed_self_join(
     cand_v = np.asarray(cand_v).reshape(n_slabs, pc)
     cand_o = np.asarray(cand_o).reshape(n_slabs, pc)
 
-    # global geometry, EXACTLY as build_grid_host derives it: cell coords
-    # (and the UNICOMP cell-pair ownership) agree across slabs AND with the
-    # single-device join
-    gmin = pts.min(axis=0) - eps
+    # global geometry, EXACTLY as build_grid_host derives it (the one shared
+    # numpy copy): cell coords (and the UNICOMP cell-pair ownership) agree
+    # across slabs AND with the single-device join
+    gmin, dims = host_grid_geometry(pts, eps)
     gmax = pts.max(axis=0) + eps
-    dims = np.ceil((gmax - gmin) / eps).astype(np.int64) + 1
+    # padded slab builds carry the out-of-set sentinel cell -> static key
+    # dtype via device_key_dtype (int32 fast path on small grids)
+    slab_kd = device_key_dtype(dims, padded=True)
     # invalid candidate slots: coordinates far outside the volume, so a
     # window that reaches the sentinel cell (a top-corner stencil probe can
     # alias its key) evaluates no spurious hits
@@ -649,8 +665,9 @@ def distributed_self_join(
             continue
         cc = cand_c[k].copy()
         cc[~v] = far
-        index = _slab_index(jnp.asarray(cc), eps_dev, gmin_dev, dims_dev,
-                            jnp.asarray(v))
+        index = build_grid_with_geometry_jit(
+            jnp.asarray(cc), eps_dev, gmin_dev, dims_dev, jnp.asarray(v),
+            key_dtype=slab_kd)
         order = np.asarray(index.order)
         gid_sorted = cand_g[k][order]
         owned_sorted = o[order]

@@ -9,16 +9,19 @@ The paper's index has four components (Fig. 2a):
 Only non-empty cells are stored, so space is O(|D|) independent of the
 (hyper)volume (paper SIV-D). We provide two builders:
 
-  * ``build_grid_host`` -- exact, numpy, on the host. Mirrors the paper: the
-    CUDA version also builds the index on the host before shipping it to the
-    device ("inserting points into the grid requires far less work than
+  * ``build_grid`` -- the PRIMARY builder (DESIGN.md S10): geometry and the
+    static key dtype fixed on the host, then key computation + stable sort
+    + segment detection inside one cached jitted executable
+    (``build_grid_with_geometry``), shapes padded to |D| (the number of
+    non-empty cells is at most |D|). Also usable inside shard_map / pjit
+    where host round-trips are impossible (core/distributed.py).
+  * ``build_grid_host`` -- exact, numpy, on the host; the reference the
+    device build is bit-identical to. Mirrors the paper's CPU fallback
+    ("inserting points into the grid requires far less work than
     constructing the R-tree", SVI-B).
-  * ``build_grid`` -- fully jittable, shapes padded to |D| (the number of
-    non-empty cells is at most |D|), for use inside shard_map / pjit where
-    host round-trips are impossible.
 
-Both produce the same ``GridIndex`` pytree; the joins in ``selfjoin.py``
-consume either.
+Both produce the same ``GridIndex`` pytree -- field-for-field equal on the
+same input -- and the joins in ``selfjoin.py`` consume either.
 
 TPU adaptation note (DESIGN.md S2): the per-thread binary search of B in the
 paper's kernel is replaced by vectorized ``searchsorted`` over all cells per
@@ -27,6 +30,7 @@ host path and subsumed by the searchsorted miss (-1) on the device path.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import weakref
 from functools import partial
@@ -79,6 +83,22 @@ def sentinel_margin(dims, key_dtype=None) -> int:
     for d in np.asarray(dims).ravel():
         volume *= int(d)
     return pad_key_for(key_dtype) - (volume - 1)
+
+
+def device_key_dtype(dims, padded: bool = False) -> np.dtype:
+    """Static key dtype for a DEVICE build of known geometry.
+
+    ``key_dtype_for`` widened to int64 when a padded build would need the
+    out-of-set sentinel cell (key == prod(dims)) and that key would not
+    clear the int32 padding sentinel: the sentinel cell key must both fit
+    the dtype and stay strictly below ``pad_key_for`` (C9,
+    analysis/contracts.py ``check_device_sentinel``). Exact python-int
+    arithmetic throughout.
+    """
+    kd = key_dtype_for(dims)
+    if padded and kd == np.int32 and sentinel_margin(dims, kd) < 2:
+        kd = np.dtype(np.int64)
+    return kd
 
 
 def _pad_probe(arr: jax.Array, mask: jax.Array, key_dtype) -> jax.Array:
@@ -208,6 +228,19 @@ def grid_geometry(points: jax.Array, eps) -> tuple[jax.Array, jax.Array]:
 # Host (exact) build -- mirrors the paper's host-side index construction.
 # ---------------------------------------------------------------------------
 
+def host_grid_geometry(points: np.ndarray,
+                       eps) -> tuple[np.ndarray, np.ndarray]:
+    """Exact numpy grid geometry (paper SIV-B): THE one copy shared by
+    ``build_grid_host`` and the device-build dispatcher (``build_grid``),
+    so both builders derive bit-identical gmin/dims from the same IEEE
+    operations and the resulting indexes can be compared field-for-field."""
+    points = np.asarray(points)
+    gmin = points.min(axis=0) - eps
+    gmax = points.max(axis=0) + eps
+    dims = (np.ceil((gmax - gmin) / eps)).astype(np.int64) + 1
+    return gmin, dims
+
+
 def build_grid_host(points: np.ndarray, eps: float) -> GridIndex:
     """Exact epsilon-grid build in numpy. Returns a device GridIndex.
 
@@ -219,9 +252,7 @@ def build_grid_host(points: np.ndarray, eps: float) -> GridIndex:
     """
     points = np.asarray(points)
     npts, n = points.shape
-    gmin = points.min(axis=0) - eps
-    gmax = points.max(axis=0) + eps
-    dims = (np.ceil((gmax - gmin) / eps)).astype(np.int64) + 1
+    gmin, dims = host_grid_geometry(points, eps)
     key_dtype = key_dtype_for(dims)
     if key_dtype == np.int64:
         _require_int64_keys()
@@ -282,41 +313,73 @@ def masks_host(index: GridIndex) -> list[np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
-# Jitted (padded) build -- for shard_map / end-to-end compiled pipelines.
+# Device build -- key computation, stable sort and segment detection on the
+# accelerator (the paper builds its index on the GPU; DESIGN.md S10).
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=())
-def build_grid(points: jax.Array, eps: jax.Array) -> GridIndex:
-    """Jittable epsilon-grid build with |G| padded to |D|.
+def build_grid(points, eps, *, device: bool = True) -> GridIndex:
+    """Primary epsilon-grid build: host geometry, DEVICE construction.
 
-    Identical semantics to ``build_grid_host``; the number of non-empty cells
-    is data-dependent, so B/G arrays carry |D| slots with ``num_cells`` valid.
+    Geometry (gmin/dims) is derived on the host with the exact numpy
+    arithmetic of ``build_grid_host`` (``host_grid_geometry``), which also
+    fixes the static key dtype; the O(|D| log |D|) work -- linearized key
+    computation, stable sort, segment detection -- runs inside ONE cached
+    jitted executable (``build_grid_with_geometry``). The result is
+    bit-identical to ``build_grid_host`` field-for-field: same geometry
+    ops, same key dtype and dtype-max padding, and stable sorts of equal
+    key arrays produce equal permutations (property-tested in
+    tests/test_device_build.py). ``device=False`` dispatches to the numpy
+    builder unchanged.
     """
-    gmin, dims = grid_geometry(points, eps)
-    return build_grid_with_geometry(points, eps, gmin, dims)
+    pts_np = np.asarray(points)
+    if not device:
+        return build_grid_host(pts_np, float(eps))
+    gmin, dims = host_grid_geometry(pts_np, eps)
+    key_dtype = key_dtype_for(dims)
+    if key_dtype == np.int64:
+        _require_int64_keys()    # fail before tracing, same error as host
+    return build_grid_with_geometry_jit(
+        jnp.asarray(pts_np), eps, jnp.asarray(gmin), jnp.asarray(dims),
+        key_dtype=key_dtype)
 
 
 def build_grid_with_geometry(
     points: jax.Array, eps, gmin: jax.Array, dims: jax.Array,
-    valid: Optional[jax.Array] = None,
+    valid: Optional[jax.Array] = None, *, key_dtype=None,
 ) -> GridIndex:
     """Jittable grid build against externally supplied geometry.
 
-    Used by the distributed slab join (core/distributed.py): every device
-    builds its local grid against the *global* gmin/dims so cell coordinates
-    -- and therefore the UNICOMP cell-pair ownership rule -- are consistent
-    across devices (DESIGN.md S3).
+    The one device builder: ``build_grid`` (primary path) and the
+    distributed slab join (core/distributed.py) both dispatch here -- the
+    latter builds every slab's local grid against the *global* gmin/dims
+    so cell coordinates (and the UNICOMP cell-pair ownership rule) are
+    consistent across devices (DESIGN.md S3).
 
     ``valid`` marks real points; invalid (padding) points are assigned the
-    sentinel cell key prod(dims), which sorts after every real cell and can
-    never be produced by a real cell + stencil-offset lookup, so padding
-    points are unreachable as candidates. ``max_per_cell`` excludes the
-    sentinel cell.
+    out-of-set sentinel cell key prod(dims), which sorts after every real
+    cell and can never be produced by a real cell + stencil-offset lookup,
+    so padding points are unreachable as candidates. ``max_per_cell``
+    excludes the sentinel cell.
+
+    ``key_dtype`` must be STATIC (dims are traced under jit, so the dtype
+    cannot be derived here): callers with concrete geometry pass
+    ``key_dtype_for(dims)`` (or ``device_key_dtype`` when ``valid`` is
+    used) to ride the int32 fast path; ``None`` keeps the legacy int64
+    route, which requires x64. Padding slots carry the dtype-max sentinel
+    (``pad_key_for``), matching the host build.
     """
-    _require_int64_keys()
+    if key_dtype is None:
+        key_dtype = np.dtype(np.int64)
+    key_dtype = np.dtype(key_dtype)
+    if key_dtype == np.int64:
+        _require_int64_keys()
     npts, _ = points.shape
-    keys = linearize(cell_coords(points, gmin, eps), dims)
-    sentinel = jnp.prod(dims.astype(jnp.int64))
+    keys = linearize(cell_coords(points, gmin, eps), dims).astype(key_dtype)
+    # out-of-set sentinel cell key == prod(dims): exact in the key dtype
+    # (int32 route has volume < 2^31; device_key_dtype widens when the
+    # sentinel would collide with the padding sentinel). Explicit dtype=
+    # because jnp.prod promotes int32 to the default int otherwise.
+    sentinel = jnp.prod(dims.astype(key_dtype), dtype=key_dtype)
     if valid is not None:
         keys = jnp.where(valid, keys, sentinel)
 
@@ -335,9 +398,8 @@ def build_grid_with_geometry(
     seg_idx = jnp.where(is_start, rank, npts)  # pad writes -> dropped
     positions = jnp.arange(npts, dtype=jnp.int32)
     cell_start = jnp.zeros(npts, jnp.int32).at[seg_idx].set(positions, mode="drop")
-    cell_keys = jnp.full(npts, PAD_KEY, jnp.int64).at[seg_idx].set(
-        keys_sorted, mode="drop"
-    )
+    cell_keys = jnp.full(npts, pad_key_for(key_dtype), key_dtype)
+    cell_keys = cell_keys.at[seg_idx].set(keys_sorted, mode="drop")
     # count[h] = start[h+1] - start[h]; for the last valid cell use npts.
     nxt = jnp.concatenate([cell_start[1:], jnp.zeros((1,), jnp.int32)])
     idx = jnp.arange(npts, dtype=jnp.int32)
@@ -358,6 +420,12 @@ def build_grid_with_geometry(
         num_cells=ncells,
         max_per_cell=real_count.max().astype(jnp.int32),
     )
+
+
+# THE jitted device builder: one executable per (shape, key dtype), shared
+# by build_grid and the distributed slab join (core/distributed.py).
+build_grid_with_geometry_jit = jax.jit(
+    build_grid_with_geometry, static_argnames=("key_dtype",))
 
 
 def window_descriptors(
@@ -723,17 +791,11 @@ def starts_ext(index: GridIndex) -> np.ndarray:
          np.asarray([index.num_points])]).astype(np.int64)
 
 
-def cell_window_caps(index: GridIndex, merged: bool = False) -> np.ndarray:
-    """Per non-empty cell: the largest candidate window any of its points
-    can see. Host-side pure index arithmetic; an upper bound for any
-    sub-stencil (e.g. the UNICOMP half), so one plan serves both sweep
-    modes.
-
-    ``merged=False``: max over the FULL 3^n stencil of the single neighbor
-    cell's count (own cell included). ``merged=True``: max over the
-    3^(n-1) reduced stencil of the MERGED last-dimension range window
-    (DESIGN.md S7) -- the contiguous span of up to three cells' points,
-    clamped at the grid row like ``range_window_descriptors_at``.
+def cell_window_caps_host(index: GridIndex, merged: bool = False) -> np.ndarray:
+    """Numpy reference for ``cell_window_caps``: 3^(n-1) host searchsorted
+    sweeps, one per stencil offset. Kept as the independent oracle the
+    device planner is property-tested against (tests/test_device_build.py);
+    the serving path uses the batched device planner below.
     """
     from repro.core.stencil import merged_stencil_offsets, stencil_offsets
 
@@ -765,22 +827,150 @@ def cell_window_caps(index: GridIndex, merged: bool = False) -> np.ndarray:
     return caps.astype(np.int32)
 
 
+@partial(jax.jit, static_argnames=("merged",))
+def _cell_window_caps_device(index: GridIndex, deltas: jax.Array,
+                             merged: bool) -> jax.Array:
+    """Batched device form of the per-cell capacity sweep: ONE searchsorted
+    over the (offset x cell) plane per probe side instead of a host loop of
+    3^(n-1) sweeps. Operates on the full padded key array; lanes at rank >=
+    ``num_cells`` are dead (padding-sentinel probes land on zero-count
+    padding slots). Returns the (npts,) int64 caps; the un-jitted wrapper
+    slices the valid prefix -- the single host sync of the plan.
+
+    Probe overflow note: on the int32 key route the host reference promotes
+    ``keys + delta`` to int64 while the device add wraps, but a wrapped
+    probe is strictly negative (|key|, |delta| < volume < 2^31) and ranks
+    to 0 where it can never equal a real key -- the same dead answer the
+    host's out-of-range int64 probe gets at rank ``ncells``. The only
+    geometry where the merged hi-probe could wrap PAST the padding sentinel
+    is volume within 2 of 2^31, which contract C9 rejects
+    (analysis/contracts.py ``check_device_sentinel``).
+    """
+    keys = index.cell_keys                           # (npts,) pad-sentineled
+    kd = keys.dtype
+    n = keys.shape[0]
+    is_cell = jnp.arange(n, dtype=jnp.int32) < index.num_cells
+    counts = jnp.where(is_cell, index.cell_count, 0).astype(jnp.int64)
+    deltas = deltas.astype(kd)[:, None]              # (n_off, 1)
+    if not merged:
+        probe = _pad_probe(keys[None, :] + deltas, is_cell[None, :], kd)
+        pos = jnp.minimum(jnp.searchsorted(keys, probe), n - 1)
+        live = keys[pos] == probe
+        hit = jnp.where(live, counts[pos], 0)        # (n_off, npts)
+        return jnp.max(hit, axis=0)
+    dim_last = index.dims.astype(kd)[-1]
+    last = keys % dim_last
+    lo = keys + jnp.maximum(jnp.asarray(-1, kd), -last)
+    hi = keys + jnp.minimum(jnp.asarray(1, kd), dim_last - 1 - last)
+    # dead lanes: inverted sentinel span (lo=pad, hi=pad-1), the idiom of
+    # ``external_range_descriptors`` -- both ranks land in the padding tail
+    # and the hi_rank > lo_rank mask kills the lane
+    lo_key = _pad_probe(lo[None, :] + deltas, is_cell[None, :], kd)
+    hi_key = jnp.where(is_cell[None, :], hi[None, :] + deltas,
+                       jnp.asarray(pad_key_for(kd) - 1, kd))
+    lo_rank = jnp.searchsorted(keys, lo_key, side="left").astype(jnp.int32)
+    hi_rank = jnp.searchsorted(keys, hi_key, side="right").astype(jnp.int32)
+    span = (_rank_to_point(index, hi_rank)
+            - _rank_to_point(index, lo_rank)).astype(jnp.int64)
+    hit = jnp.where(hi_rank > lo_rank, span, 0)
+    return jnp.max(hit, axis=0)
+
+
+def cell_window_caps(index: GridIndex, merged: bool = False) -> np.ndarray:
+    """Per non-empty cell: the largest candidate window any of its points
+    can see. Pure index arithmetic; an upper bound for any sub-stencil
+    (e.g. the UNICOMP half), so one plan serves both sweep modes.
+
+    ``merged=False``: max over the FULL 3^n stencil of the single neighbor
+    cell's count (own cell included). ``merged=True``: max over the
+    3^(n-1) reduced stencil of the MERGED last-dimension range window
+    (DESIGN.md S7) -- the contiguous span of up to three cells' points,
+    clamped at the grid row like ``range_window_descriptors_at``.
+
+    The sweep itself runs on the device (``_cell_window_caps_device``,
+    batched over all reduced offsets at once); this wrapper materializes
+    the offset table, launches the jitted planner, and performs the single
+    host sync that fixes the static bucket-capacity classes. Bit-equal to
+    ``cell_window_caps_host``.
+    """
+    from repro.core.stencil import merged_stencil_offsets, stencil_offsets
+
+    strides = np.asarray(row_major_strides(index.dims))
+    if merged:
+        reduced, _, _ = merged_stencil_offsets(index.n_dims, unicomp=False)
+        deltas = reduced @ strides
+    else:
+        deltas = stencil_offsets(index.n_dims, unicomp=False) @ strides
+    kd = np.dtype(index.cell_keys.dtype)
+    caps = _cell_window_caps_device(
+        index, jnp.asarray(deltas.astype(kd)), merged=merged)
+    ncells = int(index.num_cells)
+    return np.asarray(caps)[:ncells].astype(np.int32)
+
+
+@jax.jit
+def _external_span_device(index: GridIndex) -> jax.Array:
+    """Device form of the external range-cap sweep: point span of keys
+    [k, k+2] for every present key k, batched ``searchsorted`` with
+    side='right'. Padding lanes probe pad-1 and span zero."""
+    keys = index.cell_keys
+    kd = keys.dtype
+    n = keys.shape[0]
+    is_cell = jnp.arange(n, dtype=jnp.int32) < index.num_cells
+    hi_key = jnp.where(is_cell, keys + jnp.asarray(2, kd),
+                       jnp.asarray(pad_key_for(kd) - 1, kd))
+    hi_rank = jnp.searchsorted(keys, hi_key, side="right").astype(jnp.int32)
+    lo = _rank_to_point(index, jnp.arange(n, dtype=jnp.int32))
+    span = (_rank_to_point(index, hi_rank) - lo).astype(jnp.int64)
+    return jnp.where(is_cell, span, 0)
+
+
 # Derived structures (bucket plans, lookup tables, route decisions) are
 # pure functions of the (immutable) index; cache them per live GridIndex so
-# repeated joins against the same index pay the host-side work once. Keyed
+# repeated joins against the same index pay the planning work once. Keyed
 # by (id, tag) with a weakref finalizer for eviction -- GridIndex holds jax
-# arrays and is itself unhashable.
-_INDEX_CACHE: dict = {}
+# arrays and is itself unhashable. Bounded LRU: a long-lived re-indexing
+# service (launch/serve.py reindex) swaps snapshots indefinitely, and the
+# finalizer alone only fires when the OLD index is garbage collected --
+# anything still referencing a retired index would pin its plans forever.
+# Entries are pure recomputable values (never executables), so eviction can
+# only cost a rebuild, never a retrace.
+_INDEX_CACHE_MAX = 64
+_INDEX_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_MISSING = object()
+
+INDEX_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0, "finalized": 0}
+
+
+def index_cache_stats() -> dict:
+    """Snapshot of the per-index plan cache counters plus current size."""
+    out = dict(INDEX_CACHE_STATS)
+    out["size"] = len(_INDEX_CACHE)
+    return out
+
+
+def _finalize_index_entry(key) -> None:
+    # The entry may already be gone (LRU eviction raced the GC): pop with a
+    # sentinel default so a late finalizer never raises or double-counts.
+    if _INDEX_CACHE.pop(key, _MISSING) is not _MISSING:
+        INDEX_CACHE_STATS["finalized"] += 1
 
 
 def index_cached(index: GridIndex, tag: str, build):
-    """Memoize ``build()`` on the index object under ``tag``."""
+    """Memoize ``build()`` on the index object under ``tag`` (bounded LRU)."""
     key = (id(index), tag)
-    if key in _INDEX_CACHE:
-        return _INDEX_CACHE[key]
+    value = _INDEX_CACHE.get(key, _MISSING)
+    if value is not _MISSING:
+        INDEX_CACHE_STATS["hits"] += 1
+        _INDEX_CACHE.move_to_end(key)
+        return value
+    INDEX_CACHE_STATS["misses"] += 1
     value = build()
     _INDEX_CACHE[key] = value
-    weakref.finalize(index, _INDEX_CACHE.pop, key, None)
+    weakref.finalize(index, _finalize_index_entry, key)
+    while len(_INDEX_CACHE) > _INDEX_CACHE_MAX:
+        _INDEX_CACHE.popitem(last=False)
+        INDEX_CACHE_STATS["evictions"] += 1
     return value
 
 
@@ -817,17 +1007,13 @@ def external_range_cap(index: GridIndex, align: int = CAP_ALIGN) -> int:
     present key k bounds the span by [k, k+2] -- so the max over present
     keys k of the point span of [k, k+2] dominates every possible query
     window, including windows whose center cell is absent from B (which
-    per-cell caps cannot see). Cached per index.
+    per-cell caps cannot see). Sweep on the device
+    (``_external_span_device``); cached per index.
     """
     def build():
-        ncells = int(index.num_cells)
-        if ncells == 0:
-            return align
-        keys = np.asarray(index.cell_keys[:ncells])
-        ext = starts_ext(index)
-        hi_rank = np.searchsorted(keys, keys + 2, side="right")
-        span = ext[hi_rank] - ext[np.arange(ncells)]
-        return round_up(max(int(span.max()), 1), align)
+        span = np.asarray(_external_span_device(index))
+        top = int(span.max()) if span.size else 0
+        return round_up(max(top, 1), align)
 
     return index_cached(index, f"extcap/{align}", build)
 

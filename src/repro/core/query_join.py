@@ -28,7 +28,7 @@ which is what the old ``@jax.jit``-closure-per-call ``range_query`` paid.
 
 Typical use:
 
-    index = build_grid_host(points, eps)     # once
+    index = build_grid(points, eps)          # once (device build)
     pj = prepare(index)                      # once: pads, offset tables
     res = pj.join(queries)                   # per request: counts + pairs
 
@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import grid as grid_lib
-from repro.core.grid import (GridIndex, build_grid_host,
+from repro.core.grid import (GridIndex, build_grid,
                              round_up as _round_up)
 from repro.core.stencil import stencil_offsets
 
@@ -657,7 +657,7 @@ def epsilon_join(queries, points, eps: Optional[float] = None, *,
     re-pays the cheap host-side preparation per call.
     """
     if index is None:
-        index = build_grid_host(np.asarray(points), float(eps))
+        index = build_grid(np.asarray(points), float(eps))
     return prepare(index, merge_last_dim=merge_last_dim).join(
         queries, eps=eps, return_pairs=return_pairs, sort_pairs=sort_pairs,
         emit=emit, method=method, with_stats=with_stats)
@@ -686,5 +686,11 @@ def executable_cache_stats() -> dict:
         "fused_reference": size(fj._fused_join_hits_reference),
         "fused_pallas": size(fj._fused_join_hits_pallas),
         "emit_pairs_device": size(_emit_pairs_device),
+        # prepare-path builders/planners (DESIGN.md S10): these compile
+        # during build/reindex, never per steady-state request, so the
+        # serve watchdog exempts them (launch/serve.py assert_no_retrace).
+        "grid_build": size(grid_lib.build_grid_with_geometry_jit),
+        "grid_caps": size(grid_lib._cell_window_caps_device),
+        "grid_extspan": size(grid_lib._external_span_device),
         "trace_events": dict(TRACE_EVENTS),
     }

@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grid import (GridIndex, build_grid_host,
+from repro.core.grid import (GridIndex, build_grid,
                              neighbor_rank, round_up as _round_up)
 from repro.core.stencil import stencil_offsets
 
@@ -298,7 +298,8 @@ def _fill_batch(
 def _resolve_index(points, eps, index: Optional[GridIndex]) -> GridIndex:
     if index is not None:
         return index
-    return build_grid_host(np.asarray(points), float(eps))
+    # device build (bit-identical to build_grid_host; DESIGN.md S10)
+    return build_grid(np.asarray(points), float(eps))
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ cache, reporting per-token latency.
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 import warnings
 from collections import deque
@@ -127,6 +128,9 @@ class _JoinServiceBase:
         cannot know result sizes in advance. Observability counters
         (``metric:`` trace events, e.g. the batching service's coalesce
         counters) are also exempt: they bump per launch without tracing.
+        The prepare-path builders/planners (``grid_build``/``grid_caps``/
+        ``grid_extspan``) are exempt too: they compile during index build
+        and background ``reindex``, never per steady-state request.
         The request-path functions (window descriptors, fused sweep) must
         stay frozen; those are what the per-request re-tracing bug
         burned."""
@@ -134,7 +138,8 @@ class _JoinServiceBase:
 
         def freeze(stats: dict) -> dict:
             out = {k: v for k, v in stats.items()
-                   if k not in ("emit_pairs_device", "trace_events")}
+                   if k not in ("emit_pairs_device", "trace_events",
+                                "grid_build", "grid_caps", "grid_extspan")}
             out["trace_events"] = {
                 k: v for k, v in metric_free(stats["trace_events"]).items()
                 if k != "emit_pairs_device"}
@@ -154,20 +159,41 @@ class JoinService(_JoinServiceBase):
     Wraps ``core.query_join.prepare`` with the serving-side bookkeeping of
     ``_JoinServiceBase`` plus bucket warmup (compile off the request
     path).
+
+    The serving state is ONE snapshot tuple ``(index, prepared)``:
+    ``reindex`` rebuilds both in a background thread (device build,
+    DESIGN.md S10) and swaps them with a single reference assignment, so
+    every request observes either the old snapshot or the new one, never a
+    mix -- the first slice of the ROADMAP mutable-index item.
     """
 
     def __init__(self, points: np.ndarray, eps: float, *,
                  index=None, return_pairs: bool = False,
                  merge_last_dim: Optional[bool] = None):
-        from repro.core.grid import build_grid_host
+        from repro.core.grid import build_grid
         from repro.core.query_join import prepare
 
         super().__init__(return_pairs)
+        self.eps = float(eps)
+        self.merge_last_dim = merge_last_dim
         t0 = time.perf_counter()
-        self.index = index if index is not None else build_grid_host(
-            np.asarray(points), float(eps))
-        self.prepared = prepare(self.index, merge_last_dim=merge_last_dim)
+        if index is None:
+            index = build_grid(np.asarray(points), float(eps))
+        self._snapshot = (index, prepare(index,
+                                         merge_last_dim=merge_last_dim))
         self.build_s = time.perf_counter() - t0
+        self.swaps = 0
+        self.reindex_timings: Optional[dict] = None
+        self._reindex_thread: Optional[threading.Thread] = None
+        self._reindex_error: Optional[BaseException] = None
+
+    @property
+    def index(self):
+        return self._snapshot[0]
+
+    @property
+    def prepared(self):
+        return self._snapshot[1]
 
     def warmup(self, batch_size: int) -> int:
         """Compile the executables serving ``batch_size``-query requests
@@ -183,6 +209,65 @@ class JoinService(_JoinServiceBase):
             self._warm_buckets.add(qp)
         self._auto_steady()
         return qp
+
+    def reindex(self, points: np.ndarray, *, wait: bool = True) -> None:
+        """Rebuild the index over ``points`` and atomically swap the
+        serving snapshot (DESIGN.md S10).
+
+        Device build + planning + bucket warm-up all run in a background
+        thread; requests keep being answered from the OLD snapshot until
+        the single ``_snapshot`` assignment at the end. Executables are
+        module-level and keyed by static shapes (bucket rows, capacity
+        class, point count), so a new snapshot whose classes match the old
+        one's reuses every warmed executable and the no-retrace watchdog
+        stays green across the swap; a snapshot with genuinely new classes
+        compiles here -- off the request path -- and the driver must
+        ``mark_steady`` again. ``wait=False`` returns immediately; call
+        ``join_reindex`` (or the next ``reindex``) to surface errors.
+        """
+        if self._reindex_thread is not None and self._reindex_thread.is_alive():
+            raise RuntimeError("reindex already in progress")
+        self.join_reindex()          # surface a previous failure, if any
+        pts = np.asarray(points)
+
+        def work():
+            try:
+                from repro.core.grid import build_grid
+                from repro.core.query_join import prepare
+
+                t0 = time.perf_counter()
+                index = jax.block_until_ready(build_grid(pts, self.eps))
+                t1 = time.perf_counter()
+                prepared = prepare(index,
+                                   merge_last_dim=self.merge_last_dim)
+                t2 = time.perf_counter()
+                for qp in sorted(self._warm_buckets):
+                    prepared.warm(qp, return_pairs=self.return_pairs)
+                t3 = time.perf_counter()
+                self._snapshot = (index, prepared)   # THE atomic swap
+                self.swaps += 1
+                self.reindex_timings = {
+                    "build_s": t1 - t0, "plan_s": t2 - t1,
+                    "warm_s": t3 - t2,
+                    "swap_s": time.perf_counter() - t3}
+            except BaseException as e:   # noqa: BLE001 -- surfaced in caller
+                self._reindex_error = e
+
+        th = threading.Thread(target=work, name="join-reindex", daemon=True)
+        self._reindex_thread = th
+        th.start()
+        if wait:
+            self.join_reindex()
+
+    def join_reindex(self) -> None:
+        """Block until any in-flight reindex has swapped; re-raise its
+        error in the caller's thread if it failed."""
+        th = self._reindex_thread
+        if th is not None:
+            th.join()
+        if self._reindex_error is not None:
+            err, self._reindex_error = self._reindex_error, None
+            raise RuntimeError("background reindex failed") from err
 
     def _answer(self, queries: np.ndarray, eps: Optional[float] = None):
         return self.prepared.join(queries, eps=eps,
@@ -652,7 +737,23 @@ def serve_selfjoin(args):
               f"p50 {p50:.1f}ms p99 {p99:.1f}ms "
               f"{len(tickets) / wall:.1f} req/s")
     else:
+        if args.reindex and not type(svc) is JoinService:
+            raise SystemExit("--reindex needs the single-index service "
+                             "(no --slabs/--batching)")
         for r in range(args.requests):
+            if args.reindex and r == args.requests // 2:
+                # mid-load re-index: background device build + plan, then
+                # one atomic snapshot swap. Same point set (permuted), so
+                # bucket classes match and every warmed executable is
+                # reused -- the no-retrace gate below must stay green.
+                svc.reindex(rng.permutation(pts), wait=True)
+                t = svc.reindex_timings
+                print(f"[serve] reindexed {args.points} pts mid-load: "
+                      f"build {t['build_s']*1000:.1f}ms "
+                      f"plan {t['plan_s']*1000:.1f}ms "
+                      f"warm {t['warm_s']*1000:.1f}ms "
+                      f"swap {t['swap_s']*1e6:.0f}us "
+                      f"(snapshot swaps: {svc.swaps})")
             q = rng.uniform(0, 100, size=(args.request_batch, args.dims))
             svc.query(q)
         p50, p99 = svc.percentiles()
@@ -721,6 +822,11 @@ def main(argv=None):
                     help="shard the index into N dim-0 slabs and serve "
                          "requests scatter-gather across them "
                          "(ShardedJoinService, DESIGN.md S3)")
+    ap.add_argument("--reindex", action="store_true",
+                    help="re-index a permutation of the point set halfway "
+                         "through the request loop (background device "
+                         "build + atomic snapshot swap; the no-retrace "
+                         "gate must stay green across it)")
     ap.add_argument("--batching", action="store_true",
                     help="serve through the continuous-batching admission "
                          "queue (BatchingJoinService, DESIGN.md S8); "

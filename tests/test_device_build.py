@@ -1,0 +1,280 @@
+"""Device-resident index build & planning (core/grid.build_grid, S10).
+
+The jitted ``build_grid_with_geometry`` is the PRIMARY build path now;
+this file pins its one non-negotiable contract: the device build is
+BIT-IDENTICAL to ``build_grid_host`` -- every field, every dtype --
+across dimensionalities, key dtypes, degenerate point sets, and with
+x64 disabled.  Planning (``cell_window_caps``) moved on-device too, so
+the retired host sweep (``cell_window_caps_host``) stays behind as the
+independent oracle it is checked against here.  The serve-side half:
+``JoinService.reindex`` swaps a full snapshot without re-tracing any
+request-path executable, and the per-index plan cache is LRU-bounded.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro.core.grid as grid_lib
+from repro.core.grid import (build_grid, build_grid_host, cell_window_caps,
+                             cell_window_caps_cached, cell_window_caps_host,
+                             external_range_cap, index_cache_stats,
+                             index_cached)
+from repro.core.query_join import prepare
+from repro.core.selfjoin import self_join
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_FIELDS = ("grid_min", "eps", "dims", "order", "points_sorted", "cell_keys",
+           "cell_start", "cell_count", "point_cell_rank", "num_cells",
+           "max_per_cell")
+
+
+def assert_bit_identical(host_idx, dev_idx):
+    for f in _FIELDS:
+        a = np.asarray(getattr(host_idx, f))
+        b = np.asarray(getattr(dev_idx, f))
+        assert a.dtype == b.dtype, (f, a.dtype, b.dtype)
+        assert np.array_equal(a, b), f
+
+
+def clustered(rng, n, d, spread=0.05):
+    centers = rng.uniform(0.0, 1.0, (max(2, n // 200), d))
+    which = rng.integers(0, centers.shape[0], n)
+    return centers[which] + rng.normal(0.0, spread, (n, d))
+
+
+@pytest.mark.parametrize("d,eps", [(2, 0.04), (3, 0.1), (4, 0.25), (6, 0.5)])
+def test_device_build_bit_identical_uniform(d, eps):
+    rng = np.random.default_rng(d)
+    pts = rng.uniform(0.0, 1.0, (1200, d))
+    h = build_grid_host(pts, eps)
+    g = build_grid(pts, eps)
+    assert_bit_identical(h, g)
+    # uniform sparse points leave empty cells: the scatter paths that
+    # differ most between numpy and the jitted segment build
+    vol = int(np.prod(np.asarray(h.dims, dtype=object)))
+    assert int(h.num_cells) < vol
+
+
+@pytest.mark.parametrize("d", [2, 3, 4])
+def test_device_build_bit_identical_clustered(d):
+    rng = np.random.default_rng(10 + d)
+    pts = clustered(rng, 900, d)
+    h = build_grid_host(pts, 0.08)
+    assert_bit_identical(h, build_grid(pts, 0.08))
+
+
+def test_device_build_int64_keys():
+    """A 6-D grid past 2^31 cells routes to int64 keys on BOTH builders
+    and stays bit-identical (the legacy key path, now jit-shared)."""
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 100, size=(400, 6))
+    pts[0] = 0.0
+    pts[1] = 100.0                              # pin the extent exactly
+    h = build_grid_host(pts, 2.9)               # ~3.0e9 cells
+    assert h.key_dtype == np.int64
+    g = build_grid(pts, 2.9)
+    assert_bit_identical(h, g)
+
+
+def test_device_build_duplicates_and_coincident():
+    rng = np.random.default_rng(4)
+    base = rng.uniform(0, 10, (50, 3))
+    pts = np.concatenate([
+        base,
+        base[rng.integers(0, 50, 300)],          # exact duplicates
+        np.tile(base[:1], (64, 1)),              # 64 coincident points
+    ])
+    h = build_grid_host(pts, 0.7)
+    assert int(h.max_per_cell) >= 64
+    assert_bit_identical(h, build_grid(pts, 0.7))
+
+
+def test_device_build_degenerate_sizes():
+    for pts in (np.zeros((1, 2)), np.asarray([[0.0, 0.0], [5.0, 5.0]])):
+        assert_bit_identical(build_grid_host(pts, 1.0), build_grid(pts, 1.0))
+
+
+def test_device_build_host_flag():
+    rng = np.random.default_rng(5)
+    pts = rng.uniform(0, 1, (200, 2))
+    idx = build_grid(pts, 0.1, device=False)
+    assert_bit_identical(build_grid_host(pts, 0.1), idx)
+
+
+@pytest.mark.parametrize("merged", [False, True])
+def test_device_planning_matches_host_sweep(merged):
+    """Batched-searchsorted planner vs the retired per-offset host sweep
+    (the independent oracle) -- bit-equal caps on both stencils."""
+    rng = np.random.default_rng(6)
+    for pts, eps in ((rng.uniform(0, 1, (800, 3)), 0.12),
+                     (clustered(rng, 700, 4), 0.1),
+                     (rng.uniform(0, 1, (300, 2)), 0.07)):
+        idx = build_grid(pts, eps)
+        host = cell_window_caps_host(idx, merged=merged)
+        dev = cell_window_caps(idx, merged=merged)
+        assert host.dtype == dev.dtype
+        assert np.array_equal(host, dev)
+
+
+def test_external_range_cap_consistent():
+    rng = np.random.default_rng(7)
+    pts = clustered(rng, 600, 3)
+    h = build_grid_host(pts, 0.09)
+    g = build_grid(pts, 0.09)
+    assert external_range_cap(h) == external_range_cap(g)
+
+
+def test_serve_path_pair_parity():
+    """Device-built and host-built indexes drive the SAME serve
+    executables to the SAME pairs (and external counts)."""
+    rng = np.random.default_rng(8)
+    pts = clustered(rng, 1000, 3)
+    eps = 0.1
+    h = build_grid_host(pts, eps)
+    g = build_grid(pts, eps)
+    ph = np.asarray(self_join(pts, eps, index=h, sort_result=True))
+    pg = np.asarray(self_join(pts, eps, index=g, sort_result=True))
+    assert np.array_equal(ph, pg)
+    q = rng.uniform(0, 1, (64, 3))
+    assert np.array_equal(np.asarray(prepare(h).counts(q)),
+                          np.asarray(prepare(g).counts(q)))
+
+
+def test_reindex_swaps_snapshot_without_retrace():
+    from repro.launch.serve import JoinService
+
+    rng = np.random.default_rng(9)
+    pts = clustered(rng, 1500, 3)
+    svc = JoinService(pts, 0.1)
+    svc.warmup(128)
+    old_index = svc.index
+    svc.query(pts[:128])
+    # permutation of the same point set: same bucket classes, so every
+    # warmed executable must carry over to the new snapshot
+    svc.reindex(rng.permutation(pts))
+    assert svc.swaps == 1
+    assert svc.index is not old_index
+    assert {"build_s", "plan_s", "warm_s", "swap_s"} <= set(
+        svc.reindex_timings)
+    res = svc.query(pts[:128])
+    assert res.total > 0
+    svc.assert_no_retrace()
+    # the new snapshot answers identically to a cold service on the
+    # permuted points (order-insensitive: totals match)
+    ref = JoinService(rng.permutation(pts), 0.1)
+    assert int(res.total) == int(ref.query(pts[:128]).total)
+
+
+def test_reindex_background_error_surfaces():
+    from repro.launch.serve import JoinService
+
+    rng = np.random.default_rng(11)
+    pts = rng.uniform(0, 1, (300, 2))
+    svc = JoinService(pts, 0.1)
+    svc.reindex(np.zeros(7), wait=False)         # 1-D: build must fail
+    with pytest.raises(RuntimeError, match="background reindex failed"):
+        svc.join_reindex()
+    # the serving snapshot survived the failed swap
+    assert svc.swaps == 0
+    assert svc.query(pts[:32]).total >= 0
+
+
+def test_index_cache_lru_bound_and_stats(monkeypatch):
+    monkeypatch.setattr(grid_lib, "_INDEX_CACHE_MAX", 3)
+    grid_lib._INDEX_CACHE.clear()
+    before = dict(index_cache_stats())
+    rng = np.random.default_rng(12)
+    indexes = [build_grid_host(rng.uniform(0, 1, (60, 2)), 0.2)
+               for _ in range(5)]
+    calls = []
+    for i, idx in enumerate(indexes):
+        index_cached(idx, "t", lambda i=i: calls.append(i) or i)
+    assert len(calls) == 5                        # 5 misses
+    assert index_cache_stats()["size"] <= 3       # LRU bound holds
+    stats = index_cache_stats()
+    assert stats["misses"] - before["misses"] == 5
+    assert stats["evictions"] - before["evictions"] == 2
+    # most-recent entries hit without rebuilding
+    assert index_cached(indexes[-1], "t", lambda: "rebuilt") == 4
+    assert index_cache_stats()["hits"] - before["hits"] == 1
+    # dropping the last reference finalizes its entry (the loop variable
+    # above still aliases it, so rebind before popping)
+    import gc
+
+    idx = None
+    indexes.pop()
+    gc.collect()
+    assert index_cache_stats()["finalized"] > before["finalized"]
+
+
+def test_index_cache_eviction_is_recomputable():
+    """Evicted values are rebuilt on demand -- eviction can never change
+    answers, only cost (values are pure functions of the index)."""
+    grid_lib._INDEX_CACHE.clear()
+    rng = np.random.default_rng(13)
+    idx = build_grid_host(rng.uniform(0, 1, (200, 3)), 0.15)
+    first = cell_window_caps_cached(idx, merged=True)
+    key = next(k for k in grid_lib._INDEX_CACHE if k[0] == id(idx))
+    grid_lib._INDEX_CACHE.pop(key)                # force an eviction
+    again = cell_window_caps_cached(idx, merged=True)
+    assert np.array_equal(first, again)
+
+
+@pytest.mark.slow
+def test_no_x64_subprocess_device_build_parity():
+    """With REPRO_NO_X64: the device build stays bit-identical to the
+    host build on the int32 key route, and a build that needs int64
+    keys fails BEFORE tracing with the same actionable error."""
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.core.grid import build_grid, build_grid_host
+        rng = np.random.default_rng(0)
+        pts = rng.uniform(0, 30, size=(600, 3)).astype(np.float32)
+        h = build_grid_host(pts, 2.0)
+        g = build_grid(pts, 2.0)
+        assert h.key_dtype == np.int32
+        for f in ("grid_min", "eps", "dims", "order", "points_sorted",
+                  "cell_keys", "cell_start", "cell_count",
+                  "point_cell_rank", "num_cells", "max_per_cell"):
+            a, b = np.asarray(getattr(h, f)), np.asarray(getattr(g, f))
+            assert a.dtype == b.dtype and np.array_equal(a, b), f
+        big = rng.uniform(0, 100, size=(64, 6)).astype(np.float32)
+        big[0] = 0.0
+        big[1] = 100.0
+        try:
+            build_grid(big, 2.9)                # ~3.0e9 cells: needs int64
+        except RuntimeError as e:
+            assert "x64" in str(e) or "int64" in str(e), e
+            print("OK")
+        else:
+            raise SystemExit("int64-needing device build did not raise")
+    """)
+    env = dict(os.environ, REPRO_NO_X64="1",
+               PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_device_sentinel_contract_c9():
+    """C9: an int32-keyed index whose volume leaves < 2 keys of headroom
+    below the pad sentinel is rejected (device probes use key+2)."""
+    import jax.numpy as jnp
+
+    from repro.analysis.contracts import check_device_sentinel
+
+    rng = np.random.default_rng(14)
+    idx = build_grid_host(rng.uniform(0, 1, (100, 2)), 0.2)
+    assert not check_device_sentinel(idx)
+    forged = dataclasses.replace(
+        idx, dims=jnp.asarray([2, 2**30 - 1], jnp.int64),
+        cell_keys=np.asarray(idx.cell_keys).astype(np.int32))
+    found = check_device_sentinel(forged, tag="forged")
+    assert any(f.rule == "device-sentinel" for f in found)
