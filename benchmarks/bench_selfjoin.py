@@ -19,7 +19,12 @@ the chosen route, the offsets swept (n_offsets_swept), and the per-cell +
 merged window-capacity histograms that drive the occupancy buckets
 (DESIGN.md S6/S7), and ASSERTS the routing floor: fused count must not
 lose to jnp on any workload (the uniform-6d regression this gate pins
-down; --no-assert-floor to disable).
+down; --no-assert-floor to disable). The fused entry also records the
+cell-run DMA dedup trajectory (DESIGN.md S11): row-loop vs run-loop join
+timings and the per-workload analytic DMA-window ledger + run-length
+histogram (``dma`` section); --smoke additionally gates run-loop vs
+row-loop pair-set parity and the DMA-window reduction (strict decrease
+on the clustered workload, >= mean cell occupancy on the 2-D ones).
 
 --mode serve times the external-query serving path (DESIGN.md S5) on the
 default serve workload: steady-state (post-warmup) request latency
@@ -140,6 +145,14 @@ def validate_schema(payload: dict) -> None:
         if "fused" in e["impls"]:
             assert "route" in e["impls"]["fused"], e["workload"]
             assert "n_offsets_swept" in e["impls"]["fused"], e["workload"]
+            # cell-run DMA dedup trajectory (DESIGN.md S11)
+            assert {"join_row_s", "join_run_s",
+                    "run_over_row_join"} <= set(e["impls"]["fused"]), (
+                e["workload"])
+            assert "dma" in e, e["workload"]
+            assert {"dma_windows_row", "dma_windows_run", "dma_bytes_saved",
+                    "reduction_factor", "mean_cell_occupancy",
+                    "run_length_hist"} <= set(e["dma"]), e["workload"]
     if "load" in payload:
         validate_load_schema(payload["load"])
     if "index" in payload:
@@ -748,6 +761,36 @@ def main(argv=None):
                 f"on {name}: {pm.shape} vs {pf.shape}")
             print(f"[bench] {name:14s} merged/unmerged pair-set parity OK "
                   f"({pm.shape[0]} pairs)", flush=True)
+            # Run-loop parity gate (DESIGN.md S11): the cell-run DMA dedup
+            # must emit the row-loop's pair set bit-for-bit, with the
+            # analytic DMA ledger showing fewer window gathers -- strictly
+            # fewer on the clustered workload (co-located queries are its
+            # whole point), and by at least the mean cell occupancy factor
+            # on the dense 2-D workloads (ISSUE 9 acceptance).
+            from repro.core.selfjoin import dma_window_stats
+
+            pr = _self_join_fused(index, unicomp=True, sort_result=True,
+                                  merged=True, run_loop=True)
+            assert np.array_equal(pm, pr), (
+                f"run-loop pair-set mismatch vs row-loop on {name}: "
+                f"{pr.shape} vs {pm.shape}")
+            dma = dma_window_stats(index)
+            assert dma["dma_windows_run"] <= dma["dma_windows_row"], (
+                name, dma)
+            if name.startswith("clustered"):
+                assert dma["dma_windows_run"] < dma["dma_windows_row"], (
+                    f"run-loop did not reduce DMA windows on {name}: {dma}")
+            if name in ("uniform-2d", "clustered-2d"):
+                assert (dma["reduction_factor"]
+                        >= dma["mean_cell_occupancy"]), (
+                    f"DMA window reduction {dma['reduction_factor']:.2f}x "
+                    f"under the mean cell occupancy "
+                    f"{dma['mean_cell_occupancy']:.2f}x on {name}")
+            print(f"[bench] {name:14s} run-loop pair-set parity OK, DMA "
+                  f"windows {dma['dma_windows_row']} -> "
+                  f"{dma['dma_windows_run']} "
+                  f"({dma['reduction_factor']:.2f}x, mean occupancy "
+                  f"{dma['mean_cell_occupancy']:.2f})", flush=True)
         entry = {
             "workload": name,
             "n_points": int(pts.shape[0]),
@@ -785,6 +828,32 @@ def main(argv=None):
             if impl == "fused":
                 entry["impls"][impl]["route"] = stats.route
                 entry["impls"][impl]["n_offsets_swept"] = stats.n_offsets
+                # Cell-run DMA dedup trajectory (DESIGN.md S11): row-loop
+                # vs run-loop join through the same fused driver, plus the
+                # analytic per-workload DMA-window ledger + run-length
+                # histogram (the redundancy reduction as a TRACKED number)
+                from repro.core.selfjoin import (_self_join_fused,
+                                                 dma_window_stats)
+
+                t_row = best_of(
+                    lambda: _self_join_fused(index, unicomp=True,
+                                             sort_result=False, merged=merge,
+                                             run_loop=False), trials)
+                t_run = best_of(
+                    lambda: _self_join_fused(index, unicomp=True,
+                                             sort_result=False, merged=merge,
+                                             run_loop=True), trials)
+                entry["impls"][impl]["join_row_s"] = t_row
+                entry["impls"][impl]["join_run_s"] = t_run
+                entry["impls"][impl]["run_over_row_join"] = t_row / t_run
+                entry["dma"] = dma_window_stats(index, merged=merge)
+                d = entry["dma"]
+                print(f"[bench] {name:14s} {'dma':6s} "
+                      f"row {t_row*1e3:9.1f} ms   run {t_run*1e3:9.1f} ms  "
+                      f"({t_row / t_run:.2f}x)   windows "
+                      f"{d['dma_windows_row']} -> {d['dma_windows_run']} "
+                      f"({d['reduction_factor']:.2f}x, occ "
+                      f"{d['mean_cell_occupancy']:.2f})", flush=True)
             print(f"[bench] {name:14s} {impl:6s} "
                   f"count {t_count*1e3:9.1f} ms   join {t_join*1e3:9.1f} ms"
                   + (f"   route={stats.route} n_off={stats.n_offsets}"

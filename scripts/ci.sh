@@ -29,7 +29,7 @@ timeout 180 python -m repro.launch.serve --arch selfjoin --requests 8 \
 echo "[ci] load smoke (fixed offered load: p99 must hold the recorded SLO, coalesce factor must be > 1)"
 timeout 300 python benchmarks/bench_selfjoin.py --mode load --smoke
 
-echo "[ci] bench smoke, merged-range sweep (harness + BENCH schema + merged-vs-unmerged pair-set parity)"
+echo "[ci] bench smoke, merged-range sweep (harness + BENCH schema + merged-vs-unmerged AND run-loop-vs-row-loop pair-set parity + dma_windows_issued decrease on the clustered workload)"
 timeout 300 python benchmarks/bench_selfjoin.py --smoke
 
 echo "[ci] bench smoke, per-cell sweep oracle (--no-merge; parity asserted again)"

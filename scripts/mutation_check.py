@@ -3,12 +3,14 @@
 
 Proves the gate has teeth, per ISSUE 7's acceptance criteria: seeding
 (a) an undersized window cap, (b) an int64 key literal on the int32 key
-path, (c) a per-call ``jax.jit`` closure, and (d) an int32-keyed index
-whose volume leaves no device-probe headroom below the padding sentinel
-must each produce a NEW failing finding, while the unmutated tree
-produces zero new findings against the committed baseline. Mutations are
-in-memory -- a tampered ``BucketPlan`` injected through the prover's
-``plan=`` seam, source text mutated before ``lint_source``, a forged
+path, (c) a per-call ``jax.jit`` closure, (d) an int32-keyed index
+whose volume leaves no device-probe headroom below the padding sentinel,
+and (e) a cell-run plan whose corrupted run length merges two cells into
+one run (overlapping runs, DESIGN.md S11) must each produce a NEW
+failing finding, while the unmutated tree produces zero new findings
+against the committed baseline. Mutations are in-memory -- a tampered
+``BucketPlan`` or ``run_ord`` injected through the prover's ``plan=`` /
+``run_ord=`` seams, source text mutated before ``lint_source``, a forged
 ``GridIndex`` via ``dataclasses.replace`` -- so the working tree is
 never touched.
 """
@@ -112,10 +114,33 @@ def main() -> int:
     check("(d) healthy index passes the device-sentinel contract",
           not clean, "; ".join(f.key for f in clean))
 
+    # -- (e) corrupted run length: two cells merged into one run ----------
+    from repro.core.grid import cell_run_plan, round_up
+
+    tq = 128
+    rank = np.asarray(index.point_cell_rank)
+    qp = round_up(index.num_points, tq)
+    pos = np.minimum(np.arange(qp), index.num_points - 1)
+    plan_e = cell_run_plan(rank[pos], tq)
+    healthy = contracts.check_run_plan(index, run_ord=plan_e.run_ord,
+                                       tq=tq, tag="clean")
+    check("(e) healthy run plan passes the run-partition contract",
+          not healthy, "; ".join(f.key for f in healthy))
+    ro = plan_e.run_ord.reshape(-1, tq).copy()
+    tiles_multi = np.flatnonzero(ro.max(axis=1) > 0)
+    assert tiles_multi.size, "mutation fixture has one run per tile"
+    t = int(tiles_multi[0])
+    ro[t][ro[t] >= 1] -= 1   # first run swallows the next cell's rows
+    found = contracts.check_run_plan(index, run_ord=ro.reshape(-1),
+                                     tq=tq, tag="mutated")
+    check("(e) overlapping-run corruption is caught",
+          any(f.rule == "run-partition" for f in found),
+          "no run-partition finding")
+
     if _FAILED:
-        print(f"mutation check: FAIL ({len(_FAILED)} of 6)", file=sys.stderr)
+        print(f"mutation check: FAIL ({len(_FAILED)} of 8)", file=sys.stderr)
         return 1
-    print("mutation check: OK (6/6)")
+    print("mutation check: OK (8/8)")
     return 0
 
 

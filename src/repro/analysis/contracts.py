@@ -28,6 +28,13 @@ Contracts proved per index (all host-side, no kernel launches):
                        probe key (up to 2 above the largest real key) and
                        a padded build's out-of-set sentinel cell stay
                        strictly below the dtype-max padding sentinel
+  C10 run-partition    every cell-run plan the fused drivers can launch
+                       (DESIGN.md S11) is a true partition of its rows
+                       into per-tile runs of ONE cell each: ordinals
+                       reset at tile starts, advance by at most one, and
+                       never merge two cells into one run (which would
+                       evaluate the second cell's queries against the
+                       first cell's resident window)
 
 plus, for a slab partition (C7/C8): k-hop halo reach covers every
 eps-close slab pair, and ``exact_halo_capacity`` covers the brute-force
@@ -360,10 +367,127 @@ def check_vmem(index, *, merged: bool, plan=None, tiles=None,
     return out
 
 
+def _oracle_cell_of_row(index) -> np.ndarray:
+    """Independent A-order row -> cell rank map: derived from the CSR
+    ``cell_start`` boundaries by binary search, NOT from the stored
+    ``point_cell_rank`` (whose consistency is exactly what C10 proves)."""
+    ncells = int(index.num_cells)
+    starts = np.asarray(index.cell_start[:ncells]).astype(np.int64)
+    rows = np.arange(int(index.num_points), dtype=np.int64)
+    return np.searchsorted(starts, rows, side="right") - 1
+
+
+def _validate_run_ord(run_ord: np.ndarray, cells: np.ndarray, tq: int,
+                      site: str) -> list:
+    """Core C10 validation of ONE launch's run_ord against the oracle
+    per-row cell ids (same length, pad rows already carry their clamped
+    row's cell)."""
+    out = []
+    ro = np.asarray(run_ord).astype(np.int64)
+    if tq <= 0 or ro.size % tq:
+        return [Finding(_AN, "run-partition", site,
+                        f"run plan length {ro.size} is not a multiple of "
+                        f"the query tile tq={tq}")]
+    o = ro.reshape(-1, tq)
+    c = np.asarray(cells).astype(np.int64).reshape(-1, tq)
+    if o.size and np.any(o[:, 0] != 0):
+        t = int(np.flatnonzero(o[:, 0] != 0)[0])
+        out.append(Finding(
+            _AN, "run-partition", f"{site}:tile{t}",
+            f"run ordinal does not reset at tile {t} start (got "
+            f"{int(o[t, 0])}): the kernel's slot phase would leak across "
+            f"the tile boundary"))
+    d = np.diff(o, axis=1)
+    if np.any((d < 0) | (d > 1)):
+        t, r = [int(x[0]) for x in np.nonzero((d < 0) | (d > 1))]
+        out.append(Finding(
+            _AN, "run-partition", f"{site}:tile{t}:row{r + 1}",
+            f"run ordinal steps by {int(d[t, r])} at tile {t} row "
+            f"{r + 1} (must be 0 or 1): rows would skip or rewind the "
+            f"double-buffered window slots"))
+        return out   # step checks below assume sane ordinals
+    changed = c[:, 1:] != c[:, :-1]
+    merged_runs = (d == 0) & changed
+    if np.any(merged_runs):
+        t, r = [int(x[0]) for x in np.nonzero(merged_runs)]
+        out.append(Finding(
+            _AN, "run-partition", f"{site}:tile{t}:row{r + 1}",
+            f"rows of cells {int(c[t, r])} and {int(c[t, r + 1])} share "
+            f"run {int(o[t, r])} in tile {t}: the second cell's queries "
+            f"would be refined against the first cell's resident window "
+            f"(overlapping runs)"))
+    split_cell = (d == 1) & ~changed
+    if np.any(split_cell):
+        t, r = [int(x[0]) for x in np.nonzero(split_cell)]
+        out.append(Finding(
+            _AN, "run-partition", f"{site}:tile{t}:row{r + 1}",
+            severity=SEV_WARNING,
+            message=f"cell {int(c[t, r])} is split across runs "
+                    f"{int(o[t, r])} and {int(o[t, r + 1])} inside tile "
+                    f"{t}: correct but re-gathers a resident window "
+                    f"(run maximality)"))
+    return out
+
+
+def check_run_plan(index, *, merged: bool = True, plan=None, tiles=None,
+                   run_ord=None, tq: Optional[int] = None,
+                   tag: str = "index") -> list:
+    """C10: cell-run plans are exact partitions (DESIGN.md S11).
+
+    Default mode rebuilds every run plan the fused self-join drivers can
+    launch -- the whole-range launch plus each occupancy bucket's
+    composed plan -- through ``grid.cell_run_plan`` on the stored
+    ``point_cell_rank``, then validates each against cell ids re-derived
+    INDEPENDENTLY from the CSR boundaries (``_oracle_cell_of_row``), so
+    a bug in either the rank array or the run planner is caught.
+    ``run_ord``/``tq`` inject one tampered plan through the same seam
+    the mutation harness uses (validated over A-order rows, pad rows
+    clamped to the last row -- the drivers' padding convention).
+    """
+    from repro.core.grid import cell_run_plan, occupancy_plan, round_up
+
+    npts = int(index.num_points)
+    if npts == 0:
+        return []
+    oracle = _oracle_cell_of_row(index)
+    if run_ord is not None:
+        if tq is None:
+            raise ValueError("check_run_plan(run_ord=...) needs tq")
+        pos = np.minimum(np.arange(np.asarray(run_ord).size), npts - 1)
+        return _validate_run_ord(run_ord, oracle[pos], int(tq),
+                                 f"{tag}:injected")
+    rank = np.asarray(index.point_cell_rank).astype(np.int64)
+    if plan is None:
+        plan = occupancy_plan(index, merged=merged)
+    if tiles is None:
+        tiles = _plan_tiles(index, plan)
+    out = []
+    for cap, sel in zip(plan.caps, plan.sel):
+        t = int(tiles[int(cap)])
+        if sel is None:
+            qp = round_up(npts, t)
+            pos = np.minimum(np.arange(qp), npts - 1)
+            site = f"{tag}:merged={merged}:all:c{int(cap)}"
+        else:
+            sel = np.asarray(sel)
+            if not sel.size:
+                continue
+            qp = round_up(sel.size, t)
+            pos = np.zeros(qp, np.int64)
+            pos[: sel.size] = sel   # pad rows group with row 0's cell,
+            pos[sel.size:] = 0      # matching the driver (their windows
+                                    # are zeroed, so the grouping is inert)
+        if sel is not None:
+            site = f"{tag}:merged={merged}:bucket:c{int(cap)}"
+        ro = cell_run_plan(rank[pos], t).run_ord
+        out += _validate_run_ord(ro, oracle[pos], t, site)
+    return out
+
+
 def prove_index_contracts(index, *, merged: Optional[bool] = None,
                           plan=None, tiles=None,
                           tag: str = "index") -> list:
-    """All per-index contracts (C1-C6, C9). ``merged=None`` proves both
+    """All per-index contracts (C1-C6, C9, C10). ``merged=None`` proves both
     sweep modes; ``plan``/``tiles`` override the planner outputs (the
     mutation harness injects tampered plans through exactly this seam)."""
     modes = (False, True) if merged is None else (bool(merged),)
@@ -375,6 +499,8 @@ def prove_index_contracts(index, *, merged: Optional[bool] = None,
         out += check_slot_base(index, merged=m, plan=plan, tiles=tiles,
                                tag=tag)
         out += check_vmem(index, merged=m, plan=plan, tiles=tiles, tag=tag)
+        out += check_run_plan(index, merged=m, plan=plan, tiles=tiles,
+                              tag=tag)
     return out
 
 

@@ -726,6 +726,128 @@ def neighbor_rank(index: GridIndex, query_keys: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Cell-run plans (DESIGN.md S11): queries sharing a grid cell have identical
+# window descriptors for EVERY stencil offset (both descriptor families above
+# derive (win_start, win_count) purely from the query's cell rank), so the
+# fused kernel can gather each cell's candidate window once per RUN of
+# co-located query rows instead of once per row -- the paper's duplicate-
+# search-removal (SIV-C) applied to the DMA stream.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunPlan:
+    """Cell-run partition of one fused launch's query rows.
+
+    ``run_ord[i]`` is row i's run ordinal WITHIN its tq-tile: it resets to 0
+    at every tile boundary and increments by exactly 1 where the row's cell
+    identity changes, so rows with equal ordinals inside a tile form one run
+    and (by the descriptor purity argument above) share ``win_start`` /
+    ``win_count`` columns for all offsets. The run-loop kernel derives its
+    DMA schedule entirely from this array (head = ordinal change, slot =
+    ordinal mod 2); ``n_runs`` / ``run_lengths`` are the host-side
+    accounting behind ``JoinStats.dma_windows_issued`` and the bench
+    run-length histogram.
+    """
+
+    run_ord: np.ndarray       # (qp,) int32 per-tile run ordinals
+    n_runs: int               # total runs across all tiles
+    run_lengths: np.ndarray   # (n_runs,) int32 rows per run
+
+
+def cell_run_plan(cell_of_row: np.ndarray, tq: int) -> RunPlan:
+    """Partition a launch's rows into maximal same-cell runs, per tile.
+
+    ``cell_of_row`` is any per-row cell identity in launch order -- the
+    self-join drivers use ``point_cell_rank`` at each row's sorted
+    position, the external serving path the (sorted) query batch's cell
+    coordinates collapsed to group ids. Rows are grouped while the
+    identity repeats; runs additionally split at ``tq``-tile boundaries
+    because the kernel's grid iterates tiles (per-tile DMA warm-up and
+    outputs), which is why ``run_ord`` can reset per tile.
+
+    The partition is exact: every row belongs to exactly one run, ordinals
+    within a tile start at 0 and step by {0, 1}, and a step of 1 happens
+    precisely where the cell identity changes. ``analysis.contracts.
+    check_run_plan`` (C10) re-proves this against an independently derived
+    cell-of-row oracle; tests/test_cell_runs.py fuzzes it.
+    """
+    ids = np.asarray(cell_of_row)
+    qp = ids.shape[0]
+    if tq <= 0 or qp % tq:
+        raise ValueError(f"run plan rows {qp} must be a positive multiple "
+                         f"of tq={tq}")
+    head = np.ones(qp, bool)
+    head[1:] = ids[1:] != ids[:-1]
+    head[np.arange(0, qp, tq)] = True
+    run_ord = (np.cumsum(head.reshape(-1, tq), axis=1, dtype=np.int64) - 1)
+    starts = np.flatnonzero(head)
+    lengths = np.diff(np.append(starts, qp)).astype(np.int32)
+    return RunPlan(run_ord=run_ord.reshape(-1).astype(np.int32),
+                   n_runs=int(starts.size),
+                   run_lengths=lengths)
+
+
+@partial(jax.jit, static_argnames=("merged",))
+def _cell_window_table_device(index: GridIndex, deltas, *, merged: bool):
+    """Per-CELL window descriptor tables, shape (n_off, num_points).
+
+    Column r holds the (win_start, win_count, win_cells) triple of cell
+    rank r -- the same arithmetic as ``window_descriptors_at`` /
+    ``range_window_descriptors_at`` evaluated once per CELL instead of
+    once per query row. Columns beyond ``num_cells`` are dead (count 0):
+    they are only ever gathered through clamped padding rows, whose
+    counts the preps re-zero anyway. Computing the table once per index
+    and gathering per launch removes the per-launch searchsorted over
+    (n_off x rows) -- the paper's duplicate-search removal (SIV-C) on the
+    descriptor side, feeding the run-loop kernel's DMA-side dedup.
+    """
+    npts = index.num_points
+    valid = jnp.arange(npts) < index.num_cells
+    own_key = jnp.where(valid, index.cell_keys, 0)
+    if merged:
+        dtab, lo_off, hi_off = deltas
+        dim_last = index.dims.astype(jnp.int64)[-1]
+        q_last = own_key % dim_last
+        base = own_key[None, :] + dtab[:, None]
+        lo = jnp.maximum(lo_off[:, None], -q_last[None, :])
+        hi = jnp.minimum(hi_off[:, None], dim_last - 1 - q_last[None, :])
+        lo_rank = jnp.searchsorted(index.cell_keys, base + lo,
+                                   side="left").astype(jnp.int32)
+        hi_rank = jnp.searchsorted(index.cell_keys, base + hi,
+                                   side="right").astype(jnp.int32)
+        live = (hi_rank > lo_rank) & valid[None, :]
+        start = _rank_to_point(index, lo_rank)
+        end = _rank_to_point(index, hi_rank)
+        ws = jnp.where(live, start, 0).astype(jnp.int32)
+        wc = jnp.where(live, end - start, 0).astype(jnp.int32)
+        wcells = jnp.where(live, hi_rank - lo_rank, 0).astype(jnp.int32)
+        return ws, wc, wcells
+    qk = own_key[None, :] + deltas[:, None]
+    nbr = neighbor_rank(index, qk)
+    live = (nbr >= 0) & valid[None, :]
+    nbr_c = jnp.maximum(nbr, 0)
+    ws = jnp.where(live, index.cell_start[nbr_c], 0).astype(jnp.int32)
+    wc = jnp.where(live, index.cell_count[nbr_c], 0).astype(jnp.int32)
+    wcells = (wc > 0).astype(jnp.int32)
+    return ws, wc, wcells
+
+
+def cell_window_tables(index: GridIndex, deltas, *, merged: bool, tag):
+    """Cached per-cell descriptor tables (see ``_cell_window_table_device``).
+
+    ``deltas`` is the linearized offset table (unmerged) or the
+    ``(dtab, lo_off, hi_off)`` triple (merged); ``tag`` disambiguates
+    offset tables that share ``merged`` (the drivers pass the unicomp
+    flag). Cached per index via ``index_cached`` so repeated sweeps and
+    the run-loop's steady state never recompute the searchsorted plane.
+    """
+    return index_cached(
+        index, f"wintab/{bool(merged)}/{tag}",
+        lambda: _cell_window_table_device(index, deltas, merged=merged))
+
+
+# ---------------------------------------------------------------------------
 # Occupancy bucketing (DESIGN.md S6): partition query rows into candidate-
 # capacity classes so the fused kernel pads each window to its BUCKET's
 # capacity instead of the global max_per_cell. On skewed data the global max

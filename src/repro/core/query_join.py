@@ -26,6 +26,15 @@ which is what the old ``@jax.jit``-closure-per-call ``range_query`` paid.
 ``TRACE_EVENTS`` / ``executable_cache_stats`` make that property observable
 (asserted by launch/serve.py's smoke and tests/test_query_join.py).
 
+Cell-run batching (DESIGN.md S11): by default each request batch is
+stably sorted by the query's clipped grid-cell coordinate TUPLE before
+launch, so co-located queries form contiguous runs and the fused kernel
+(``run_loop=True``) gathers each run's candidate window once instead of
+once per row. The inverse permutation restores request row numbering on
+the counts and the emitted pair query-ids, so answers are identical to
+the unsorted launch (``prepare(index, run_loop=False)`` keeps the
+row-loop path as the parity oracle).
+
 Typical use:
 
     index = build_grid(points, eps)          # once (device build)
@@ -47,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import grid as grid_lib
-from repro.core.grid import (GridIndex, build_grid,
+from repro.core.grid import (GridIndex, build_grid, cell_run_plan,
                              round_up as _round_up)
 from repro.core.stencil import stencil_offsets
 
@@ -300,12 +309,16 @@ class PendingJoin:
 
     def __init__(self, prepared: "PreparedJoin", launches: list, *,
                  wc, qp: int, n_queries: int, return_pairs: bool,
-                 sort_pairs: bool, emit: Optional[str], with_stats: bool):
+                 sort_pairs: bool, emit: Optional[str], with_stats: bool,
+                 perm: Optional[np.ndarray] = None):
         self._pj = prepared
         self._launches = launches
         self._wc = wc
         self._qp = qp
         self._n_queries = n_queries
+        # cell-sort permutation (DESIGN.md S11): launch row i served
+        # request row perm[i]; None when the batch ran unsorted
+        self._perm = perm
         self._return_pairs = return_pairs
         self._sort_pairs = sort_pairs
         self._emit = emit
@@ -335,17 +348,20 @@ class PendingJoin:
         pj, n_queries = self._pj, self._n_queries
         counts_np = np.zeros(n_queries, np.int32)
         chunks = []
+        perm = self._perm
         for ln in self._launches:
             counts_b = np.asarray(ln.counts)[: ln.n_rows]
-            if ln.rows is None:
-                counts_np[: ln.n_rows] = counts_b
-            else:
-                counts_np[ln.rows] = counts_b
+            rows = (np.arange(ln.n_rows) if ln.rows is None else ln.rows)
+            if perm is not None:
+                rows = perm[rows]   # sorted-batch row -> request row
+            counts_np[rows] = counts_b
             if self._return_pairs:
                 p = pj._emit(self._emit, ln.hits, ln.counts, ln.base, ln.ws,
                              c=ln.c, tq=ln.tile, total=int(counts_b.sum()))
                 if ln.rows is not None:
-                    p[:, 0] = ln.rows[p[:, 0]]   # launch row -> request row
+                    p[:, 0] = ln.rows[p[:, 0]]   # launch row -> batch row
+                if perm is not None:
+                    p[:, 0] = perm[p[:, 0]]      # batch row -> request row
                 chunks.append(p)
         pairs = None
         if self._return_pairs:
@@ -383,7 +399,8 @@ class PreparedJoin:
     """
 
     def __init__(self, index: GridIndex,
-                 merge_last_dim: Optional[bool] = None):
+                 merge_last_dim: Optional[bool] = None,
+                 run_loop: bool = True):
         from repro.core.grid import capacity_classes, external_range_cap
         from repro.core.stencil import merged_stencil_offsets
         from repro.kernels import autotune
@@ -424,6 +441,9 @@ class PreparedJoin:
         self.tiles = {cb: min(autotune.fused_tile(self.n_dims, cb), _TQ)
                       for cb in self.classes}
         self.bucketed = len(self.classes) > 1
+        # cell-run batching (DESIGN.md S11): sort request batches by grid
+        # cell so the fused kernel gathers each run's window once
+        self.run_loop = bool(run_loop)
         self.q_pos0: dict = {}   # zeros (qp,) per launch shape (external)
 
     def _pad_queries(self, q: np.ndarray) -> tuple[jax.Array, int]:
@@ -452,6 +472,18 @@ class PreparedJoin:
             z = jnp.zeros((qp,), jnp.int32)
             self.q_pos0[qp] = z
         return z
+
+    def _launch_run_ord(self, gid: Optional[np.ndarray], qp_b: int,
+                        tile: int) -> jax.Array:
+        """run_ord scalar-prefetch for one launch: the launch rows' cell
+        group ids padded to the launch shape with the edge id (pad rows
+        join the LAST run -- inert, their window counts are zeroed by the
+        q_limit / bucket masks). ``gid`` is None for an empty batch."""
+        if gid is None or not gid.size:
+            return self._q_pos(qp_b)   # zeros: one run per tile
+        ids = np.full(qp_b, gid[-1], np.int64)
+        ids[: gid.size] = gid
+        return jnp.asarray(cell_run_plan(ids, tile).run_ord)
 
     def _emit(self, emit, hits, counts, base, ws, *, c: int, tq: int,
               total: int) -> np.ndarray:
@@ -497,6 +529,20 @@ class PreparedJoin:
                 f"query eps {eps} exceeds index build eps {self.eps}; the "
                 f"adjacent-cell stencil only covers the build radius")
         n_queries = q.shape[0]
+        perm = gid = None
+        if self.run_loop and n_queries:
+            # Cell-run batching (DESIGN.md S11): stable sort by the
+            # clipped cell-coordinate TUPLE -- exact cell identity (a
+            # linearized key could alias distinct out-of-grid cells) --
+            # so co-located queries form contiguous runs. Out-of-grid
+            # clip collisions are safe: such queries have no live window.
+            qc = np.clip(np.floor((q - self.gmin_np[None, :]) / self.eps),
+                         -(1 << 24), 1 << 24).astype(np.int64)
+            perm = np.lexsort(qc.T)
+            q, qc = q[perm], qc[perm]
+            head = np.ones(n_queries, bool)
+            head[1:] = np.any(qc[1:] != qc[:-1], axis=1)
+            gid = np.cumsum(head) - 1      # per-row cell group id
         q_dev, qp = self._pad_queries(q)
         if self.merged:
             ws, wc = _external_range_windows(
@@ -511,11 +557,14 @@ class PreparedJoin:
         launches = []
         if not self.bucketed:
             tile = self.tiles[self.c]
+            ro = (self._launch_run_ord(gid, qp, tile)
+                  if self.run_loop else None)
             hits, counts, base = ops.fused_join_hits(
                 self.points_pad, q_dev, ws, wc, self.is_zero,
                 self._q_pos(qp), eps, c=self.c, n_real=self.n_dims,
                 unicomp=False, external=True, merged=self.merged, tq=tile,
-                keep_hits=return_pairs, method=method)
+                keep_hits=return_pairs, run_ord=ro,
+                run_loop=self.run_loop, method=method)
             launches.append(_FusedLaunch(
                 rows=None, n_rows=n_queries, hits=hits, counts=counts,
                 base=base, ws=ws, c=self.c, tile=tile))
@@ -534,18 +583,23 @@ class PreparedJoin:
                 ws_b, wc_b, q_b = _bucket_select(
                     ws, wc, q_dev, jnp.asarray(sel),
                     jnp.asarray(rows.size, jnp.int32))
+                # rows ascend batch order, so equal-cell rows stay
+                # contiguous within the class launch
+                ro = (self._launch_run_ord(gid[rows], qp_b, tile)
+                      if self.run_loop else None)
                 hits, counts, base = ops.fused_join_hits(
                     self.points_pad, q_b, ws_b, wc_b, self.is_zero,
                     self._q_pos(qp_b), eps, c=cb, n_real=self.n_dims,
                     unicomp=False, external=True, merged=self.merged,
-                    tq=tile, keep_hits=return_pairs, method=method)
+                    tq=tile, keep_hits=return_pairs, run_ord=ro,
+                    run_loop=self.run_loop, method=method)
                 launches.append(_FusedLaunch(
                     rows=rows, n_rows=rows.size, hits=hits, counts=counts,
                     base=base, ws=ws_b, c=cb, tile=tile))
         return PendingJoin(
             self, launches, wc=wc, qp=qp, n_queries=n_queries,
             return_pairs=return_pairs, sort_pairs=sort_pairs, emit=emit,
-            with_stats=with_stats)
+            with_stats=with_stats, perm=perm)
 
     def join(self, queries, *, eps: Optional[float] = None,
              return_pairs: bool = True, sort_pairs: bool = True,
@@ -618,12 +672,18 @@ class PreparedJoin:
                         ws, wc, q_pad, jnp.zeros((s,), jnp.int32),
                         jnp.asarray(0, jnp.int32))
                     for keep in variants:
+                        # zeros run_ord (one run per tile) is a valid
+                        # plan; only the run_loop STATIC flag must match
+                        # steady state for the warm to cover it
                         _, counts, _ = ops.fused_join_hits(
                             self.points_pad, q_b, ws_b, wc_b, self.is_zero,
                             self._q_pos(s), self.eps, c=cb,
                             n_real=self.n_dims, unicomp=False,
                             external=True, merged=self.merged, tq=tile,
-                            keep_hits=keep)
+                            keep_hits=keep,
+                            run_ord=(self._q_pos(s) if self.run_loop
+                                     else None),
+                            run_loop=self.run_loop)
                         np.asarray(counts)   # block: compile now, not later
                     s *= 2
         # single-class requests pad with _TQ too (class tiles are clamped
@@ -632,13 +692,17 @@ class PreparedJoin:
 
 
 def prepare(index: GridIndex,
-            merge_last_dim: Optional[bool] = None) -> PreparedJoin:
+            merge_last_dim: Optional[bool] = None,
+            run_loop: bool = True) -> PreparedJoin:
     """Prepare a grid index for repeated external-query joins.
 
     ``merge_last_dim`` (default on) serves requests through the 3^(n-1)
     merged-range stencil (DESIGN.md S7); ``False`` keeps the per-cell
-    3^n sweep as the parity oracle."""
-    return PreparedJoin(index, merge_last_dim=merge_last_dim)
+    3^n sweep as the parity oracle. ``run_loop`` (default on) cell-sorts
+    request batches and shares each run's window gather (DESIGN.md S11);
+    ``False`` keeps the unsorted row-loop launch as the parity oracle."""
+    return PreparedJoin(index, merge_last_dim=merge_last_dim,
+                        run_loop=run_loop)
 
 
 def epsilon_join(queries, points, eps: Optional[float] = None, *,

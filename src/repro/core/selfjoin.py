@@ -66,11 +66,19 @@ class JoinStats:
     candidates_checked: int   # candidate slots with a real point
     offsets: int              # stencil offsets swept
     # sweep chosen by the routing table (kernels/autotune.py):
-    #   'dense'   occupancy-bucketed fused sweep (full window per probe)
-    #   'compact' per-offset live-query packing before the gather (TPU)
-    #   'sparse'  probe-compacted counter (empty-neighbor regime, off-TPU)
-    #   'jnp'     reference dense counter (fused plan measured slower)
+    #   'dense'     occupancy-bucketed fused sweep (full window per probe)
+    #   'dense-run' fused sweep with cell-run DMA dedup (DESIGN.md S11)
+    #   'compact'   per-offset live-query packing before the gather (TPU)
+    #   'sparse'    probe-compacted counter (empty-neighbor regime, off-TPU)
+    #   'jnp'       reference dense counter (fused plan measured slower)
     route: str = "dense"
+    # cell-run DMA accounting (DESIGN.md S11): window gathers the fused
+    # sweep issued across all launches and offsets (n_off * runs with the
+    # run loop, n_off * rows without), and the HBM->VMEM traffic the run
+    # loop avoided vs one gather per row. Host-side analytic counters,
+    # exact for the kernel's DMA schedule on any backend.
+    dma_windows_issued: int = 0
+    dma_bytes_saved: int = 0
 
     @property
     def n_offsets(self) -> int:
@@ -409,22 +417,112 @@ def _fused_pad(index: GridIndex, *, q_size: int, c: int,
                       gid=gid), qp
 
 
+def _host_cell_ranks(index: GridIndex) -> np.ndarray:
+    """Host copy of ``point_cell_rank``, cached per index -- run planning
+    (DESIGN.md S11) happens on the host alongside the launch schedule."""
+    from repro.core.grid import index_cached
+
+    return index_cached(index, "rank_np",
+                        lambda: np.asarray(index.point_cell_rank))
+
+
+def _launch_run_plan(index: GridIndex, sel: Optional[np.ndarray],
+                     q_start: int, *, qp: int, tile: int):
+    """Cell-run plan of one fused launch (DESIGN.md S11).
+
+    Row identities are the queries' cell RANKS at the same clamped
+    positions the descriptor preps resolve windows from, so a row and its
+    windows can never disagree about the cell. Padding rows group with
+    whatever cell their clamped position lands in -- their window counts
+    are zeroed by the preps, so any grouping of them is inert (the kernel
+    masks every slot of a count-0 window).
+    """
+    from repro.core.grid import cell_run_plan
+
+    rank = _host_cell_ranks(index)
+    npts = index.num_points
+    if sel is None:
+        pos = int(q_start) + np.arange(qp)
+    else:
+        pos = np.zeros(qp, np.int64)
+        pos[:sel.shape[0]] = sel
+    return cell_run_plan(rank[np.minimum(pos, npts - 1)], tile)
+
+
+@partial(jax.jit, static_argnames=("qp", "q_limit"))
+def _fused_table_prep(index: GridIndex, points_pad: jax.Array, tab_ws,
+                      tab_wc, tab_wcells, q_start: jax.Array, *, qp: int,
+                      q_limit: int):
+    """Run-mode descriptor prep for a contiguous batch: GATHER from the
+    per-cell tables (``grid.cell_window_tables``) instead of re-running
+    the searchsorted plane per launch -- the descriptor half of the
+    paper's duplicate-search removal (SIV-C). Produces bit-identical
+    hits/counts/work-counters to ``_fused_prep``: table columns replicate
+    the per-row descriptor math per cell rank, and the only rows whose
+    ``win_start`` can differ are dead ones (count forced to 0), which no
+    consumer reads."""
+    from repro.kernels.fused_join import NP_PAD
+
+    npts = index.num_points
+    q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(qp, dtype=jnp.int32)
+    rank = index.point_cell_rank[jnp.minimum(q_pos, npts - 1)]
+    ok = (q_pos < npts) & (jnp.arange(qp, dtype=jnp.int32) < q_limit)
+    ws = tab_ws[:, rank]
+    wc = jnp.where(ok[None, :], tab_wc[:, rank], 0)
+    wcells = jnp.where(ok[None, :], tab_wcells[:, rank], 0)
+    q_batch = jax.lax.dynamic_slice(
+        points_pad, (q_start, jnp.asarray(0, q_start.dtype)), (qp, NP_PAD))
+    return ws, wc, wcells, q_batch, q_pos
+
+
+@partial(jax.jit, static_argnames=("qp",))
+def _fused_table_bucket_prep(index: GridIndex, points_pad: jax.Array,
+                             tab_ws, tab_wc, tab_wcells, sel: jax.Array,
+                             nsel: jax.Array, *, qp: int):
+    """Run-mode descriptor prep for an occupancy bucket (see
+    ``_fused_table_prep``); mirrors ``_fused_bucket_prep`` row for row."""
+    npts = index.num_points
+    q_ok = jnp.arange(qp, dtype=jnp.int32) < nsel
+    q_pos = jnp.minimum(sel.astype(jnp.int32), npts - 1)
+    rank = index.point_cell_rank[q_pos]
+    ws = tab_ws[:, rank]
+    wc = jnp.where(q_ok[None, :], tab_wc[:, rank], 0)
+    wcells = jnp.where(q_ok[None, :], tab_wcells[:, rank], 0)
+    q_batch = points_pad[q_pos]
+    return ws, wc, wcells, q_batch, q_pos
+
+
 def _fused_batch_run(index: GridIndex, points_pad, deltas, is_zero, q_start,
                      *, qp: int, q_size: int, c: int, unicomp: bool,
                      keep_hits: bool, method: Optional[str] = None,
                      tq: int = 128, merged: bool = False,
-                     gid_pairs: bool = False):
-    """One contiguous query batch through the fused kernel."""
+                     gid_pairs: bool = False, run_plan=None):
+    """One contiguous query batch through the fused kernel.
+
+    ``run_plan`` (a ``grid.RunPlan`` for THIS launch's rows) switches on
+    the cell-run path (DESIGN.md S11): descriptors gather from the cached
+    per-cell tables and the kernel DMAs one window per run.
+    """
+    from repro.core.grid import cell_window_tables
     from repro.kernels import ops
 
-    ws, wc, wcells, q_batch, q_pos = _fused_prep(
-        index, points_pad, deltas, jnp.asarray(q_start, jnp.int32), qp=qp,
-        q_limit=max(q_size, 1), merged=merged)
+    if run_plan is not None:
+        tab_ws, tab_wc, tab_wcells = cell_window_tables(
+            index, deltas, merged=merged, tag=unicomp)
+        ws, wc, wcells, q_batch, q_pos = _fused_table_prep(
+            index, points_pad, tab_ws, tab_wc, tab_wcells,
+            jnp.asarray(q_start, jnp.int32), qp=qp,
+            q_limit=max(q_size, 1))
+    else:
+        ws, wc, wcells, q_batch, q_pos = _fused_prep(
+            index, points_pad, deltas, jnp.asarray(q_start, jnp.int32),
+            qp=qp, q_limit=max(q_size, 1), merged=merged)
     hits, counts, base = ops.fused_join_hits(
         points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
         index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
         merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits,
-        method=method)
+        run_ord=None if run_plan is None else jnp.asarray(run_plan.run_ord),
+        run_loop=run_plan is not None, method=method)
     return ws, wc, wcells, hits, counts, base, q_pos
 
 
@@ -432,21 +530,33 @@ def _fused_bucket_launch(index: GridIndex, points_pad, deltas, is_zero,
                          sel: np.ndarray, *, qp: int, c: int, unicomp: bool,
                          keep_hits: bool, method: Optional[str] = None,
                          tq: int = 128, merged: bool = False,
-                         gid_pairs: bool = False):
-    """One occupancy bucket through the fused kernel at ITS capacity."""
+                         gid_pairs: bool = False, run_plan=None):
+    """One occupancy bucket through the fused kernel at ITS capacity.
+    ``run_plan`` as in ``_fused_batch_run`` (bucket selections keep cells
+    contiguous: a cell's rows share window counts, hence a capacity class,
+    and ``BucketPlan.sel`` is ascending A-order)."""
+    from repro.core.grid import cell_window_tables
     from repro.kernels import ops
 
     nsel = sel.shape[0]
     sel_pad = np.zeros(qp, np.int32)
     sel_pad[:nsel] = sel
-    ws, wc, wcells, q_batch, q_pos = _fused_bucket_prep(
-        index, points_pad, deltas, jnp.asarray(sel_pad),
-        jnp.asarray(nsel, jnp.int32), qp=qp, merged=merged)
+    if run_plan is not None:
+        tab_ws, tab_wc, tab_wcells = cell_window_tables(
+            index, deltas, merged=merged, tag=unicomp)
+        ws, wc, wcells, q_batch, q_pos = _fused_table_bucket_prep(
+            index, points_pad, tab_ws, tab_wc, tab_wcells,
+            jnp.asarray(sel_pad), jnp.asarray(nsel, jnp.int32), qp=qp)
+    else:
+        ws, wc, wcells, q_batch, q_pos = _fused_bucket_prep(
+            index, points_pad, deltas, jnp.asarray(sel_pad),
+            jnp.asarray(nsel, jnp.int32), qp=qp, merged=merged)
     hits, counts, base = ops.fused_join_hits(
         points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
         index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
         merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits,
-        method=method)
+        run_ord=None if run_plan is None else jnp.asarray(run_plan.run_ord),
+        run_loop=run_plan is not None, method=method)
     return ws, wc, wcells, hits, counts, base, q_pos
 
 
@@ -585,6 +695,18 @@ def _fused_launches(index: GridIndex, *, n_batches: int,
     return launches, points_pad, c_glob
 
 
+def _join_run_loop(index: GridIndex) -> bool:
+    """Default run-loop decision for the pair-emitting fused join
+    (DESIGN.md S11): sharing one window gather across a run only saves
+    traffic when cells hold >= 2 queries on average -- below that, runs
+    degenerate to rows and the run bookkeeping is pure overhead. The
+    COUNT path instead races 'dense-run' as a measured autotune candidate;
+    bit-parity with the row loop is guaranteed (and CI-gated) either way,
+    so this is purely a performance choice.
+    """
+    return index.num_points >= 2 * max(int(index.num_cells), 1)
+
+
 def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
                      n_batches: int = 1, method: Optional[str] = None,
                      emit: Optional[str] = None,
@@ -592,7 +714,8 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
                      merged: bool = True,
                      row_ok: Optional[np.ndarray] = None,
                      ids: Optional[np.ndarray] = None,
-                     gid_pairs: bool = False):
+                     gid_pairs: bool = False,
+                     run_loop: Optional[bool] = None):
     """Single-pass count -> fill driver for distance_impl='fused'.
 
     Per launch (an occupancy bucket chunk, or a contiguous batch when the
@@ -620,9 +743,17 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
     UNICOMP/self masks compare global ids riding a pad lane instead of
     local sorted positions). The single-device join is the special case
     row_ok=None, ids=index.order, gid_pairs=False.
+
+    ``run_loop`` (DESIGN.md S11): True routes every launch through the
+    cell-run DMA dedup (one window gather per run of co-located queries,
+    per-cell descriptor tables); None (default) decides by mean cell
+    occupancy (``_join_run_loop``). Pair sets are bit-identical either
+    way -- the run plan only regroups when each window is fetched.
     """
     if emit is None:
         emit = "device" if jax.default_backend() == "tpu" else "host"
+    if run_loop is None:
+        run_loop = _join_run_loop(index)
     if merged:
         deltas, is_zero = _merged_offset_tables(index, unicomp)
     else:
@@ -661,16 +792,19 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
     chunks = []
     prev = None
     for sel, q_start, q_size, qp, cap, tile in launches:
+        plan = (_launch_run_plan(index, sel, q_start, qp=qp, tile=tile)
+                if run_loop else None)
         if sel is None:
             ws, _, _, hits, counts, base, q_pos = _fused_batch_run(
                 index, points_pad, deltas, is_zero, q_start, qp=qp,
                 q_size=q_size, c=cap, unicomp=unicomp, keep_hits=True,
-                method=method, tq=tile, merged=merged, gid_pairs=gid_pairs)
+                method=method, tq=tile, merged=merged, gid_pairs=gid_pairs,
+                run_plan=plan)
         else:
             ws, _, _, hits, counts, base, q_pos = _fused_bucket_launch(
                 index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
                 unicomp=unicomp, keep_hits=True, method=method, tq=tile,
-                merged=merged, gid_pairs=gid_pairs)
+                merged=merged, gid_pairs=gid_pairs, run_plan=plan)
         if prev is not None:
             chunks.append(finish(prev))
         prev = (ws, hits, counts, base, q_pos, cap, tile)
@@ -692,7 +826,8 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
                            merged: bool = True,
                            row_ok: Optional[np.ndarray] = None,
                            ids: Optional[np.ndarray] = None,
-                           gid_pairs: bool = False) -> JoinStats:
+                           gid_pairs: bool = False,
+                           run_loop: bool = False) -> JoinStats:
     """Count-only fused sweep (keep_hits=False: no O(n_off*Q*C) buffer).
 
     Occupancy-bucketed by default; each bucket launch counts at ITS window
@@ -704,8 +839,16 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
     per-cell sweep (a merged window's cell count and length are exactly
     the sum of its constituent per-cell windows'); only ``offsets``
     shrinks to 3^(n-1).
+
+    ``run_loop`` (the 'dense-run' route, DESIGN.md S11) dedups the window
+    DMA per cell run; totals and work counters are bit-identical to the
+    row loop, and the DMA counters in the returned stats record the
+    schedule actually issued (``dma_windows_issued``) plus the gather
+    traffic avoided vs one window per row (``dma_bytes_saved``).
     """
     from repro.core.grid import global_window_cap
+    from repro.kernels.fused_join import NP_PAD
+    from repro.kernels.ops import _kernel_dtype
 
     if merged:
         deltas, is_zero = _merged_offset_tables(index, unicomp)
@@ -732,17 +875,28 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
             index, n_batches=1, bucketed=bucketed, merged=merged,
             row_ok=row_ok, gid=gid)
     total = cells = cands = 0
+    dma_windows = dma_saved = 0
+    dtype_bytes = np.dtype(_kernel_dtype(points_pad.dtype)).itemsize
     for sel, q_start, q_size, qp, cap, tile in launches:
+        plan = (_launch_run_plan(index, sel, q_start, qp=qp, tile=tile)
+                if run_loop else None)
+        if plan is None:
+            dma_windows += n_off * qp
+        else:
+            dma_windows += n_off * plan.n_runs
+            dma_saved += (n_off * (qp - plan.n_runs)
+                          * cap * NP_PAD * dtype_bytes)
         if sel is None:
             _, wc, wcells, _, counts, _, _ = _fused_batch_run(
                 index, points_pad, deltas, is_zero, q_start, qp=qp,
                 q_size=q_size, c=cap, unicomp=unicomp, keep_hits=False,
-                method=method, tq=tile, merged=merged, gid_pairs=gid_pairs)
+                method=method, tq=tile, merged=merged, gid_pairs=gid_pairs,
+                run_plan=plan)
         else:
             _, wc, wcells, _, counts, _, _ = _fused_bucket_launch(
                 index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
                 unicomp=unicomp, keep_hits=False, method=method, tq=tile,
-                merged=merged, gid_pairs=gid_pairs)
+                merged=merged, gid_pairs=gid_pairs, run_plan=plan)
         total += mult * int(counts.sum(dtype=jnp.int64))
         cells += int(wcells.sum(dtype=jnp.int64))
         cands += int(wc.sum(dtype=jnp.int64))
@@ -753,8 +907,55 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
         cells_visited=cells,
         candidates_checked=cands,
         offsets=n_off,
-        route="dense",
+        route="dense-run" if run_loop else "dense",
+        dma_windows_issued=dma_windows,
+        dma_bytes_saved=dma_saved,
     )
+
+
+def dma_window_stats(index: GridIndex, *, unicomp: bool = True,
+                     merged: bool = True,
+                     bucketed: Optional[bool] = None) -> dict:
+    """Analytic DMA-window accounting of one fused sweep's launch schedule
+    (DESIGN.md S11) -- no kernels run. Reports the window gathers a
+    row-loop sweep would issue (``n_off * rows``), the gathers the
+    run-loop sweep issues (``n_off * runs``), the HBM->VMEM bytes the
+    dedup avoids, the run-length histogram, and the mean cell occupancy
+    the reduction should track. The bench writes this into
+    BENCH_selfjoin.json's "dma" section and the CI smoke gates on it.
+    """
+    from repro.kernels.fused_join import NP_PAD
+    from repro.kernels.ops import _kernel_dtype
+
+    if merged:
+        deltas, _ = _merged_offset_tables(index, unicomp)
+        n_off = int(deltas.shape[1])
+    else:
+        deltas, _ = _offset_tables(index, unicomp)
+        n_off = int(deltas.shape[0])
+    launches, points_pad, _ = _fused_launches(
+        index, n_batches=1, bucketed=bucketed, merged=merged)
+    dtype_bytes = np.dtype(_kernel_dtype(points_pad.dtype)).itemsize
+    rows = runs = saved = 0
+    hist: dict = {}
+    for sel, q_start, q_size, qp, cap, tile in launches:
+        plan = _launch_run_plan(index, sel, q_start, qp=qp, tile=tile)
+        rows += n_off * qp
+        runs += n_off * plan.n_runs
+        saved += n_off * (qp - plan.n_runs) * cap * NP_PAD * dtype_bytes
+        lens, cnts = np.unique(plan.run_lengths, return_counts=True)
+        for ln, cnt in zip(lens, cnts):
+            hist[int(ln)] = hist.get(int(ln), 0) + int(cnt)
+    return {
+        "offsets": n_off,
+        "dma_windows_row": int(rows),
+        "dma_windows_run": int(runs),
+        "dma_bytes_saved": int(saved),
+        "reduction_factor": rows / max(runs, 1),
+        "mean_cell_occupancy": (index.num_points
+                                / max(int(index.num_cells), 1)),
+        "run_length_hist": {str(k): v for k, v in sorted(hist.items())},
+    }
 
 
 @partial(jax.jit, static_argnames=("qp",))
@@ -1274,9 +1475,11 @@ def self_join_count(
     for the workload class when one exists, a timed pass over the live
     candidates when tuning is enabled ($REPRO_AUTOTUNE=1), the occupancy
     heuristic otherwise. Routes: 'dense' (occupancy-bucketed fused sweep),
-    'compact' (per-offset live-query packing, TPU), 'sparse' (probe-
-    compacted counter for the empty-neighbor regime), 'jnp' (reference
-    dense counter -- the floor: routing can never pin a fused plan that
+    'dense-run' (the same sweep with cell-run DMA dedup, DESIGN.md S11;
+    measured-only -- the heuristic never picks it), 'compact' (per-offset
+    live-query packing, TPU), 'sparse' (probe-compacted counter for the
+    empty-neighbor regime), 'jnp' (reference dense counter -- the floor:
+    routing can never pin a fused plan that
     measures slower than the baseline). The chosen path is logged in
     ``JoinStats.route``; pass ``route=`` to override. 'dense'/'sparse'/
     'jnp' report identical work counters; 'compact' reports no per-cell
@@ -1297,7 +1500,7 @@ def self_join_count(
     sweep per cell.
     """
     routes = (None, "dense", "compact", "sparse", "jnp", "dense-flat",
-              "sparse-flat")
+              "sparse-flat", "dense-run")
     if route not in routes:
         raise ValueError(f"unknown route {route!r}; expected one of "
                          f"{routes[1:]}")
@@ -1321,11 +1524,13 @@ def self_join_count(
                     index, unicomp=unicomp,
                     merged=merged and route == "sparse"),
                 route=route)
-        if route in ("dense", "dense-flat"):
+        if route in ("dense", "dense-flat", "dense-run"):
             return dataclasses.replace(
                 _self_join_count_fused(
                     index, unicomp=unicomp, query_batch=query_batch,
-                    bucketed=bucketed, merged=merged and route == "dense"),
+                    bucketed=bucketed,
+                    merged=merged and route != "dense-flat",
+                    run_loop=route == "dense-run"),
                 route=route)
         # route == 'jnp': the fused plan measured slower than the reference
         # dense counter for this workload class -- run that, log the route.
@@ -1430,6 +1635,13 @@ def _auto_route_uncached(index: GridIndex, *, unicomp: bool,
                 index, unicomp=unicomp, bucketed=bucketed, merged=False)
             candidates["sparse-flat"] = lambda: _self_join_count_sparse(
                 index, unicomp=unicomp, merged=False)
+            # cell-run DMA dedup (DESIGN.md S11) competes for the same
+            # slot: totals are bit-identical to 'dense', so the run loop
+            # is a pure measured tradeoff (run bookkeeping + per-cell
+            # table gather vs one window DMA per query row)
+            candidates["dense-run"] = lambda: _self_join_count_fused(
+                index, unicomp=unicomp, bucketed=bucketed, merged=True,
+                run_loop=True)
         if jax.default_backend() == "tpu":
             candidates["compact"] = lambda: self_join_count_compact(
                 index.points_sorted, index.eps, unicomp=unicomp,

@@ -52,8 +52,10 @@ _ENV_MEASURE = "REPRO_AUTOTUNE"
 # wholesale instead of silently steering new code. v2: merged-range sweep
 # (DESIGN.md S7) -- tile entries are keyed on MERGED window capacities and
 # route entries carry the sweep mode, so every v1 entry (per-cell
-# capacities/offset counts) is stale.
-SCHEMA_VERSION = 2
+# capacities/offset counts) is stale. v3: cell-run DMA dedup (DESIGN.md
+# S11) adds the 'dense-run' candidate to the measured route table; v2
+# winners never raced it, so they must be re-measured.
+SCHEMA_VERSION = 3
 
 
 def cache_path() -> str:

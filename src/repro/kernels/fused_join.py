@@ -38,10 +38,25 @@ Outputs (for a query batch of Q_pad rows, C-slot windows, n_off offsets):
     slot_base (Q_pad,)          int32 -- per-tile exclusive scan of counts
 
 A ``reference`` lowering with identical semantics runs on backends without
-Mosaic (this container): it evaluates the same windows dimension-by-dimension
-(``(Q, C)`` gathers per coordinate, accumulated in place), so even the
-reference path never materializes a ``(B, C, n)`` candidate tensor. The
-Pallas kernel is validated against it in tests/test_fused_join.py.
+Mosaic (this container): it ``lax.scan``s the stencil offsets (mirroring the
+kernel's innermost offset axis) and evaluates each offset's full
+``(Q_pad, C)`` window plane at once -- squared distances accumulate in place
+over per-coordinate column gathers, so the reference path never materializes
+a ``(B, C, n)`` candidate tensor either, and UNICOMP/merged/gid masking is
+the shared ``_mask_hits``. The Pallas kernel is validated against it in
+tests/test_fused_join.py.
+
+Cell-run DMA dedup (DESIGN.md S11, ``run_loop=True``): a scalar-prefetched
+run-ordinal array (``grid.cell_run_plan``) groups each tile's rows into RUNS
+sharing a grid cell; since same-cell rows have identical windows for every
+offset, the window DMA advances once per run (slot = ordinal mod 2, still
+two slots / two semaphores; the current run's last row issues the next run's
+copy, the head row waits, interior rows reuse the resident slot) -- the
+paper's duplicate-search removal (SIV-C) applied to the gather stream. The
+reference lowering accepts and ignores the ordinals: evaluating every row
+against its OWN descriptors is exactly the run-loop's semantics whenever the
+run plan satisfies the shared-window contract (proven by
+``analysis.contracts.check_run_plan``), so bit-parity is structural.
 
 Merged-range sweeps (DESIGN.md S7): with ``merged=True`` the windows are
 last-dimension RANGE spans (up to three adjacent cells' contiguous points,
@@ -176,9 +191,10 @@ def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
-                  hits_ref, counts_ref, base_ref, win_ref, sem_ref,
-                  *, c, tq, n_real, unicomp, external, merged, gid_pairs):
+def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, ord_ref, eps2_ref, q_ref,
+                  pts_ref, hits_ref, counts_ref, base_ref, win_ref, sem_ref,
+                  *, c, tq, n_real, unicomp, external, merged, gid_pairs,
+                  run_loop):
     i = pl.program_id(0)           # query tile
     j = pl.program_id(1)           # stencil offset (innermost: q tile resident)
     n_off = pl.num_programs(1)
@@ -206,13 +222,34 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
     win_dma(0, 0).start()
 
     def row(r, _):
-        slot = jax.lax.rem(r, 2)
+        if run_loop:
+            # Cell-run DMA (DESIGN.md S11): rows with equal run ordinals
+            # share their window for every offset (grid.cell_run_plan
+            # contract), so the gather advances per RUN. slot = ordinal
+            # mod 2 alternates run to run; the run's LAST row issues the
+            # next run's copy (overlapping the remaining compute), the
+            # HEAD row waits, interior rows reuse the resident slot.
+            o = ord_ref[i * tq + r]
+            two = jnp.asarray(2, o.dtype)
+            slot = jax.lax.rem(o, two)
+            nxt = ord_ref[i * tq + jnp.minimum(r + 1, tq - 1)]
+            prev = ord_ref[i * tq + jnp.maximum(r - 1, 0)]
 
-        @pl.when(r + 1 < tq)
-        def _prefetch():
-            win_dma(r + 1, jax.lax.rem(r + 1, 2)).start()
+            @pl.when((r + 1 < tq) & (nxt != o))
+            def _prefetch():
+                win_dma(r + 1, jax.lax.rem(o + 1, two)).start()
 
-        win_dma(r, slot).wait()
+            @pl.when((r == 0) | (o != prev))
+            def _wait():
+                win_dma(r, slot).wait()
+        else:
+            slot = jax.lax.rem(r, 2)
+
+            @pl.when(r + 1 < tq)
+            def _prefetch():
+                win_dma(r + 1, jax.lax.rem(r + 1, 2)).start()
+
+            win_dma(r, slot).wait()
         qg = i * tq + r                       # row in the query batch
         q_pos = qpos_ref[qg]                  # global sorted position
         start = ws_ref[j, qg]
@@ -255,12 +292,13 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, eps2_ref, q_ref, pts_ref,
 
 @functools.partial(
     jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
-                              "merged", "gid_pairs", "keep_hits",
+                              "merged", "gid_pairs", "keep_hits", "run_loop",
                               "interpret"))
 def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
-                            is_zero, q_pos, eps2, *, c, tq, n_real, unicomp,
-                            external=False, merged=False, gid_pairs=False,
-                            keep_hits=True, interpret=True):
+                            is_zero, q_pos, run_ord, eps2, *, c, tq, n_real,
+                            unicomp, external=False, merged=False,
+                            gid_pairs=False, keep_hits=True, run_loop=False,
+                            interpret=True):
     n_off, qp = win_start.shape
     if keep_hits:
         hits_shape, hits_map = (n_off, qp, c), (lambda i, j, *_: (j, i, 0))
@@ -269,7 +307,7 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
         # as scratch, so no O(n_off * Q * C) buffer is ever allocated.
         hits_shape, hits_map = (1, qp, c), (lambda i, j, *_: (0, i, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=5,
         grid=(qp // tq, n_off),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, *_: (0, 0)),
@@ -289,7 +327,7 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
     hits, counts, base = pl.pallas_call(
         functools.partial(_fused_kernel, c=c, tq=tq, n_real=n_real,
                           unicomp=unicomp, external=external, merged=merged,
-                          gid_pairs=gid_pairs),
+                          gid_pairs=gid_pairs, run_loop=run_loop),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(hits_shape, jnp.int8),
@@ -297,7 +335,8 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
             jax.ShapeDtypeStruct((qp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(win_start, win_count, is_zero, q_pos, eps2, q_batch, points_pad)
+    )(win_start, win_count, is_zero, q_pos, run_ord, eps2, q_batch,
+      points_pad)
     return hits, counts[:, 0], base[:, 0]
 
 
@@ -342,9 +381,14 @@ def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
     jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
                               "merged", "gid_pairs", "keep_hits"))
 def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
-                               is_zero, q_pos, eps2, *, c, tq, n_real,
-                               unicomp, external=False, merged=False,
+                               is_zero, q_pos, run_ord, eps2, *, c, tq,
+                               n_real, unicomp, external=False, merged=False,
                                gid_pairs=False, keep_hits=True):
+    # ``run_ord`` is accepted for arity parity with the kernel and IGNORED:
+    # evaluating each row against its own descriptors is the run-loop's
+    # semantics whenever the plan satisfies the shared-window contract
+    # (module docstring), so the reference is the oracle for both modes.
+    del run_ord
     n_off, qp = win_start.shape
     eps2s = eps2[0, 0]
 
@@ -375,7 +419,8 @@ def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
 def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                     q_pos, eps, *, c, n_real, unicomp, external=False,
                     merged=False, gid_pairs=False, tq=TQ_DEFAULT,
-                    keep_hits=True, method=None, interpret=True):
+                    keep_hits=True, run_ord=None, run_loop=False,
+                    method=None, interpret=True):
     """Fused gather-refine sweep over all stencil offsets in one launch.
 
     Args:
@@ -417,6 +462,15 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                   device-independent tie-break of the distributed slab
                   join (DESIGN.md S3).
       keep_hits:  static; False = count-only (no O(n_off*Q*C) hits buffer).
+      run_ord:    (Q_pad,) int32 per-tile run ordinals from
+                  ``grid.cell_run_plan(...).run_ord`` -- required when
+                  ``run_loop`` is True, otherwise optional (prefetched but
+                  unused; pass zeros to keep launch shapes identical).
+      run_loop:   static; True = cell-run DMA dedup (module docstring): the
+                  kernel gathers one window per RUN of equal ordinals. The
+                  caller owns the contract that equal ordinals imply equal
+                  (win_start, win_count) columns for all offsets
+                  (``analysis.contracts.check_run_plan``).
       method:     'kernel' | 'reference' | None (auto: kernel on TPU).
 
     Returns (hits, counts, slot_base); hits is (1, Q_pad, c) scratch when
@@ -425,18 +479,25 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     if method is None:
         method = "kernel" if jax.default_backend() == "tpu" else "reference"
     q_pos = jnp.asarray(q_pos, jnp.int32)
+    if run_ord is None:
+        if run_loop:
+            raise ValueError("run_loop=True requires a run_ord plan "
+                             "(grid.cell_run_plan)")
+        run_ord = jnp.zeros((win_start.shape[1],), jnp.int32)
+    run_ord = jnp.asarray(run_ord, jnp.int32)
     eps2 = jnp.reshape(jnp.asarray(eps, points_pad.dtype) ** 2, (1, 1))
     if method == "kernel":
         return _fused_join_hits_pallas(
-            points_pad, q_batch, win_start, win_count, is_zero, q_pos, eps2,
-            c=c, tq=tq, n_real=n_real, unicomp=unicomp, external=external,
-            merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits,
-            interpret=interpret)
+            points_pad, q_batch, win_start, win_count, is_zero, q_pos,
+            run_ord, eps2, c=c, tq=tq, n_real=n_real, unicomp=unicomp,
+            external=external, merged=merged, gid_pairs=gid_pairs,
+            keep_hits=keep_hits, run_loop=run_loop, interpret=interpret)
     if method == "reference":
         return _fused_join_hits_reference(
-            points_pad, q_batch, win_start, win_count, is_zero, q_pos, eps2,
-            c=c, tq=tq, n_real=n_real, unicomp=unicomp, external=external,
-            merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits)
+            points_pad, q_batch, win_start, win_count, is_zero, q_pos,
+            run_ord, eps2, c=c, tq=tq, n_real=n_real, unicomp=unicomp,
+            external=external, merged=merged, gid_pairs=gid_pairs,
+            keep_hits=keep_hits)
     raise ValueError(f"unknown fused_join method {method!r}")
 
 

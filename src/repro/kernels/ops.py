@@ -54,7 +54,7 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                     q_pos, eps, *, c, n_real, unicomp, external=False,
                     merged=False, gid_pairs=False,
                     tq=_fused_join.TQ_DEFAULT, keep_hits=True,
-                    method=None):
+                    run_ord=None, run_loop=False, method=None):
     """Fused gather-refine sweep (all offsets, one launch) -> hits/counts.
 
     ``q_pos`` is the (Q_pad,) per-row sorted-position array (zeros for
@@ -67,7 +67,9 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     -- exact small integers, so the TPU f32 downcast is lossless).
     ``gid_pairs=True`` rides GLOBAL point ids in the next pad lane and
     masks pairs by gid instead of sorted position (distributed slab join,
-    DESIGN.md S3; ids < 2^24, exact in f32).
+    DESIGN.md S3; ids < 2^24, exact in f32). ``run_loop=True`` with a
+    ``run_ord`` plan (grid.cell_run_plan) enables the cell-run DMA dedup
+    (DESIGN.md S11): one window gather per run of co-located query rows.
     """
     dt = _kernel_dtype(points_pad.dtype)
     pts, qb = points_pad.astype(dt), q_batch.astype(dt)
@@ -75,7 +77,8 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
         pts, qb, win_start, win_count,
         is_zero, q_pos, eps, c=c, n_real=n_real, unicomp=unicomp,
         external=external, merged=merged, gid_pairs=gid_pairs, tq=tq,
-        keep_hits=keep_hits, method=method, interpret=_INTERPRET,
+        keep_hits=keep_hits, run_ord=run_ord, run_loop=run_loop,
+        method=method, interpret=_INTERPRET,
     )
     if _sanitize.enabled():
         hits, counts, base = out

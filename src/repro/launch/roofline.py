@@ -40,7 +40,8 @@ VMEM_BYTES = 128 * 2 ** 20  # v5e VMEM per core; the fused kernel's budget
 
 
 def fused_join_vmem_bytes(*, c: int, tq: int, np_pad: int = 8,
-                          dtype_bytes: int = 4) -> int:
+                          dtype_bytes: int = 4,
+                          run_loop: bool = False) -> int:
     """Static VMEM footprint of one fused-join grid step (bytes).
 
     Mirrors the block/scratch shapes of ``kernels.fused_join
@@ -52,7 +53,15 @@ def fused_join_vmem_bytes(*, c: int, tq: int, np_pad: int = 8,
     SMEM and are excluded. The contract prover (analysis/contracts.py C6)
     checks every (class, tile) the occupancy plan can launch against
     ``VMEM_BYTES``.
+
+    ``run_loop`` (the cell-run DMA dedup, DESIGN.md S11) does NOT change
+    the footprint: the run plan's ``run_ord`` descriptor rides the
+    scalar-prefetch path (SMEM) like win_start/win_count, and the kernel
+    keeps the same two (c, np_pad) window slots -- only the start/wait
+    SCHEDULE changes (per run instead of per row). The parameter exists
+    so provers state the mode they checked.
     """
+    del run_loop   # same slots, same blocks; see docstring
     blocks = (tq * np_pad * dtype_bytes   # query tile
               + tq * c                    # int8 hits block
               + 2 * tq * 4                # counts + slot_base

@@ -72,10 +72,12 @@ def test_fused_count_matches_jnp():
                 # no per-cell visit counter
                 assert b.candidates_checked <= a.candidates_checked, name
             else:
-                # 'dense'/'sparse' (merged or measured '-flat'), and 'jnp'
-                # all report counter-for-counter parity with the reference
+                # 'dense'/'sparse' (merged, measured '-flat' or measured
+                # '-run'), and 'jnp' all report counter-for-counter parity
+                # with the reference
                 assert b.route in ("dense", "sparse", "jnp", "dense-flat",
-                                   "sparse-flat"), (name, b.route)
+                                   "sparse-flat", "dense-run"), \
+                    (name, b.route)
                 assert a.cells_visited == b.cells_visited, name
                 assert a.candidates_checked == b.candidates_checked, name
             # the fused sweep defaults to the merged-range stencil: 3^(n-1)
