@@ -52,6 +52,14 @@ asserting the device build is bit-identical to ``build_grid_host``
 field-for-field and pair-for-pair on every workload. Records the
 "index" section; ``--mode index --smoke`` is the CI parity smoke.
 
+--mode metrics times the metric-trait join paths (DESIGN.md S12): cosine
+on raw embeddings with planted scaled duplicates and jaccard on ~10%-dense
+token sets, each with pair-set parity against the metric's brute-force
+oracle ASSERTED before timing (smoke and full runs alike). Cosine is also
+timed against the plain L2 join on its canonical geometry, pinning the
+claim that the metric's steady-state overhead is canonicalization only.
+Records the "metrics" section; ``--mode metrics --smoke`` is the CI gate.
+
 --smoke shrinks the impl sweep to one tiny workload (seconds), writes to a
 temp file by default, skips the floor assert (noise at this scale), and
 schema-validates the payload -- wired into scripts/ci.sh so the harness
@@ -157,6 +165,8 @@ def validate_schema(payload: dict) -> None:
         validate_load_schema(payload["load"])
     if "index" in payload:
         validate_index_schema(payload["index"])
+    if "metrics" in payload:
+        validate_metrics_schema(payload["metrics"])
 
 
 def validate_load_schema(load: dict) -> None:
@@ -632,11 +642,106 @@ def validate_index_schema(section: dict) -> None:
         assert {"build_s", "plan_s", "warm_s", "swap_s"} <= set(e["reindex"])
 
 
+def metric_workloads(args):
+    """Per-metric bench workloads (DESIGN.md S12). Cosine: raw gaussian
+    embeddings with planted scaled duplicates (the case L2 misses).
+    Jaccard: ~10%-dense token sets over a 64-token vocabulary."""
+    rng = np.random.default_rng(args.seed)
+    n = 2500 if args.smoke else args.metrics_points
+    d = args.metrics_dims
+    emb = rng.normal(size=(n, d))
+    emb[: n // 50] = emb[n // 2: n // 2 + n // 50] * 2.5   # scaled dups
+    yield "cosine", f"cosine-{d}d", emb, 0.9
+    vocab = 64
+    sets = [tuple(np.flatnonzero(rng.random(vocab) < 0.1))
+            for _ in range(n)]
+    yield "jaccard", f"jaccard-v{vocab}", sets, 0.5
+
+
+def bench_metrics(args):
+    """Metric-generic join trajectory (DESIGN.md S12): per-metric fused
+    join timings with PAIR-SET PARITY vs the metric's brute-force oracle
+    asserted on every workload before anything is timed -- smoke and full
+    runs alike (the acceptance gate: a metric path that returns L2
+    answers cannot produce a plausible-but-wrong benchmark row). For
+    cosine the canonical-geometry L2 join is timed too: the metric's
+    steady-state overhead is canonicalization only, and the ratio records
+    that claim.
+    """
+    from repro.core import metric as metric_lib
+    from repro.core.selfjoin import self_join, self_join_count
+
+    results = []
+    for metric, name, data, eps in metric_workloads(args):
+        t0 = time.perf_counter()
+        canon = metric_lib.canonicalize(data, eps, metric=metric)
+        canonicalize_s = time.perf_counter() - t0
+        expect = metric_lib.brute_force_join_metric(canon)
+        got = self_join(data, eps, metric=metric)
+        assert np.array_equal(np.asarray(got), np.asarray(expect)), (
+            f"{name}: fused {metric} pair set diverges from the brute "
+            f"oracle ({got.shape} vs {expect.shape})")
+        print(f"[bench-metrics] {name:14s} pair-set parity vs brute "
+              f"oracle OK ({expect.shape[0]} pairs)", flush=True)
+        count_s = best_of(
+            lambda: self_join_count(data, eps, metric=metric), args.trials)
+        join_s = best_of(
+            lambda: self_join(data, eps, metric=metric), args.trials)
+        entry = {
+            "metric": metric,
+            "workload": name,
+            "n_points": int(canon.geom.shape[0]),
+            "eps": float(eps),
+            "eps_geom": float(canon.eps_geom),
+            "n_feat": int(canon.n_feat),
+            "total_pairs": int(expect.shape[0]),
+            "pair_parity": True,
+            "canonicalize_s": canonicalize_s,
+            "count_s": count_s,
+            "join_s": join_s,
+        }
+        if metric == "cosine":
+            # the SAME fused machinery on the pre-canonicalized geometry:
+            # the ratio isolates what the metric tag itself costs (~1.0)
+            geom = np.asarray(canon.geom)
+            l2_s = best_of(
+                lambda: self_join(geom, float(canon.eps_geom),
+                                  distance_impl="fused"), args.trials)
+            entry["l2_equiv_join_s"] = l2_s
+            entry["over_l2_equiv"] = join_s / l2_s
+        results.append(entry)
+        print(f"[bench-metrics] {name:14s} count {count_s*1e3:8.1f} ms  "
+              f"join {join_s*1e3:8.1f} ms  canonicalize "
+              f"{canonicalize_s*1e3:6.1f} ms", flush=True)
+    return {
+        "note": ("fused join per metric trait (core/metric.py): pair-set "
+                 "parity vs the brute oracle asserted before timing; "
+                 "cosine also timed against the plain L2 join on its "
+                 "canonical geometry (steady-state metric overhead)"),
+        "results": results,
+    }
+
+
+def validate_metrics_schema(section: dict) -> None:
+    """Contract of the "metrics" section (EXPERIMENTS.md SMetrics)."""
+    assert "results" in section and section["results"], "empty metrics section"
+    seen = set()
+    for e in section["results"]:
+        for key in ("metric", "workload", "n_points", "eps", "eps_geom",
+                    "n_feat", "total_pairs", "pair_parity",
+                    "canonicalize_s", "count_s", "join_s"):
+            assert key in e, (e.get("workload"), key)
+        assert e["pair_parity"] is True, e["workload"]
+        seen.add(e["metric"])
+    assert {"cosine", "jaccard"} <= seen, seen
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None)
     ap.add_argument("--mode", default="impl",
-                    choices=("impl", "serve", "distributed", "load", "index"))
+                    choices=("impl", "serve", "distributed", "load", "index",
+                             "metrics"))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny impl sweep + schema validation (CI gate); "
                          "writes to a temp file unless --out is given")
@@ -673,6 +778,9 @@ def main(argv=None):
     # --mode distributed: fused slab join parity + overhead (DESIGN.md S3)
     ap.add_argument("--dist-slabs", type=int, default=2)
     ap.add_argument("--dist-points", type=int, default=40_000)
+    # --mode metrics: per-metric trait joins, parity-gated (DESIGN.md S12)
+    ap.add_argument("--metrics-points", type=int, default=20_000)
+    ap.add_argument("--metrics-dims", type=int, default=4)
     # --mode load: continuous-batching frontier + SLO gate (DESIGN.md S8)
     ap.add_argument("--load-points", type=int, default=20_000)
     ap.add_argument("--load-dims", type=int, default=4)
@@ -715,7 +823,7 @@ def main(argv=None):
 
     import jax
 
-    if args.mode in ("serve", "distributed", "load", "index"):
+    if args.mode in ("serve", "distributed", "load", "index", "metrics"):
         payload = existing or {"bench": "selfjoin-distance-impl"}
         payload["backend"] = jax.default_backend()
         payload["jax"] = jax.__version__
@@ -727,6 +835,9 @@ def main(argv=None):
         elif args.mode == "index":
             payload["index"] = bench_index(args)
             validate_index_schema(payload["index"])
+        elif args.mode == "metrics":
+            payload["metrics"] = bench_metrics(args)
+            validate_metrics_schema(payload["metrics"])
         else:
             payload["distributed"] = bench_distributed(args)
         with open(out, "w") as f:

@@ -1,30 +1,43 @@
-"""The paper's technique as a data-pipeline operator: near-duplicate removal,
-then the deduped corpus served as an index for incoming documents.
+"""The paper's technique as a data-pipeline operator: embedding-based
+near-duplicate removal on COSINE similarity, then the deduped corpus
+served as an index for incoming documents.
 
-Stage 1 (self-join): documents are sketched into a 6-D embedding (hashed
-bigram counts + random projection -- exactly the low-dimensionality regime
-the paper targets) and the distance-similarity self-join finds all
-near-duplicate pairs; union-find keeps one representative per duplicate
-cluster.
+Stage 1 (cosine self-join, DESIGN.md S12): documents are sketched into a
+6-D embedding (hashed bigram counts + random projection -- exactly the
+low-dimensionality regime the paper targets) and deduped on cosine
+similarity >= MIN_COS via the metric-trait join path: unit-normalize,
+grid self-join at the equivalent chord radius, union-find keeps one
+representative per duplicate cluster. Cosine is the right dedup metric
+for embeddings -- a doc concatenated with itself doubles its sketch
+norm but keeps its direction, so L2 would miss it while cosine pins it
+at similarity 1.
 
-Stage 2 (external-query join, DESIGN.md S5): the deduped corpus becomes the
-INDEXED set; a later batch of incoming documents is screened against it with
-``core.query_join.epsilon_join`` -- counts say which incoming docs duplicate
-the corpus, pairs say WHICH corpus doc each one duplicates -- without ever
-re-joining the corpus against itself. This is the index-once/query-many
-serving regime (launch/serve.py runs it as a persistent service).
+The pipeline also survives encoder failures: all-zero and NaN embedding
+rows (a timeout / overflow in a real encoder) are quarantined by the
+zero-vector guard instead of crashing cosine canonicalization, and kept
+for re-encoding.
+
+Stage 2 (external-query join, DESIGN.md S5): the deduped corpus becomes
+the INDEXED set; a later batch of incoming documents is screened against
+it with ``core.query_join.epsilon_join(metric='cosine')`` -- counts say
+which incoming docs duplicate the corpus, pairs say WHICH corpus doc
+each one duplicates -- without ever re-joining the corpus against
+itself. This is the index-once/query-many serving regime
+(launch/serve.py runs it as a persistent service).
 """
 import numpy as np
 
-from repro.data.dedup import dedup_batch, embed_ngrams
+from repro.data.dedup import dedup_embeddings, embed_ngrams, guard_embeddings
 from repro.core.query_join import epsilon_join
-from repro.core.selfjoin import self_join
 
 rng = np.random.default_rng(0)
-N_DIMS = 6     # sketch dimensionality (the paper's <= 6-D regime)
-EPS = 0.1      # near-dup radius: above 1-2 token edits, below distinct docs
+N_DIMS = 6      # sketch dimensionality (the paper's <= 6-D regime)
+MIN_COS = 0.997  # near-dup threshold: above the densest unrelated pair
+                 # (cos 0.995 on this seed), below the lightest near-dup
+                 # (cos 0.9988 -- 2 of 256 tokens edited)
 
-# a batch of 64 "documents": 48 unique + 8 exact dups + 8 near-dups
+# a batch of 66 "documents": 48 unique + 8 exact dups + 8 near-dups,
+# plus 2 rows whose encoder "failed" (zero vector / NaN)
 unique = rng.integers(0, 5000, (48, 256))
 dups = unique[:8].copy()
 near = unique[8:16].copy()
@@ -32,25 +45,29 @@ near[:, ::128] += 1         # light token noise (2 of 256 tokens)
 batch = np.concatenate([unique, dups, near])
 
 emb = embed_ngrams(batch, n_dims=N_DIMS)
-pairs = self_join(emb, EPS, unicomp=True)
-keep = dedup_batch(batch, eps=EPS, n_dims=N_DIMS)
+emb = np.concatenate([emb, np.zeros((1, N_DIMS)),          # encoder timeout
+                      np.full((1, N_DIMS), np.nan)])       # encoder overflow
+keep, valid = dedup_embeddings(emb, min_cos=MIN_COS)
 
-print(f"documents           : {batch.shape[0]}")
-print(f"duplicate pairs     : {pairs.shape[0] // 2} (unordered)")
+print(f"documents           : {emb.shape[0]}")
+print(f"quarantined encodes : {int((~valid).sum())} (kept, not joined)")
 print(f"kept after dedup    : {int(keep.sum())}")
-assert keep.sum() == 48, keep.sum()
-assert keep[:48].all() and not keep[48:].any()
-print("dedup kept exactly the 48 unique documents")
+assert not valid[64:].any() and valid[:64].all(), valid
+assert keep[64:].all(), "guarded rows must be kept for re-encoding"
+assert keep[:64].sum() == 48, keep[:64].sum()
+assert keep[:48].all() and not keep[48:64].any()
+print("cosine dedup kept the 48 unique documents + 2 quarantined rows")
 
 # --- stage 2: screen an incoming stream against the kept corpus ----------
-corpus = batch[keep]
-corpus_emb = embed_ngrams(corpus, n_dims=N_DIMS)
+corpus_emb = emb[keep & valid]
 incoming = np.concatenate([
     unique[20:24],                      # 4 near-dups of corpus docs
     rng.integers(0, 5000, (4, 256)),    # 4 genuinely new docs
 ])
 incoming[:4, ::128] += 1                # light noise on the dup half
-res = epsilon_join(embed_ngrams(incoming, n_dims=N_DIMS), corpus_emb, EPS)
+inc_emb = embed_ngrams(incoming, n_dims=N_DIMS)
+assert guard_embeddings(inc_emb).all()  # real encodes pass the guard
+res = epsilon_join(inc_emb, corpus_emb, MIN_COS, metric="cosine")
 is_dup = res.counts > 0
 print(f"incoming screened   : {incoming.shape[0]} "
       f"({int(is_dup.sum())} duplicate the corpus)")
@@ -60,4 +77,4 @@ assert is_dup[:4].all() and not is_dup[4:].any(), is_dup
 # the pairs name the exact corpus representatives (unique[20:24] kept
 # their original positions 20..23 in the deduped corpus)
 assert np.array_equal(res.pairs[:, 1], np.arange(20, 24)), res.pairs
-print("external-query join flagged exactly the 4 incoming duplicates")
+print("cosine external-query join flagged exactly the 4 incoming duplicates")

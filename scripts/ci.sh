@@ -45,6 +45,9 @@ XLA_FLAGS="--xla_force_host_platform_device_count=2" \
 echo "[ci] index bench smoke (device build bit-identical to host, downstream pairs identical)"
 timeout 300 python benchmarks/bench_selfjoin.py --mode index --smoke
 
+echo "[ci] metrics bench smoke (cosine + jaccard pair-set parity vs brute oracles)"
+timeout 300 python benchmarks/bench_selfjoin.py --mode metrics --smoke
+
 echo "[ci] reindex smoke (mid-load snapshot swap must not trip the no-retrace watchdog)"
 timeout 180 python -m repro.launch.serve --arch selfjoin --requests 8 --reindex
 

@@ -5,10 +5,12 @@ Proves the gate has teeth, per ISSUE 7's acceptance criteria: seeding
 (a) an undersized window cap, (b) an int64 key literal on the int32 key
 path, (c) a per-call ``jax.jit`` closure, (d) an int32-keyed index
 whose volume leaves no device-probe headroom below the padding sentinel,
-and (e) a cell-run plan whose corrupted run length merges two cells into
-one run (overlapping runs, DESIGN.md S11) must each produce a NEW
-failing finding, while the unmutated tree produces zero new findings
-against the committed baseline. Mutations are in-memory -- a tampered
+(e) a cell-run plan whose corrupted run length merges two cells into
+one run (overlapping runs, DESIGN.md S11), and (f) a refine site that
+inlines the eps-squared predicate instead of going through the metric
+trait (DESIGN.md S12) must each produce a NEW failing finding, while
+the unmutated tree produces zero new findings against the committed
+baseline. Mutations are in-memory -- a tampered
 ``BucketPlan`` or ``run_ord`` injected through the prover's ``plan=`` /
 ``run_ord=`` seams, source text mutated before ``lint_source``, a forged
 ``GridIndex`` via ``dataclasses.replace`` -- so the working tree is
@@ -137,10 +139,31 @@ def main() -> int:
           any(f.rule == "run-partition" for f in found),
           "no run-partition finding")
 
+    # -- (f) inlined eps-squared predicate outside core/metric.py ---------
+    brute_path = os.path.join(_REPO, "src", "repro", "core", "brute.py")
+    with open(brute_path) as fh:
+        text = fh.read()
+    mutated = text + (
+        "\n\ndef _mutated_refine(d2, eps):\n"
+        "    return d2 <= eps * eps\n")
+    found = lint.lint_source(mutated, "src/repro/core/brute.py")
+    key = ("lint:eps-squared-predicate:src/repro/core/brute.py"
+           "::_mutated_refine")
+    check("(f) inlined eps-squared predicate is caught",
+          any(f.key == key for f in F.new_findings(found, baseline)),
+          "no new eps-squared-predicate finding")
+    # the owner module itself must stay exempt (it DEFINES the predicate)
+    metric_path = os.path.join(_REPO, "src", "repro", "core", "metric.py")
+    with open(metric_path) as fh:
+        found = lint.lint_source(fh.read(), "src/repro/core/metric.py")
+    owner = [f for f in found if f.rule == "eps-squared-predicate"]
+    check("(f) core/metric.py is exempt from the predicate rule",
+          not owner, "; ".join(f.key for f in owner))
+
     if _FAILED:
-        print(f"mutation check: FAIL ({len(_FAILED)} of 8)", file=sys.stderr)
+        print(f"mutation check: FAIL ({len(_FAILED)} of 10)", file=sys.stderr)
         return 1
-    print("mutation check: OK (8/8)")
+    print("mutation check: OK (10/10)")
     return 0
 
 

@@ -300,27 +300,31 @@ def check_device_sentinel(index, tag: str = "index") -> list:
     return []
 
 
-def _plan_tiles(index, plan) -> dict:
+def _plan_tiles(index, plan, metric: str = "l2") -> dict:
     from repro.kernels import autotune
 
-    return {int(cap): autotune.fused_tile(index.n_dims, int(cap))
+    return {int(cap): autotune.fused_tile(index.n_dims, int(cap),
+                                          metric=metric)
             for cap in plan.caps}
 
 
 def check_slot_base(index, *, merged: bool, plan=None, tiles=None,
-                    tag: str = "index") -> list:
+                    metric: str = "l2", tag: str = "index") -> list:
     """C5: int32 range of the kernel's counts and per-tile scan.
 
     Per query: count <= n_off * c. Per tile of tq rows: the exclusive
     scan's last base <= (tq - 1) * n_off * c. Both live in int32 inside
-    the kernel; prove they cannot wrap for any (class, tile) launch."""
+    the kernel; prove they cannot wrap for any (class, tile) launch.
+    The bound is metric-independent (every metric's refine emits at most
+    one hit per candidate slot), but ``metric`` keys the tile lookup --
+    a jaccard table row may launch a different tq."""
     from repro.core.grid import occupancy_plan
 
     out = []
     if plan is None:
         plan = occupancy_plan(index, merged=merged)
     if tiles is None:
-        tiles = _plan_tiles(index, plan)
+        tiles = _plan_tiles(index, plan, metric)
     n = index.n_dims
     n_off = 3 ** (n - 1) if merged else 3 ** n   # full stencil bounds UNICOMP
     lim = 2 ** 31 - 1
@@ -344,26 +348,39 @@ def check_slot_base(index, *, merged: bool, plan=None, tiles=None,
 
 
 def check_vmem(index, *, merged: bool, plan=None, tiles=None,
+               metric: str = "l2", n_feat: int = 0,
                tag: str = "index") -> list:
-    """C6: per-(class, tile) kernel VMEM footprint vs the roofline budget."""
+    """C6: per-(class, tile) kernel VMEM footprint vs the roofline budget.
+
+    Metric-aware (DESIGN.md S12): feature lanes (jaccard token bitmaps)
+    widen every padded row past the featureless NP_PAD, so the proof
+    re-derives the actual lane width with the same ``pad_width`` rule the
+    drivers use -- coordinates + feature lanes + the merged-sweep
+    coordinate lane -- and feeds it through the roofline's ``np_pad``.
+    An l2/cosine index (n_feat == 0) reproduces the old NP_PAD=8 bound
+    exactly."""
     from repro.core.grid import occupancy_plan
+    from repro.kernels.fused_join import pad_width
     from repro.launch.roofline import VMEM_BYTES, fused_join_vmem_bytes
 
     out = []
     if plan is None:
         plan = occupancy_plan(index, merged=merged)
     if tiles is None:
-        tiles = _plan_tiles(index, plan)
+        tiles = _plan_tiles(index, plan, metric)
+    lanes = index.n_dims + int(n_feat) + (1 if merged else 0)
+    np_pad = pad_width(lanes)
     for cap in plan.caps:
         cap = int(cap)
         tq = int(tiles[cap])
-        need = fused_join_vmem_bytes(c=cap, tq=tq)
+        need = fused_join_vmem_bytes(c=cap, tq=tq, np_pad=np_pad)
         if need > VMEM_BYTES:
             out.append(Finding(
                 _AN, "vmem-budget", f"{tag}:c{cap}:t{tq}",
                 f"fused kernel footprint {need} B exceeds the VMEM "
-                f"budget {VMEM_BYTES} B at (c={cap}, tq={tq}); shrink "
-                f"the tile or split the capacity class"))
+                f"budget {VMEM_BYTES} B at (c={cap}, tq={tq}, "
+                f"np_pad={np_pad}); shrink the tile or split the "
+                f"capacity class"))
     return out
 
 
@@ -431,7 +448,7 @@ def _validate_run_ord(run_ord: np.ndarray, cells: np.ndarray, tq: int,
 
 def check_run_plan(index, *, merged: bool = True, plan=None, tiles=None,
                    run_ord=None, tq: Optional[int] = None,
-                   tag: str = "index") -> list:
+                   metric: str = "l2", tag: str = "index") -> list:
     """C10: cell-run plans are exact partitions (DESIGN.md S11).
 
     Default mode rebuilds every run plan the fused self-join drivers can
@@ -460,7 +477,7 @@ def check_run_plan(index, *, merged: bool = True, plan=None, tiles=None,
     if plan is None:
         plan = occupancy_plan(index, merged=merged)
     if tiles is None:
-        tiles = _plan_tiles(index, plan)
+        tiles = _plan_tiles(index, plan, metric)
     out = []
     for cap, sel in zip(plan.caps, plan.sel):
         t = int(tiles[int(cap)])
@@ -485,22 +502,29 @@ def check_run_plan(index, *, merged: bool = True, plan=None, tiles=None,
 
 
 def prove_index_contracts(index, *, merged: Optional[bool] = None,
-                          plan=None, tiles=None,
-                          tag: str = "index") -> list:
+                          plan=None, tiles=None, metric: str = "l2",
+                          n_feat: int = 0, tag: str = "index") -> list:
     """All per-index contracts (C1-C6, C9, C10). ``merged=None`` proves both
     sweep modes; ``plan``/``tiles`` override the planner outputs (the
-    mutation harness injects tampered plans through exactly this seam)."""
+    mutation harness injects tampered plans through exactly this seam).
+    ``metric``/``n_feat`` describe the refine layout the index serves
+    (DESIGN.md S12): they key the autotuned tile lookups and widen the C6
+    VMEM proof by the metric's feature lanes. A jaccard index never runs
+    a merged sweep, so its merged-mode proof is skipped."""
     modes = (False, True) if merged is None else (bool(merged),)
+    if metric == "jaccard":
+        modes = tuple(m for m in modes if not m) or (False,)
     out = check_key_sentinel(index, tag)
     out += check_device_sentinel(index, tag)
     out += check_external_cap(index, tag)
     for m in modes:
         out += check_window_caps(index, merged=m, plan=plan, tag=tag)
         out += check_slot_base(index, merged=m, plan=plan, tiles=tiles,
-                               tag=tag)
-        out += check_vmem(index, merged=m, plan=plan, tiles=tiles, tag=tag)
+                               metric=metric, tag=tag)
+        out += check_vmem(index, merged=m, plan=plan, tiles=tiles,
+                          metric=metric, n_feat=n_feat, tag=tag)
         out += check_run_plan(index, merged=m, plan=plan, tiles=tiles,
-                              tag=tag)
+                              metric=metric, tag=tag)
     return out
 
 

@@ -21,6 +21,16 @@ AST rules over ``src/`` (the bug classes this repo actually shipped):
                       ``grid.pad_key_for``/``grid.key_dtype_for``.
                       Legitimate declaration sites live in the committed
                       baseline; any NEW site fails CI.
+  eps-squared-predicate  a hardcoded eps-squared comparison (the radius
+                      multiplied by itself, or raised to the power 2)
+                      outside ``core/metric.py``. Since the
+                      metric trait (DESIGN.md S12) the refine predicate
+                      is owned by ``core.metric`` alone -- an inlined
+                      eps-squared comparison silently reverts that site
+                      to L2 for every metric (a cosine or jaccard join
+                      routed through it returns L2 answers). Use
+                      ``metric_lib.eps_squared`` / ``l2_sq_hits`` /
+                      ``tile_refine_hits`` instead.
 
 Static no-retrace check (``check_no_retrace``): enumerates, by pure
 ``bucket_rows``/capacity-class arithmetic, every fused-launch executable
@@ -33,6 +43,7 @@ from __future__ import annotations
 
 import ast
 import os
+import re
 from typing import Iterable, Optional
 
 from repro.analysis.findings import SEV_WARNING, Finding
@@ -41,6 +52,11 @@ _AN = "lint"
 RULE_JIT = "per-call-jit"
 RULE_SYNC = "host-sync-in-jit"
 RULE_I64 = "int64-key-literal"
+RULE_EPS = "eps-squared-predicate"
+
+# the one module allowed to spell the squared-threshold arithmetic: the
+# metric trait that owns every refine predicate (DESIGN.md S12)
+_EPS_OWNER = "core/metric.py"
 
 _I64_MAX = (1 << 63) - 1          # spelled as a shift so we don't self-flag
 _NP_NAMES = ("np", "numpy", "jnp")
@@ -76,6 +92,34 @@ def _is_int64_ref(node) -> bool:
     if isinstance(node, ast.Attribute) and node.attr == "int64":
         return True
     return isinstance(node, ast.Name) and node.id == "int64"
+
+
+_EPS_IDENT = re.compile(r"(?:^|_)eps")   # eps, eps_geom, metric_eps; NOT steps
+
+
+def _is_eps_ref(node) -> bool:
+    """A Name/Attribute whose terminal identifier is an epsilon: 'eps',
+    'eps_geom', 'self.eps', 'index.metric_eps', ... The 'eps' token must
+    start the identifier or a ``_``-separated word of it, so 'steps' and
+    'depth_steps' do not flag."""
+    if isinstance(node, ast.Attribute):
+        return bool(_EPS_IDENT.search(node.attr.lower()))
+    return isinstance(node, ast.Name) and bool(_EPS_IDENT.search(node.id.lower()))
+
+
+def _is_eps_square(node) -> bool:
+    """The banned squaring shapes: an eps reference multiplied by the
+    SAME eps reference, or an eps reference raised to the power 2."""
+    if not isinstance(node, ast.BinOp):
+        return False
+    if isinstance(node.op, ast.Mult):
+        return (_is_eps_ref(node.left) and _is_eps_ref(node.right)
+                and ast.dump(node.left) == ast.dump(node.right))
+    if isinstance(node.op, ast.Pow):
+        return (_is_eps_ref(node.left)
+                and isinstance(node.right, ast.Constant)
+                and node.right.value == 2)
+    return False
 
 
 class _Linter(ast.NodeVisitor):
@@ -182,6 +226,17 @@ class _Linter(ast.NodeVisitor):
         if node.value == _I64_MAX and isinstance(node.value, int):
             self._add(RULE_I64,
                       "bare 2^63-1 literal used as a key sentinel", node)
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node):
+        if (_is_eps_square(node)
+                and not self.relpath.endswith(_EPS_OWNER)):
+            self._add(RULE_EPS,
+                      "hardcoded eps-squared predicate outside "
+                      "core/metric.py: the refine threshold is owned by "
+                      "the metric trait (metric_lib.eps_squared / "
+                      "l2_sq_hits / tile_refine_hits); an inlined square "
+                      "silently evaluates L2 for every metric", node)
         self.generic_visit(node)
 
 

@@ -17,9 +17,16 @@ Checked invariants (bitmask):
   E_SCAN_MISMATCH  the exclusive-scan slot bases are not disjoint or
                    don't telescope to the total hit count (a slot-write
                    collision on the emit path).
-  E_NONFINITE      NaN/Inf in a gathered candidate or computed distance.
+  E_NONFINITE      NaN/Inf in a gathered candidate or computed distance
+                   (metric mode: the check covers GEOMETRY lanes only --
+                   jaccard bitmap operands are packed integer words, not
+                   coordinates, and are skipped).
   E_COUNT_RANGE    a hit count outside [0, window rows] (corrupted
                    counts buffer).
+  E_UNNORMALIZED   (cosine metric) a nonzero input row reached the kernel
+                   with a squared norm off unity by more than
+                   ``core.metric.NORM_TOL`` -- raw, un-canonicalized
+                   embeddings bypassed ``metric.canonicalize``.
 
 Trust boundary: the sanitizer recomputes with plain jnp ops (gathers,
 segment sums), NOT the Pallas kernel, so a miscompiled kernel and its
@@ -35,6 +42,7 @@ E_CAP_OVERFLOW = 2
 E_SCAN_MISMATCH = 4
 E_NONFINITE = 8
 E_COUNT_RANGE = 16
+E_UNNORMALIZED = 32
 
 _NAMES = {
     E_OOB_GATHER: "oob-gather",
@@ -42,6 +50,7 @@ _NAMES = {
     E_SCAN_MISMATCH: "scan-mismatch",
     E_NONFINITE: "nonfinite",
     E_COUNT_RANGE: "count-range",
+    E_UNNORMALIZED: "unnormalized-cosine",
 }
 
 _FORCED = None              # tests: set_enabled(True/False); None -> env

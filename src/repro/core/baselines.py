@@ -25,6 +25,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import metric as metric_lib
+
 # ---------------------------------------------------------------------------
 # CPU-RTREE (search-and-refine reference)
 # ---------------------------------------------------------------------------
@@ -114,7 +116,7 @@ def _rtree_query(tree: _RTree, q: np.ndarray, eps: float) -> np.ndarray:
     cand = np.concatenate([np.arange(a, b) for a, b in rng])
     # refine
     d2 = ((tree.points[cand] - q) ** 2).sum(axis=1)
-    return tree.point_order[cand[d2 <= eps * eps]]
+    return tree.point_order[cand[metric_lib.l2_sq_hits(d2, eps)]]
 
 
 def rtree_join(points: np.ndarray, eps: float, *, return_pairs: bool = False,
@@ -162,7 +164,7 @@ def ego_join(points: np.ndarray, eps: float, *, block: int = 64,
     if npts == 0:
         return (0, np.empty((0, 2), np.int64)) if return_pairs else 0
     P, C, order = _ego_sort(pts, eps)
-    eps2 = eps * eps
+    eps2 = metric_lib.eps_squared(eps)
     blocks = [(i, min(i + block, npts)) for i in range(0, npts, block)]
     blo = np.array([C[a:b].min(axis=0) for a, b in blocks])
     bhi = np.array([C[a:b].max(axis=0) for a, b in blocks])

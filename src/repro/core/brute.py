@@ -14,11 +14,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import metric as metric_lib
+
 
 def _block_hits_jnp(q, pts, eps):
     """(T,n) x (N,n) -> (T,N) bool: ||q - p||^2 <= eps^2."""
     d2 = jnp.sum((q[:, None, :] - pts[None, :, :]) ** 2, axis=-1)
-    return d2 <= eps * eps
+    return metric_lib.l2_sq_hits(d2, eps)
 
 
 def _get_impl(name):

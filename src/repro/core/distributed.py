@@ -357,8 +357,15 @@ def distributed_self_join_count(
     halo_capacity: Optional[int] = None,
     max_per_cell: Optional[int] = None,
     model_axis: Optional[str] = None,
+    metric: str = "l2",
 ) -> int:
-    """Host-facing driver: partition, shard, count. Raises on overflow."""
+    """Host-facing driver: partition, shard, count. Raises on overflow.
+
+    ``metric="cosine"`` canonicalizes at entry (unit rows, reduced L2
+    threshold, DESIGN.md S12); the slab pipeline then runs unchanged.
+    Jaccard is not distributed (its bitmap lanes do not ride the halo
+    exchange yet)."""
+    points, eps = _canonicalize_for_slabs(points, eps, metric)
     pts = np.asarray(points)
     slab_axis = mesh.axis_names[0]
     n_slabs = mesh.shape[slab_axis]
@@ -535,6 +542,25 @@ def _halo_overflow_error(capacity: int, plan) -> RuntimeError:
         f"omit it for the exact default.")
 
 
+def _canonicalize_for_slabs(points, eps, metric: str):
+    """Metric entry gate for the distributed drivers: cosine reduces to L2
+    on canonical geometry (exact, DESIGN.md S12) so the whole slab + halo
+    pipeline runs unchanged; jaccard's packed bitmap lanes do not ride the
+    halo exchange yet, so it is rejected loudly rather than mis-joined."""
+    from repro.core import metric as metric_lib
+
+    metric_lib.check_metric(metric)
+    if metric == "jaccard":
+        raise NotImplementedError(
+            "distributed jaccard join: bitmap feature lanes do not ride "
+            "the slab halo exchange yet; use the single-device fused path "
+            "(core.selfjoin.self_join(metric='jaccard'))")
+    if metric == "cosine":
+        canon = metric_lib.canonicalize(points, eps, metric="cosine")
+        return np.asarray(canon.geom), float(canon.eps_geom)
+    return points, eps
+
+
 def distributed_self_join(
     points: np.ndarray,
     eps: float,
@@ -548,6 +574,7 @@ def distributed_self_join(
     method: Optional[str] = None,
     emit: Optional[str] = None,
     return_pairs: bool = True,
+    metric: str = "l2",
 ):
     """Distributed self-join returning globally-consistent PAIRS.
 
@@ -584,6 +611,10 @@ def distributed_self_join(
                                      _self_join_fused)
     from repro.kernels.fused_join import NP_PAD, resolve_merge_last_dim
 
+    # cosine canonicalizes at entry (unit rows + reduced L2 threshold,
+    # DESIGN.md S12); jaccard is rejected -- its bitmap lanes do not ride
+    # the halo exchange
+    points, eps = _canonicalize_for_slabs(points, eps, metric)
     pts = np.asarray(points)
     npts, n = pts.shape
     if n >= NP_PAD:

@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import grid as grid_lib
+from repro.core import metric as metric_lib
 from repro.core.grid import (GridIndex, build_grid, cell_run_plan,
                              round_up as _round_up)
 from repro.core.stencil import stencil_offsets
@@ -396,11 +397,21 @@ class PreparedJoin:
     dropped before any launch. The class set and the pow2 ladder of bucket
     sizes are both known at prepare time, so ``warm()`` can compile every
     steady-state executable off the request path.
+
+    ``canon`` (DESIGN.md S12) makes the prepared index METRIC-aware: it is
+    the ``metric.Canonical`` the index was built from, and the index must
+    be the grid over ``canon.geom`` at ``canon.eps_geom``. Requests then
+    arrive in RAW metric form (embeddings for cosine; token-id sets or an
+    (Q, V) binary matrix for jaccard) and are canonicalized per request
+    against the index's normalization/vocabulary. The metric tag is a
+    STATIC of the fused executable, so each metric warms its own ladder;
+    per-request thresholds stay traced within a metric.
     """
 
     def __init__(self, index: GridIndex,
                  merge_last_dim: Optional[bool] = None,
-                 run_loop: bool = True):
+                 run_loop: bool = True,
+                 canon: Optional[metric_lib.Canonical] = None):
         from repro.core.grid import capacity_classes, external_range_cap
         from repro.core.stencil import merged_stencil_offsets
         from repro.kernels import autotune
@@ -410,6 +421,36 @@ class PreparedJoin:
         self.index = index
         self.n_dims = index.n_dims
         self.eps = float(index.eps)
+        self.canon = canon
+        self.metric = "l2" if canon is None else canon.metric
+        self.n_feat = 0 if canon is None else int(canon.n_feat)
+        # metric-units build threshold (cos similarity / jaccard t); the
+        # geometry eps above stays the radius the stencil covers
+        self.metric_eps = self.eps if canon is None else float(canon.eps)
+        # default kernel refine scalar (UNsquared form, see Canonical)
+        self.refine = self.eps if canon is None else float(canon.refine)
+        feats = None
+        if canon is not None:
+            metric_lib.check_metric(canon.metric)
+            # index.eps round-trips through the geometry dtype (float32
+            # for jaccard set sizes), so compare at float32 resolution
+            if abs(self.eps - float(canon.eps_geom)) > 1e-5 * max(1.0,
+                                                                  self.eps):
+                raise ValueError(
+                    f"index eps {self.eps} does not match the canonical "
+                    f"geometry radius {canon.eps_geom}; build the grid "
+                    f"over canon.geom at canon.eps_geom")
+            if canon.feats is not None:
+                # feature lanes ride sorted point order:
+                # points_sorted[i] == points[order[i]]
+                feats = jnp.asarray(
+                    np.asarray(canon.feats)[np.asarray(index.order)])
+        self.feats = feats
+        # jaccard geometry is the 1-D set-size axis: the merged-range
+        # reduction has nothing to merge there and the bitmap predicate
+        # wants the plain per-cell sweep, so force it off
+        if self.metric == "jaccard":
+            merge_last_dim = False
         # merged-range sweep (DESIGN.md S7): 3^(n-1) reduced offsets, full
         # stencil (external queries have no UNICOMP)
         self.merged = resolve_merge_last_dim(self.n_dims, merge_last_dim)
@@ -423,13 +464,14 @@ class PreparedJoin:
             self.hi_off = jnp.asarray(hi)
             self.points_pad = pad_points(
                 index.points_sorted, self.c,
-                last_coord=grid_lib.point_last_coords(index))
+                last_coord=grid_lib.point_last_coords(index), feats=feats)
         else:
             self.c = _round_up(max(int(index.max_per_cell), 1), _C_ALIGN)
             offs = stencil_offsets(self.n_dims, unicomp=False)  # full 3^n
             self.n_offsets = offs.shape[0]
             self.offsets = jnp.asarray(offs)                 # (n_off, n)
-            self.points_pad = pad_points(index.points_sorted, self.c)
+            self.points_pad = pad_points(index.points_sorted, self.c,
+                                         feats=feats)
         self.is_zero = jnp.zeros((self.n_offsets,), jnp.int32)  # unused mask
         self.order_np = np.asarray(index.order)
         self.dtype = np.dtype(index.points_sorted.dtype)
@@ -438,7 +480,8 @@ class PreparedJoin:
         # Per-class query tile from the measured table, clamped to the
         # service's request-padding unit so bucket_rows stays the public
         # shape contract (multiples of _TQ).
-        self.tiles = {cb: min(autotune.fused_tile(self.n_dims, cb), _TQ)
+        self.tiles = {cb: min(autotune.fused_tile(self.n_dims, cb,
+                                                  metric=self.metric), _TQ)
                       for cb in self.classes}
         self.bucketed = len(self.classes) > 1
         # cell-run batching (DESIGN.md S11): sort request batches by grid
@@ -446,22 +489,28 @@ class PreparedJoin:
         self.run_loop = bool(run_loop)
         self.q_pos0: dict = {}   # zeros (qp,) per launch shape (external)
 
-    def _pad_queries(self, q: np.ndarray) -> tuple[jax.Array, int]:
-        from repro.kernels.fused_join import NP_PAD
-
+    def _pad_queries(self, q: np.ndarray,
+                     feats: Optional[np.ndarray] = None
+                     ) -> tuple[jax.Array, int]:
         # _TQ is always the request padding unit: class tiles are clamped
-        # to _TQ at construction, so every launch divides it
+        # to _TQ at construction, so every launch divides it. Lane width
+        # comes from the padded points copy, so queries and candidates
+        # always agree (the kernel derives its statics the same way).
         qp = bucket_rows(q.shape[0])
-        q_pad = np.zeros((qp, NP_PAD), self.dtype)
+        q_pad = np.zeros((qp, int(self.points_pad.shape[1])), self.dtype)
         q_pad[: q.shape[0], : self.n_dims] = q
+        if feats is not None:
+            q_pad[: q.shape[0],
+                  self.n_dims: self.n_dims + self.n_feat] = feats
         if self.merged:
-            # last-dim cell coordinate rides the first pad lane (kernel
-            # boundary mask); same float computation as grid.cell_coords,
-            # clipped -- any query whose raw coordinate leaves the clip
-            # range has no live window, so the clip never changes a mask
+            # last-dim cell coordinate rides the first pad lane AFTER any
+            # feature lanes (kernel boundary mask); same float computation
+            # as grid.cell_coords, clipped -- any query whose raw
+            # coordinate leaves the clip range has no live window, so the
+            # clip never changes a mask
             qc = np.floor((q[:, -1] - self.gmin_np[-1]) / self.eps)
-            q_pad[: q.shape[0], self.n_dims] = np.clip(qc, -(1 << 24),
-                                                       1 << 24)
+            q_pad[: q.shape[0], self.n_dims + self.n_feat] = np.clip(
+                qc, -(1 << 24), 1 << 24)
         return jnp.asarray(q_pad), qp
 
     def _q_pos(self, qp: int) -> jax.Array:
@@ -518,16 +567,33 @@ class PreparedJoin:
         """
         from repro.kernels import ops
 
-        q = np.asarray(queries, self.dtype)
+        qf = None
+        if self.metric == "l2":
+            q = np.asarray(queries, self.dtype)
+        elif isinstance(queries, tuple) and len(queries) == 2:
+            # pre-canonicalized (geometry, features) pair: the batching
+            # service canonicalizes once at admission so coalesced parts
+            # and slab fan-outs do not re-normalize/re-pack per launch
+            qg, qf = queries
+            q = np.asarray(qg, self.dtype)
+            qf = None if qf is None else np.asarray(qf)
+        else:
+            # raw metric input -> (geometry, features) under the INDEX's
+            # canonical form (unit rows for cosine; sizes + packed bitmap
+            # words against the index vocabulary for jaccard)
+            qg, qf = metric_lib.canonicalize_queries(self.canon, queries)
+            q = np.asarray(qg, self.dtype)
         if q.ndim != 2 or q.shape[1] != self.n_dims:
             raise ValueError(f"queries must be (Q, {self.n_dims}), "
                              f"got {q.shape}")
         if eps is None:
-            eps = self.eps
-        elif eps > self.eps * (1 + 1e-12):
-            raise ValueError(
-                f"query eps {eps} exceeds index build eps {self.eps}; the "
-                f"adjacent-cell stencil only covers the build radius")
+            eps = self.refine
+        else:
+            # per-request threshold in METRIC units -> kernel scalar,
+            # validating the build-time stencil still covers it
+            eps = metric_lib.request_scalar(
+                self.metric, float(eps), index_eps=self.metric_eps,
+                index_eps_geom=self.eps)
         n_queries = q.shape[0]
         perm = gid = None
         if self.run_loop and n_queries:
@@ -540,10 +606,12 @@ class PreparedJoin:
                          -(1 << 24), 1 << 24).astype(np.int64)
             perm = np.lexsort(qc.T)
             q, qc = q[perm], qc[perm]
+            if qf is not None:
+                qf = qf[perm]
             head = np.ones(n_queries, bool)
             head[1:] = np.any(qc[1:] != qc[:-1], axis=1)
             gid = np.cumsum(head) - 1      # per-row cell group id
-        q_dev, qp = self._pad_queries(q)
+        q_dev, qp = self._pad_queries(q, qf)
         if self.merged:
             ws, wc = _external_range_windows(
                 self.index, self.offsets, self.lo_off, self.hi_off, q_dev,
@@ -564,7 +632,8 @@ class PreparedJoin:
                 self._q_pos(qp), eps, c=self.c, n_real=self.n_dims,
                 unicomp=False, external=True, merged=self.merged, tq=tile,
                 keep_hits=return_pairs, run_ord=ro,
-                run_loop=self.run_loop, method=method)
+                run_loop=self.run_loop, method=method,
+                metric=self.metric, n_feat=self.n_feat)
             launches.append(_FusedLaunch(
                 rows=None, n_rows=n_queries, hits=hits, counts=counts,
                 base=base, ws=ws, c=self.c, tile=tile))
@@ -592,7 +661,8 @@ class PreparedJoin:
                     self._q_pos(qp_b), eps, c=cb, n_real=self.n_dims,
                     unicomp=False, external=True, merged=self.merged,
                     tq=tile, keep_hits=return_pairs, run_ord=ro,
-                    run_loop=self.run_loop, method=method)
+                    run_loop=self.run_loop, method=method,
+                    metric=self.metric, n_feat=self.n_feat)
                 launches.append(_FusedLaunch(
                     rows=rows, n_rows=rows.size, hits=hits, counts=counts,
                     base=base, ws=ws_b, c=cb, tile=tile))
@@ -607,12 +677,14 @@ class PreparedJoin:
              with_stats: bool = False) -> QueryJoinResult:
         """Epsilon join of a query batch against the prepared index.
 
-        ``eps`` defaults to the index's build epsilon and may be smaller
-        (the +/-1-cell stencil only covers the build radius; a larger
-        radius needs a rebuilt grid). Counts include an indexed point that
-        exactly coincides with a query (external queries have no self).
-        The epsilon threshold is a traced operand of the fused sweep, so
-        serving a MIX of radii (all <= build eps) hits one executable.
+        ``eps`` is in METRIC units and defaults to the index's build
+        threshold; per-request overrides must stay within what the
+        build-time stencil covers (smaller radii for l2, HIGHER similarity
+        floors for cosine/jaccard -- ``metric.request_scalar`` validates).
+        Counts include an indexed point that exactly coincides with a
+        query (external queries have no self). The threshold is a traced
+        operand of the fused sweep, so serving a MIX of thresholds within
+        one metric hits one executable.
 
         On a skewed index the batch is served through the occupancy
         buckets: per-query capacities from the window descriptors, one
@@ -633,6 +705,18 @@ class PreparedJoin:
         return self.join(queries, eps=eps, return_pairs=False,
                          method=method).counts
 
+    def _warm_queries(self, n: int):
+        """A metric-VALID dummy batch of ``n`` raw queries: warm joins run
+        through the same canonicalization as real requests, which rejects
+        zero vectors under cosine and expects token sets under jaccard."""
+        if self.metric == "cosine":
+            raw = np.zeros((n, self.n_dims), self.dtype)
+            raw[:, 0] = 1.0
+            return raw
+        if self.metric == "jaccard":
+            return [() for _ in range(n)]   # empty token sets (size 0)
+        return np.zeros((n, self.n_dims), self.dtype)
+
     def warm(self, batch_size: int, *, return_pairs: Optional[bool] = None
              ) -> int:
         """Compile every steady-state executable for requests of up to
@@ -648,19 +732,18 @@ class PreparedJoin:
         Returns the request bucket's padded row count.
         """
         from repro.kernels import ops
-        from repro.kernels.fused_join import NP_PAD
 
         n = max(int(batch_size), 1)
         variants = ((True, False) if return_pairs is None
                     else (bool(return_pairs),))
-        dummy = np.zeros((n, self.n_dims), self.dtype)
         for keep in variants:
-            self.join(dummy, return_pairs=keep)
+            self.join(self._warm_queries(n), return_pairs=keep)
         if self.bucketed:
             qp = bucket_rows(n)
             ws = jnp.zeros((self.n_offsets, qp), jnp.int32)
             wc = jnp.zeros((self.n_offsets, qp), jnp.int32)
-            q_pad = jnp.zeros((qp, NP_PAD), self.dtype)
+            q_pad = jnp.zeros((qp, int(self.points_pad.shape[1])),
+                              self.dtype)
             for cb in self.classes:
                 tile = self.tiles[cb]
                 s = tile
@@ -677,13 +760,14 @@ class PreparedJoin:
                         # steady state for the warm to cover it
                         _, counts, _ = ops.fused_join_hits(
                             self.points_pad, q_b, ws_b, wc_b, self.is_zero,
-                            self._q_pos(s), self.eps, c=cb,
+                            self._q_pos(s), self.refine, c=cb,
                             n_real=self.n_dims, unicomp=False,
                             external=True, merged=self.merged, tq=tile,
                             keep_hits=keep,
                             run_ord=(self._q_pos(s) if self.run_loop
                                      else None),
-                            run_loop=self.run_loop)
+                            run_loop=self.run_loop,
+                            metric=self.metric, n_feat=self.n_feat)
                         np.asarray(counts)   # block: compile now, not later
                     s *= 2
         # single-class requests pad with _TQ too (class tiles are clamped
@@ -693,16 +777,19 @@ class PreparedJoin:
 
 def prepare(index: GridIndex,
             merge_last_dim: Optional[bool] = None,
-            run_loop: bool = True) -> PreparedJoin:
+            run_loop: bool = True,
+            canon: Optional[metric_lib.Canonical] = None) -> PreparedJoin:
     """Prepare a grid index for repeated external-query joins.
 
     ``merge_last_dim`` (default on) serves requests through the 3^(n-1)
     merged-range stencil (DESIGN.md S7); ``False`` keeps the per-cell
     3^n sweep as the parity oracle. ``run_loop`` (default on) cell-sorts
     request batches and shares each run's window gather (DESIGN.md S11);
-    ``False`` keeps the unsorted row-loop launch as the parity oracle."""
+    ``False`` keeps the unsorted row-loop launch as the parity oracle.
+    ``canon`` attaches the metric the index was canonicalized for
+    (DESIGN.md S12); requests then arrive in raw metric form."""
     return PreparedJoin(index, merge_last_dim=merge_last_dim,
-                        run_loop=run_loop)
+                        run_loop=run_loop, canon=canon)
 
 
 def epsilon_join(queries, points, eps: Optional[float] = None, *,
@@ -710,7 +797,9 @@ def epsilon_join(queries, points, eps: Optional[float] = None, *,
                  return_pairs: bool = True, sort_pairs: bool = True,
                  emit: Optional[str] = None, method: Optional[str] = None,
                  with_stats: bool = False,
-                 merge_last_dim: Optional[bool] = None) -> QueryJoinResult:
+                 merge_last_dim: Optional[bool] = None,
+                 metric: str = "l2",
+                 vocab: Optional[int] = None) -> QueryJoinResult:
     """One-shot external-query epsilon join: counts and pairs of all
     indexed points within ``eps`` of each query.
 
@@ -719,7 +808,29 @@ def epsilon_join(queries, points, eps: Optional[float] = None, *,
     ``prepare(index)`` object instead (launch/serve.py's JoinService does);
     the underlying executables are shared either way -- this wrapper only
     re-pays the cheap host-side preparation per call.
+
+    ``metric`` selects the similarity (DESIGN.md S12): ``eps`` is then the
+    metric-units threshold (minimum cosine similarity / minimum Jaccard
+    similarity), ``points`` the raw dataset (or a pre-built
+    ``metric.Canonical``), and ``queries`` raw metric input. ``vocab``
+    fixes the jaccard packing vocabulary. ``index`` must be None for
+    non-L2 metrics (the grid is built over the canonical geometry here).
     """
+    metric_lib.check_metric(metric)
+    if metric != "l2" or isinstance(points, metric_lib.Canonical):
+        if index is not None:
+            raise ValueError(
+                "epsilon_join: pass raw points (or a Canonical), not a "
+                "prebuilt index, for non-L2 metrics -- the grid must be "
+                "built over the canonical geometry")
+        canon = (points if isinstance(points, metric_lib.Canonical)
+                 else metric_lib.canonicalize(points, eps, metric=metric,
+                                              vocab=vocab))
+        idx = build_grid(np.asarray(canon.geom), float(canon.eps_geom))
+        return prepare(idx, merge_last_dim=merge_last_dim, canon=canon).join(
+            queries, eps=None, return_pairs=return_pairs,
+            sort_pairs=sort_pairs, emit=emit, method=method,
+            with_stats=with_stats)
     if index is None:
         index = build_grid(np.asarray(points), float(eps))
     return prepare(index, merge_last_dim=merge_last_dim).join(

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import metric as metric_lib
 from repro.core.grid import (GridIndex, build_grid,
                              neighbor_rank, round_up as _round_up)
 from repro.core.stencil import stencil_offsets
@@ -142,7 +143,7 @@ def _neighbor_ranks_for_delta(index: GridIndex, delta: jax.Array) -> jax.Array:
 def _distance_hits_jnp(q, cand, valid, eps):
     """Reference candidate evaluation: (B,n) x (B,C,n) -> (B,C) bool hits."""
     d2 = jnp.sum((q[:, None, :] - cand) ** 2, axis=-1)
-    return (d2 <= eps * eps) & valid
+    return metric_lib.l2_sq_hits(d2, eps) & valid
 
 
 def _get_distance_impl(name: str):
@@ -353,7 +354,6 @@ def _fused_prep(index: GridIndex, points_pad: jax.Array, deltas: jax.Array,
     """
     from repro.core.grid import (range_window_descriptors,
                                  window_descriptors)
-    from repro.kernels.fused_join import NP_PAD
 
     if merged:
         ws, wc, wcells = range_window_descriptors(
@@ -366,7 +366,8 @@ def _fused_prep(index: GridIndex, points_pad: jax.Array, deltas: jax.Array,
         wc = jnp.where(ok, wc, 0)
         wcells = jnp.where(ok, wcells, 0)
     q_batch = jax.lax.dynamic_slice(
-        points_pad, (q_start, jnp.asarray(0, q_start.dtype)), (qp, NP_PAD))
+        points_pad, (q_start, jnp.asarray(0, q_start.dtype)),
+        (qp, points_pad.shape[1]))
     q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(qp, dtype=jnp.int32)
     return ws, wc, wcells, q_batch, q_pos
 
@@ -399,14 +400,16 @@ def _fused_bucket_prep(index: GridIndex, points_pad: jax.Array,
 
 def _fused_pad(index: GridIndex, *, q_size: int, c: int,
                q_start_max: int = 0, tq: int = 128, merged: bool = False,
-               gid=None):
+               gid=None, feats=None):
     """One padded-points copy shared by every batch of a sweep. The tail
     covers the C-slot window reads and the worst batch's rounded-up query
     slice (``q_start_max`` = largest batch origin), so the per-batch
     dynamic_slice never clamps. Merged sweeps ride the per-point last-dim
     cell coordinate in the first pad lane (the kernel's boundary mask);
     query slices of this copy inherit it. ``gid`` (distributed slab join)
-    rides the per-point global id in the next free lane."""
+    rides the per-point global id in the next free lane. ``feats``
+    (metric feature payload in SORTED point order, DESIGN.md S12) rides
+    immediately after the coordinate lanes."""
     from repro.core.grid import point_last_coords
     from repro.kernels.fused_join import pad_points
 
@@ -414,7 +417,7 @@ def _fused_pad(index: GridIndex, *, q_size: int, c: int,
     tail = max(c, q_start_max + qp - index.num_points)
     lc = point_last_coords(index) if merged else None
     return pad_points(index.points_sorted, tail, last_coord=lc,
-                      gid=gid), qp
+                      gid=gid, feats=feats), qp
 
 
 def _host_cell_ranks(index: GridIndex) -> np.ndarray:
@@ -461,8 +464,6 @@ def _fused_table_prep(index: GridIndex, points_pad: jax.Array, tab_ws,
     the per-row descriptor math per cell rank, and the only rows whose
     ``win_start`` can differ are dead ones (count forced to 0), which no
     consumer reads."""
-    from repro.kernels.fused_join import NP_PAD
-
     npts = index.num_points
     q_pos = jnp.asarray(q_start, jnp.int32) + jnp.arange(qp, dtype=jnp.int32)
     rank = index.point_cell_rank[jnp.minimum(q_pos, npts - 1)]
@@ -471,7 +472,8 @@ def _fused_table_prep(index: GridIndex, points_pad: jax.Array, tab_ws,
     wc = jnp.where(ok[None, :], tab_wc[:, rank], 0)
     wcells = jnp.where(ok[None, :], tab_wcells[:, rank], 0)
     q_batch = jax.lax.dynamic_slice(
-        points_pad, (q_start, jnp.asarray(0, q_start.dtype)), (qp, NP_PAD))
+        points_pad, (q_start, jnp.asarray(0, q_start.dtype)),
+        (qp, points_pad.shape[1]))
     return ws, wc, wcells, q_batch, q_pos
 
 
@@ -496,12 +498,20 @@ def _fused_batch_run(index: GridIndex, points_pad, deltas, is_zero, q_start,
                      *, qp: int, q_size: int, c: int, unicomp: bool,
                      keep_hits: bool, method: Optional[str] = None,
                      tq: int = 128, merged: bool = False,
-                     gid_pairs: bool = False, run_plan=None):
+                     gid_pairs: bool = False, run_plan=None,
+                     metric: str = "l2", n_feat: int = 0,
+                     refine_eps=None):
     """One contiguous query batch through the fused kernel.
 
     ``run_plan`` (a ``grid.RunPlan`` for THIS launch's rows) switches on
     the cell-run path (DESIGN.md S11): descriptors gather from the cached
     per-cell tables and the kernel DMAs one window per run.
+
+    ``metric``/``n_feat`` (DESIGN.md S12) select the static refine
+    predicate; ``refine_eps`` overrides the scalar the kernel refines
+    against (``metric.Canonical.refine``) when the index's cell width is
+    not it -- the jaccard grid prunes on set sizes at ``eps_geom`` while
+    the kernel compares against the similarity threshold t.
     """
     from repro.core.grid import cell_window_tables
     from repro.kernels import ops
@@ -519,10 +529,12 @@ def _fused_batch_run(index: GridIndex, points_pad, deltas, is_zero, q_start,
             qp=qp, q_limit=max(q_size, 1), merged=merged)
     hits, counts, base = ops.fused_join_hits(
         points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
-        index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
+        index.eps if refine_eps is None else refine_eps,
+        c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
         merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits,
         run_ord=None if run_plan is None else jnp.asarray(run_plan.run_ord),
-        run_loop=run_plan is not None, method=method)
+        run_loop=run_plan is not None, method=method, metric=metric,
+        n_feat=n_feat)
     return ws, wc, wcells, hits, counts, base, q_pos
 
 
@@ -530,11 +542,14 @@ def _fused_bucket_launch(index: GridIndex, points_pad, deltas, is_zero,
                          sel: np.ndarray, *, qp: int, c: int, unicomp: bool,
                          keep_hits: bool, method: Optional[str] = None,
                          tq: int = 128, merged: bool = False,
-                         gid_pairs: bool = False, run_plan=None):
+                         gid_pairs: bool = False, run_plan=None,
+                         metric: str = "l2", n_feat: int = 0,
+                         refine_eps=None):
     """One occupancy bucket through the fused kernel at ITS capacity.
-    ``run_plan`` as in ``_fused_batch_run`` (bucket selections keep cells
-    contiguous: a cell's rows share window counts, hence a capacity class,
-    and ``BucketPlan.sel`` is ascending A-order)."""
+    ``run_plan`` / ``metric`` / ``n_feat`` / ``refine_eps`` as in
+    ``_fused_batch_run`` (bucket selections keep cells contiguous: a
+    cell's rows share window counts, hence a capacity class, and
+    ``BucketPlan.sel`` is ascending A-order)."""
     from repro.core.grid import cell_window_tables
     from repro.kernels import ops
 
@@ -553,10 +568,12 @@ def _fused_bucket_launch(index: GridIndex, points_pad, deltas, is_zero,
             jnp.asarray(nsel, jnp.int32), qp=qp, merged=merged)
     hits, counts, base = ops.fused_join_hits(
         points_pad, q_batch, ws, wc, is_zero.astype(jnp.int32), q_pos,
-        index.eps, c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
+        index.eps if refine_eps is None else refine_eps,
+        c=c, n_real=index.n_dims, unicomp=unicomp, tq=tq,
         merged=merged, gid_pairs=gid_pairs, keep_hits=keep_hits,
         run_ord=None if run_plan is None else jnp.asarray(run_plan.run_ord),
-        run_loop=run_plan is not None, method=method)
+        run_loop=run_plan is not None, method=method, metric=metric,
+        n_feat=n_feat)
     return ws, wc, wcells, hits, counts, base, q_pos
 
 
@@ -644,7 +661,7 @@ def _emit_from_hits_host(order: np.ndarray, hits, win_start,
 def _fused_launches(index: GridIndex, *, n_batches: int,
                     bucketed: Optional[bool], merged: bool = False,
                     row_ok: Optional[np.ndarray] = None,
-                    gid=None):
+                    gid=None, feats=None):
     """The launch schedule of one fused sweep: occupancy buckets (each
     chunked to the batching bound), or contiguous batches when the plan is
     a single class. Returns (launches, points_pad, c_max) where every
@@ -679,13 +696,13 @@ def _fused_launches(index: GridIndex, *, n_batches: int,
         points_pad, qp = _fused_pad(
             index, q_size=batch_rows, c=c_glob, tq=tile,
             q_start_max=(n_batches - 1) * batch_rows, merged=merged,
-            gid=gid)
+            gid=gid, feats=feats)
         for b in range(n_batches):
             q_size = min(batch_rows, npts - b * batch_rows)
             launches.append((None, b * batch_rows, q_size, qp, cap, tile))
         return launches, points_pad, c_glob
     points_pad, _ = _fused_pad(index, q_size=1, c=c_glob, merged=merged,
-                               gid=gid)
+                               gid=gid, feats=feats)
     for cap, sel in zip(plan.caps, plan.sel):
         tile = _fused_tile(index, cap)
         for i in range(0, sel.shape[0], batch_rows):
@@ -715,7 +732,9 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
                      row_ok: Optional[np.ndarray] = None,
                      ids: Optional[np.ndarray] = None,
                      gid_pairs: bool = False,
-                     run_loop: Optional[bool] = None):
+                     run_loop: Optional[bool] = None,
+                     metric: str = "l2", n_feat: int = 0,
+                     feats=None, refine_eps=None):
     """Single-pass count -> fill driver for distance_impl='fused'.
 
     Per launch (an occupancy bucket chunk, or a contiguous batch when the
@@ -749,6 +768,12 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
     per-cell descriptor tables); None (default) decides by mean cell
     occupancy (``_join_run_loop``). Pair sets are bit-identical either
     way -- the run plan only regroups when each window is fetched.
+
+    ``metric`` / ``n_feat`` / ``feats`` / ``refine_eps`` (DESIGN.md S12):
+    the static refine predicate, its feature payload (SORTED point
+    order), and the kernel scalar when it differs from the index's cell
+    width (jaccard). The fill machinery is metric-agnostic -- it only
+    consumes the hit mask and window descriptors.
     """
     if emit is None:
         emit = "device" if jax.default_backend() == "tpu" else "host"
@@ -766,7 +791,7 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
     mult = 2 if unicomp else 1
     launches, points_pad, _ = _fused_launches(
         index, n_batches=n_batches, bucketed=bucketed, merged=merged,
-        row_ok=row_ok, gid=gid)
+        row_ok=row_ok, gid=gid, feats=feats)
     single = len(launches) == 1
 
     def finish(run):
@@ -799,12 +824,14 @@ def _self_join_fused(index: GridIndex, *, unicomp: bool, sort_result: bool,
                 index, points_pad, deltas, is_zero, q_start, qp=qp,
                 q_size=q_size, c=cap, unicomp=unicomp, keep_hits=True,
                 method=method, tq=tile, merged=merged, gid_pairs=gid_pairs,
-                run_plan=plan)
+                run_plan=plan, metric=metric, n_feat=n_feat,
+                refine_eps=refine_eps)
         else:
             ws, _, _, hits, counts, base, q_pos = _fused_bucket_launch(
                 index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
                 unicomp=unicomp, keep_hits=True, method=method, tq=tile,
-                merged=merged, gid_pairs=gid_pairs, run_plan=plan)
+                merged=merged, gid_pairs=gid_pairs, run_plan=plan,
+                metric=metric, n_feat=n_feat, refine_eps=refine_eps)
         if prev is not None:
             chunks.append(finish(prev))
         prev = (ws, hits, counts, base, q_pos, cap, tile)
@@ -827,7 +854,9 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
                            row_ok: Optional[np.ndarray] = None,
                            ids: Optional[np.ndarray] = None,
                            gid_pairs: bool = False,
-                           run_loop: bool = False) -> JoinStats:
+                           run_loop: bool = False,
+                           metric: str = "l2", n_feat: int = 0,
+                           feats=None, refine_eps=None) -> JoinStats:
     """Count-only fused sweep (keep_hits=False: no O(n_off*Q*C) buffer).
 
     Occupancy-bucketed by default; each bucket launch counts at ITS window
@@ -847,7 +876,6 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
     traffic avoided vs one window per row (``dma_bytes_saved``).
     """
     from repro.core.grid import global_window_cap
-    from repro.kernels.fused_join import NP_PAD
     from repro.kernels.ops import _kernel_dtype
 
     if merged:
@@ -867,15 +895,16 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
         points_pad, qp = _fused_pad(
             index, q_size=q_size, c=c, tq=tile,
             q_start_max=((npts - 1) // q_size) * q_size, merged=merged,
-            gid=gid)
+            gid=gid, feats=feats)
         launches = [(None, q_start, min(q_size, npts - q_start), qp, c, tile)
                     for q_start in range(0, npts, q_size)]
     else:
         launches, points_pad, _ = _fused_launches(
             index, n_batches=1, bucketed=bucketed, merged=merged,
-            row_ok=row_ok, gid=gid)
+            row_ok=row_ok, gid=gid, feats=feats)
     total = cells = cands = 0
     dma_windows = dma_saved = 0
+    np_pad = int(points_pad.shape[1])
     dtype_bytes = np.dtype(_kernel_dtype(points_pad.dtype)).itemsize
     for sel, q_start, q_size, qp, cap, tile in launches:
         plan = (_launch_run_plan(index, sel, q_start, qp=qp, tile=tile)
@@ -885,18 +914,20 @@ def _self_join_count_fused(index: GridIndex, *, unicomp: bool,
         else:
             dma_windows += n_off * plan.n_runs
             dma_saved += (n_off * (qp - plan.n_runs)
-                          * cap * NP_PAD * dtype_bytes)
+                          * cap * np_pad * dtype_bytes)
         if sel is None:
             _, wc, wcells, _, counts, _, _ = _fused_batch_run(
                 index, points_pad, deltas, is_zero, q_start, qp=qp,
                 q_size=q_size, c=cap, unicomp=unicomp, keep_hits=False,
                 method=method, tq=tile, merged=merged, gid_pairs=gid_pairs,
-                run_plan=plan)
+                run_plan=plan, metric=metric, n_feat=n_feat,
+                refine_eps=refine_eps)
         else:
             _, wc, wcells, _, counts, _, _ = _fused_bucket_launch(
                 index, points_pad, deltas, is_zero, sel, qp=qp, c=cap,
                 unicomp=unicomp, keep_hits=False, method=method, tq=tile,
-                merged=merged, gid_pairs=gid_pairs, run_plan=plan)
+                merged=merged, gid_pairs=gid_pairs, run_plan=plan,
+                metric=metric, n_feat=n_feat, refine_eps=refine_eps)
         total += mult * int(counts.sum(dtype=jnp.int64))
         cells += int(wcells.sum(dtype=jnp.int64))
         cands += int(wc.sum(dtype=jnp.int64))
@@ -924,7 +955,6 @@ def dma_window_stats(index: GridIndex, *, unicomp: bool = True,
     the reduction should track. The bench writes this into
     BENCH_selfjoin.json's "dma" section and the CI smoke gates on it.
     """
-    from repro.kernels.fused_join import NP_PAD
     from repro.kernels.ops import _kernel_dtype
 
     if merged:
@@ -935,6 +965,7 @@ def dma_window_stats(index: GridIndex, *, unicomp: bool = True,
         n_off = int(deltas.shape[0])
     launches, points_pad, _ = _fused_launches(
         index, n_batches=1, bucketed=bucketed, merged=merged)
+    np_pad = int(points_pad.shape[1])
     dtype_bytes = np.dtype(_kernel_dtype(points_pad.dtype)).itemsize
     rows = runs = saved = 0
     hist: dict = {}
@@ -942,7 +973,7 @@ def dma_window_stats(index: GridIndex, *, unicomp: bool = True,
         plan = _launch_run_plan(index, sel, q_start, qp=qp, tile=tile)
         rows += n_off * qp
         runs += n_off * plan.n_runs
-        saved += n_off * (qp - plan.n_runs) * cap * NP_PAD * dtype_bytes
+        saved += n_off * (qp - plan.n_runs) * cap * np_pad * dtype_bytes
         lens, cnts = np.unique(plan.run_lengths, return_counts=True)
         for ln, cnt in zip(lens, cnts):
             hist[int(ln)] = hist.get(int(ln), 0) + int(cnt)
@@ -1119,7 +1150,7 @@ def _count_probes_span(points_sorted, eps, p_start, p_count, p_qpos, p_zero,
     for dim in range(points_sorted.shape[1]):
         cd = jnp.take(points_sorted[:, dim], cand_pos)
         d2 = d2 + (q[:, dim][:, None] - cd) ** 2
-    hit = (d2 <= eps * eps) & valid
+    hit = metric_lib.l2_sq_hits(d2, eps) & valid
     if unicomp:
         tri = cand_pos > p_qpos[:, None]
         hit = hit & jnp.where(p_zero[:, None] != 0, tri, True)
@@ -1467,6 +1498,8 @@ def self_join_count(
     route: Optional[str] = None,
     bucketed: Optional[bool] = None,
     merge_last_dim: Optional[bool] = None,
+    metric: str = "l2",
+    vocab: Optional[int] = None,
 ) -> JoinStats:
     """Total ordered-pair count + work counters (no materialized result).
 
@@ -1498,12 +1531,36 @@ def self_join_count(
     only a small offset saving); the heuristic fallback never picks them.
     'compact' (a TPU per-offset packing) and the 'jnp' reference always
     sweep per cell.
+
+    ``metric`` / ``vocab`` as in ``self_join`` (DESIGN.md S12): cosine
+    canonicalizes onto the unit sphere and counts with the full L2
+    routing machinery; jaccard always runs the fused dense sweep over
+    the 1-D size grid (the only route whose kernel carries the bitmap
+    refine predicate).
     """
     routes = (None, "dense", "compact", "sparse", "jnp", "dense-flat",
               "sparse-flat", "dense-run")
     if route not in routes:
         raise ValueError(f"unknown route {route!r}; expected one of "
                          f"{routes[1:]}")
+    metric_lib.check_metric(metric)
+    if metric != "l2" or isinstance(points, metric_lib.Canonical):
+        canon = _metric_canonical(points, eps, metric, vocab)
+        if canon.metric == "jaccard":
+            if route not in (None, "dense", "dense-run"):
+                raise ValueError(
+                    f"route {route!r} does not support metric='jaccard'; "
+                    f"only the fused dense sweep carries the bitmap refine")
+            idx = _metric_grid(canon)
+            return _self_join_count_fused(
+                idx, unicomp=unicomp, query_batch=query_batch,
+                bucketed=bucketed, merged=False,
+                run_loop=route == "dense-run", metric="jaccard",
+                n_feat=canon.n_feat, feats=_metric_feats_sorted(canon, idx),
+                refine_eps=canon.eps)
+        if canon.metric == "cosine":
+            index = _metric_grid(canon)
+        points, eps = canon.geom, canon.eps_geom
     index = _resolve_index(points, eps, index)
     merged = _resolve_merge(index, merge_last_dim)
     route_label = "dense"
@@ -1653,6 +1710,69 @@ def _auto_route_uncached(index: GridIndex, *, unicomp: bool,
     return route
 
 
+def _metric_canonical(points, eps, metric: str,
+                      vocab=None) -> metric_lib.Canonical:
+    """Resolve the (points, eps, metric) triple to a ``metric.Canonical``:
+    pass-through for an already-canonicalized dataset (``eps`` must then
+    be None or match), ``metric.canonicalize`` otherwise."""
+    if isinstance(points, metric_lib.Canonical):
+        canon = points
+        if metric not in ("l2", canon.metric):
+            raise ValueError(
+                f"metric={metric!r} conflicts with the canonical dataset's "
+                f"metric {canon.metric!r}")
+        if eps is not None and float(eps) != canon.eps:
+            raise ValueError(
+                f"eps={eps} conflicts with the canonical dataset's "
+                f"threshold {canon.eps}; canonicalize at the new threshold")
+        return canon
+    return metric_lib.canonicalize(points, eps, metric=metric, vocab=vocab)
+
+
+def _metric_feats_sorted(canon: metric_lib.Canonical,
+                         index: GridIndex):
+    """Feature payload permuted into the index's sorted point order
+    (``points_sorted[i] == points[order[i]]``), or None."""
+    if canon.feats is None:
+        return None
+    return jnp.asarray(np.asarray(canon.feats)[np.asarray(index.order)])
+
+
+def _metric_grid(canon: metric_lib.Canonical) -> GridIndex:
+    """Grid over the canonical GEOMETRY at the derived prune radius: the
+    points themselves for l2, unit rows for cosine (both exact L2 grids),
+    the 1-D set-size coordinate for jaccard (DESIGN.md S12)."""
+    return build_grid(np.asarray(canon.geom), float(canon.eps_geom))
+
+
+def _metric_self_join(canon: metric_lib.Canonical, *, unicomp: bool,
+                      sort_result: bool, bucketed: Optional[bool] = None,
+                      index: Optional[GridIndex] = None) -> np.ndarray:
+    """Pair-emitting fused join for a canonicalized non-L2 dataset.
+
+    Cosine runs the full L2 machinery (merged sweep, occupancy buckets,
+    run loop) on the unit-sphere geometry -- the metric tag keys the
+    executable and the sanitize normalization check. Jaccard forces the
+    per-cell sweep over the 1-D size grid (merged last-dim reduction is
+    meaningless in 1-D) with the bitmap payload riding the feature lanes
+    and the kernel refining against the similarity threshold t itself.
+    """
+    if index is None:
+        index = _metric_grid(canon)
+    if canon.metric == "jaccard":
+        return _self_join_fused(
+            index, unicomp=unicomp, sort_result=sort_result,
+            bucketed=bucketed, merged=False, metric="jaccard",
+            n_feat=canon.n_feat, feats=_metric_feats_sorted(canon, index),
+            refine_eps=canon.eps)
+    merged = _join_sweep_merged(
+        index, unicomp=unicomp, bucketed=bucketed,
+        merged=_resolve_merge(index, None))
+    return _self_join_fused(
+        index, unicomp=unicomp, sort_result=sort_result, bucketed=bucketed,
+        merged=merged, metric=canon.metric)
+
+
 def self_join(
     points,
     eps,
@@ -1663,6 +1783,8 @@ def self_join(
     sort_result: bool = True,
     bucketed: Optional[bool] = None,
     merge_last_dim: Optional[bool] = None,
+    metric: str = "l2",
+    vocab: Optional[int] = None,
 ):
     """Single-batch self-join. Returns (pairs (K,2) int32 np.ndarray).
 
@@ -1673,7 +1795,26 @@ def self_join(
     (``merge_last_dim=False`` keeps the per-cell 3^n sweep as the parity
     oracle; DESIGN.md S7). For the incremental / overlapped execution the
     paper uses, see ``self_join_batched``.
+
+    ``metric`` (DESIGN.md S12): 'l2' (default, ``eps`` is the radius),
+    'cosine' (``points`` are raw embeddings, ``eps`` the minimum cosine
+    similarity in [-1, 1)), or 'jaccard' (``points`` are token-id
+    iterables or an (N, V) binary matrix, ``eps`` the minimum Jaccard
+    similarity in (0, 1]; ``vocab`` optionally fixes the packed
+    vocabulary). ``points`` may also be a pre-built ``metric.Canonical``
+    (then pass ``eps=None``). Non-L2 metrics canonicalize, build their
+    own geometry grid, and always run the fused path; ``index`` /
+    ``distance_impl`` apply to 'l2' only.
     """
+    metric_lib.check_metric(metric)
+    if metric != "l2" or isinstance(points, metric_lib.Canonical):
+        canon = _metric_canonical(points, eps, metric, vocab)
+        if canon.metric == "l2":
+            points, eps = canon.geom, canon.eps
+        else:
+            return _metric_self_join(
+                canon, unicomp=unicomp, sort_result=sort_result,
+                bucketed=bucketed)
     index = _resolve_index(points, eps, index)
     if distance_impl == "fused":
         merged = _join_sweep_merged(

@@ -43,16 +43,13 @@ def embed_ngrams(tokens: np.ndarray, n_dims: int = 4, n: int = 2,
     return counts @ proj
 
 
-def dedup_batch(tokens: np.ndarray, *, eps: float = 0.05, n_dims: int = 4,
-                unicomp: bool = True) -> np.ndarray:
-    """Boolean keep-mask over the batch; duplicate clusters keep one doc."""
-    emb = embed_ngrams(tokens, n_dims=n_dims)
-    pairs = self_join(emb, eps, unicomp=unicomp)
-    keep = np.ones(tokens.shape[0], bool)
+def _keep_from_pairs(n: int, pairs: np.ndarray) -> np.ndarray:
+    """Union-find over join pairs -> keep-mask: each duplicate cluster
+    keeps its lowest-id representative (chains a~b~c keep exactly one)."""
+    keep = np.ones(n, bool)
     if pairs.shape[0] == 0:
         return keep
-    # union-find so chains a~b~c keep exactly one representative
-    parent = np.arange(tokens.shape[0])
+    parent = np.arange(n)
 
     def find(x):
         while parent[x] != x:
@@ -64,7 +61,53 @@ def dedup_batch(tokens: np.ndarray, *, eps: float = 0.05, n_dims: int = 4,
         ra, rb = find(int(a)), find(int(b))
         if ra != rb:
             parent[max(ra, rb)] = min(ra, rb)
-    for i in range(tokens.shape[0]):
+    for i in range(n):
         if find(i) != i:
             keep[i] = False
     return keep
+
+
+def dedup_batch(tokens: np.ndarray, *, eps: float = 0.05, n_dims: int = 4,
+                unicomp: bool = True) -> np.ndarray:
+    """Boolean keep-mask over the batch; duplicate clusters keep one doc."""
+    emb = embed_ngrams(tokens, n_dims=n_dims)
+    pairs = self_join(emb, eps, unicomp=unicomp)
+    return _keep_from_pairs(tokens.shape[0], pairs)
+
+
+def guard_embeddings(emb: np.ndarray) -> np.ndarray:
+    """Boolean mask of rows safe to canonicalize for the cosine join:
+    finite in every lane AND nonzero norm. A failed encoder emits exactly
+    these rows (all-zero on a timeout, NaN on an overflow), and
+    ``metric.canonicalize(..., metric='cosine')`` rejects them by design
+    -- cosine similarity is undefined at the origin. The pipeline
+    quarantines them instead of crashing the batch."""
+    emb = np.asarray(emb)
+    finite = np.isfinite(emb).all(axis=1)
+    norms = np.where(finite, np.abs(emb).sum(axis=1), 0.0)
+    return finite & (norms > 0.0)
+
+
+def dedup_embeddings(emb: np.ndarray, *, min_cos: float = 0.98,
+                     unicomp: bool = True):
+    """Cosine near-duplicate removal over raw embedding rows.
+
+    Returns ``(keep, valid)`` boolean masks: ``valid`` marks rows the
+    zero-vector/NaN guard admitted to the join; invalid rows are KEPT
+    (their similarity is unknowable, dropping data on an encoder glitch
+    is worse) but quarantined from the join and flagged ``valid=False``
+    so the caller can retry their encode. Among valid rows, every
+    cluster with pairwise cosine similarity >= ``min_cos`` keeps its
+    lowest-id representative -- the join runs the metric-trait cosine
+    path (DESIGN.md S12): unit-normalize, then the paper's grid
+    self-join at the equivalent chord radius."""
+    emb = np.asarray(emb, np.float64)
+    valid = guard_embeddings(emb)
+    keep = np.ones(emb.shape[0], bool)
+    idx = np.flatnonzero(valid)
+    if idx.size:
+        pairs = self_join(emb[idx], float(min_cos), unicomp=unicomp,
+                          metric="cosine")
+        keep_valid = _keep_from_pairs(idx.size, pairs)
+        keep[idx] = keep_valid
+    return keep, valid

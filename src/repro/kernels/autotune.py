@@ -131,25 +131,39 @@ def _pow2_class(x: float) -> int:
 # Query-tile (TQ) selection
 # ---------------------------------------------------------------------------
 
-def tile_key(backend: str, n_dims: int, c: int) -> str:
-    return f"tile/{backend}/{n_dims}d/c{c}"
+def metric_class(metric: str) -> str:
+    """The metric's autotune table class (DESIGN.md S12). Cosine ALIASES
+    the l2 rows: its traced computation is exactly the L2 one (the static
+    tag only keys executables), so l2 measurements steer it correctly.
+    Jaccard's popcount predicate has different arithmetic intensity and
+    extra feature-lane traffic, so it keys its own rows."""
+    return "l2" if metric in ("l2", "cosine") else metric
+
+
+def tile_key(backend: str, n_dims: int, c: int, metric: str = "l2") -> str:
+    mc = metric_class(metric)
+    suffix = "" if mc == "l2" else f"/{mc}"
+    return f"tile/{backend}/{n_dims}d/c{c}{suffix}"
 
 
 def fused_tile(n_dims: int, c: int, *, backend: Optional[str] = None,
-               measure: Optional[bool] = None) -> int:
+               measure: Optional[bool] = None, metric: str = "l2") -> int:
     """Query tile for a fused launch of window capacity ``c``.
 
-    Cached measurement per (backend, n_dims, c); ``DEFAULT_TQ`` on a cache
-    miss with measurement disabled.
+    Cached measurement per (backend, n_dims, c, metric class);
+    ``DEFAULT_TQ`` on a cache miss with measurement disabled. Jaccard
+    classes never measure here (the synthetic workload below exercises the
+    L2 predicate, which would mislabel a jaccard row): they return a cache
+    hit or the default.
     """
     backend = _backend(backend)
-    key = tile_key(backend, int(n_dims), int(c))
+    key = tile_key(backend, int(n_dims), int(c), metric)
     entry = _CACHE.get(key)
     if entry is not None:
         return int(entry["tq"])
     if measure is None:
         measure = measure_enabled()
-    if not measure:
+    if not measure or metric_class(metric) == "jaccard":
         return DEFAULT_TQ
     tq, timings = _measure_fused_tile(n_dims, int(c))
     _CACHE.put(key, {"tq": tq, "ms": timings})
@@ -208,10 +222,13 @@ def _timed(fn: Callable) -> float:
 # ---------------------------------------------------------------------------
 
 def route_key(backend: str, n_dims: int, n_off: int, c_class: int,
-              live_class: int, merged: bool = False) -> str:
+              live_class: int, merged: bool = False,
+              metric: str = "l2") -> str:
     sweep = "merged" if merged else "flat"
+    mc = metric_class(metric)
+    suffix = "" if mc == "l2" else f"/{mc}"
     return (f"route/{backend}/{n_dims}d/off{n_off}/c{c_class}"
-            f"/live{live_class}/{sweep}")
+            f"/live{live_class}/{sweep}{suffix}")
 
 
 def route_heuristic(backend: str, n_dims: int, n_off: int, c: int,
@@ -244,22 +261,31 @@ def route_heuristic(backend: str, n_dims: int, n_off: int, c: int,
 def count_route(*, n_dims: int, n_off: int, c: int, occupancy: float,
                 live_frac: float, backend: Optional[str] = None,
                 merged: bool = False, candidates: Optional[dict] = None,
-                measure: Optional[bool] = None) -> tuple:
+                measure: Optional[bool] = None,
+                metric: str = "l2") -> tuple:
     """Route for ``self_join_count(distance_impl='fused')``.
 
     Returns ``(route, source)`` with source in {'cache', 'measured',
-    'heuristic'}. ``candidates`` maps route name -> zero-arg callable
-    running that counter on the live workload; when measurement is enabled
-    they are each warmed once and timed (best of 2), and the winner is
-    cached under the workload's class key -- the "measured routing table"
-    that replaces the density heuristic wherever it has been populated.
-    ``merged`` marks (and keys) the merged-range sweep: its candidates run
-    merged counters, so its measurements live in separate table rows.
+    'heuristic', 'forced'}. ``candidates`` maps route name -> zero-arg
+    callable running that counter on the live workload; when measurement
+    is enabled they are each warmed once and timed (best of 2), and the
+    winner is cached under the workload's class key -- the "measured
+    routing table" that replaces the density heuristic wherever it has
+    been populated. ``merged`` marks (and keys) the merged-range sweep:
+    its candidates run merged counters, so its measurements live in
+    separate table rows.
+
+    ``metric`` keys the table per ``metric_class``: cosine rides the l2
+    rows (same traced computation), while jaccard is FORCED onto the
+    fused dense sweep -- the compact/sparse/jnp counters evaluate the L2
+    predicate and cannot race a bitmap workload.
     """
     backend = _backend(backend)
+    if metric_class(metric) == "jaccard":
+        return "dense", "forced"
     key = route_key(backend, int(n_dims), int(n_off),
                     _pow2_class(c), _pow2_class(live_frac * n_off),
-                    merged)
+                    merged, metric)
     entry = _CACHE.get(key)
     if entry is not None:
         return str(entry["route"]), "cache"

@@ -84,8 +84,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NP_PAD = 8     # lane padding of the coordinate axis (matches cell_join.py)
+from repro.core import metric as metric_lib
+
+NP_PAD = 8     # minimum lane padding of the coordinate axis (cell_join.py)
 TQ_DEFAULT = 128  # query tile rows
+
+
+def pad_width(n_lanes: int) -> int:
+    """Padded lane count for ``n_lanes`` occupied lanes: at least NP_PAD,
+    rounded up to the 8-lane unit. Metrics with feature payloads (jaccard
+    bitmaps) widen the points array past NP_PAD; the kernel reads the
+    width back off the array shapes, so L2/cosine layouts are unchanged."""
+    return max(NP_PAD, -(-int(n_lanes) // 8) * 8)
 
 
 def resolve_merge_last_dim(n_dims: int,
@@ -105,43 +115,54 @@ def resolve_merge_last_dim(n_dims: int,
 
 def pad_points(points_sorted: jax.Array, tail: int,
                last_coord: jax.Array | None = None,
-               gid: jax.Array | None = None) -> jax.Array:
-    """(N, n) -> (N + tail, NP_PAD) zero-padded copy for in-kernel gathers.
+               gid: jax.Array | None = None,
+               feats: jax.Array | None = None) -> jax.Array:
+    """(N, n) -> (N + tail, L) zero-padded copy for in-kernel gathers,
+    with L = ``pad_width`` of the occupied lanes (NP_PAD unless feature
+    lanes widen it).
 
     ``tail`` >= C guarantees every C-slot window read is in bounds
     (win_start + C <= N + tail, see grid.window_descriptors); zero pad rows
     are never hits because their window slots are masked by win_count.
 
+    ``feats`` (metric feature payload, DESIGN.md S12): per-point non-
+    geometric lanes -- the jaccard metric's packed 16-bit token words as
+    exact small-integer floats -- stored in lanes [n, n + n_feat)
+    immediately after the coordinates, BEFORE the merged/gid lanes, so
+    the refine predicate addresses them at a metric-static offset.
+
     ``last_coord`` (merged-range sweeps, DESIGN.md S7): per-point
-    last-dimension CELL coordinate, stored in lane ``n`` (the first pad
-    lane) as an exactly-representable float so the kernel's boundary mask
-    reads it with the same gather as the coordinates. Requires n < NP_PAD;
-    the lane is excluded from the distance sum by the kernel's static
-    ``n_real``.
+    last-dimension CELL coordinate, stored in the first lane after the
+    coordinate+feature lanes as an exactly-representable float so the
+    kernel's boundary mask reads it with the same gather as the
+    coordinates. Requires a free lane below NP_PAD in the featureless
+    layout; the lane is excluded from the distance sum by the kernel's
+    static ``n_real``.
 
     ``gid`` (distributed slab joins, DESIGN.md S3): per-point GLOBAL id,
-    stored in the lane after the coordinates (and after ``last_coord``
-    when both ride). The kernel's ``gid_pairs`` masks compare these
-    instead of sorted positions, making the UNICOMP intra-cell tie-break
-    device-independent. Ids are small integers (< 2^24), exact in f32, so
-    the TPU downcast never reorders them; tail rows carry -1.
+    stored in the lane after the coordinates (and after ``feats`` /
+    ``last_coord`` when they ride). The kernel's ``gid_pairs`` masks
+    compare these instead of sorted positions, making the UNICOMP
+    intra-cell tie-break device-independent. Ids are small integers
+    (< 2^24), exact in f32, so the TPU downcast never reorders them; tail
+    rows carry -1.
     """
     n = points_sorted.shape[1]
-    out = jnp.pad(points_sorted, ((0, tail), (0, max(NP_PAD - n, 0))))
+    n_feat = 0 if feats is None else feats.shape[1]
+    lanes = (n + n_feat + (0 if last_coord is None else 1)
+             + (0 if gid is None else 1))
+    np_pad = pad_width(lanes)
+    out = jnp.pad(points_sorted, ((0, tail), (0, np_pad - n)))
     lane = n
+    if feats is not None:
+        fp = jnp.pad(feats.astype(points_sorted.dtype), ((0, tail), (0, 0)))
+        out = jax.lax.dynamic_update_slice(out, fp, (0, lane))
+        lane += n_feat
     if last_coord is not None:
-        if lane >= NP_PAD:
-            raise ValueError(
-                f"merged sweep needs a free coordinate lane: n_dims={n} "
-                f">= NP_PAD={NP_PAD}")
         lc = jnp.pad(last_coord.astype(points_sorted.dtype), (0, tail))
         out = out.at[:, lane].set(lc)
         lane += 1
     if gid is not None:
-        if lane >= NP_PAD:
-            raise ValueError(
-                f"global-id lane needs a free pad lane: n_dims={n} "
-                f"(+{lane - n} in use) >= NP_PAD={NP_PAD}")
         g = jnp.pad(gid.astype(points_sorted.dtype), (0, tail),
                     constant_values=-1)
         out = out.at[:, lane].set(g)
@@ -191,19 +212,15 @@ def _mask_hits(hit, cand_pos, q_pos, zero, unicomp: bool,
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, ord_ref, eps2_ref, q_ref,
+def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, ord_ref, scal_ref, q_ref,
                   pts_ref, hits_ref, counts_ref, base_ref, win_ref, sem_ref,
                   *, c, tq, n_real, unicomp, external, merged, gid_pairs,
-                  run_loop):
+                  run_loop, metric, n_feat):
     i = pl.program_id(0)           # query tile
     j = pl.program_id(1)           # stencil offset (innermost: q tile resident)
     n_off = pl.num_programs(1)
-    eps2 = eps2_ref[0, 0]
+    scal = scal_ref[0, 0]          # metric refine scalar (core.metric)
     zero = iz_ref[j]
-    # distance sum excludes pad lanes: with the merged sweep, lane n_real
-    # carries the last-dimension cell coordinate, not a zero
-    lane = jax.lax.broadcasted_iota(jnp.int32, (1, NP_PAD), 1)
-    lane_w = (lane < n_real).astype(q_ref.dtype)
 
     @pl.when(j == 0)
     def _init():
@@ -256,24 +273,30 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, ord_ref, eps2_ref, q_ref,
         cnt = wc_ref[j, qg]
         window = win_ref[slot]                            # (C, NP)
         qrow = q_ref[pl.ds(r, 1), :]                      # (1, NP)
-        d = (window - qrow) * lane_w
-        d2 = jnp.sum(d * d, axis=-1)                      # (C,)
+        # metric refine (core.metric, DESIGN.md S12): the predicate skips
+        # pad lanes by the static (n_real, n_feat) layout -- with the
+        # merged sweep, lane n_real + n_feat carries the last-dimension
+        # cell coordinate, not a zero
+        hit = metric_lib.tile_refine_hits(metric, qrow, window, scal,
+                                          n_real=n_real, n_feat=n_feat)
         slots = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)[:, 0]
         cand_pos = start + slots
-        hit = (d2 <= eps2) & (slots < cnt)
+        hit = hit & (slots < cnt)
         ldiff = None
         if merged:
             # last-dimension boundary mask (DESIGN.md S7): a candidate
             # whose last-dim cell coordinate wrapped across a grid row is
-            # not a stencil neighbor; coordinates ride lane n_real as
-            # exact integers, so the float compare is exact
-            ldiff = window[:, n_real] - qrow[0, n_real]
+            # not a stencil neighbor; coordinates ride the lane after the
+            # coordinate+feature lanes as exact integers, so the float
+            # compare is exact
+            ml = n_real + n_feat
+            ldiff = window[:, ml] - qrow[0, ml]
             hit = hit & (jnp.abs(ldiff) <= 1)
         gq = gc = None
         if gid_pairs:
-            # global ids ride the lane after the coordinates (and after
-            # the merged coordinate lane); exact small integers in float
-            gl = n_real + (1 if merged else 0)
+            # global ids ride the lane after the coordinates/features (and
+            # after the merged coordinate lane); exact small ints in float
+            gl = n_real + n_feat + (1 if merged else 0)
             gq, gc = qrow[0, gl], window[:, gl]
         hit = _mask_hits(hit, cand_pos, q_pos, zero, unicomp, external,
                          gq, gc, ldiff if gid_pairs else None)
@@ -293,13 +316,14 @@ def _fused_kernel(ws_ref, wc_ref, iz_ref, qpos_ref, ord_ref, eps2_ref, q_ref,
 @functools.partial(
     jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
                               "merged", "gid_pairs", "keep_hits", "run_loop",
-                              "interpret"))
+                              "interpret", "metric", "n_feat"))
 def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
-                            is_zero, q_pos, run_ord, eps2, *, c, tq, n_real,
+                            is_zero, q_pos, run_ord, scal, *, c, tq, n_real,
                             unicomp, external=False, merged=False,
                             gid_pairs=False, keep_hits=True, run_loop=False,
-                            interpret=True):
+                            interpret=True, metric="l2", n_feat=0):
     n_off, qp = win_start.shape
+    np_pad = points_pad.shape[1]   # pad_width: NP_PAD unless feats widen it
     if keep_hits:
         hits_shape, hits_map = (n_off, qp, c), (lambda i, j, *_: (j, i, 0))
     else:
@@ -311,7 +335,7 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
         grid=(qp // tq, n_off),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, *_: (0, 0)),
-            pl.BlockSpec((tq, NP_PAD), lambda i, j, *_: (i, 0)),
+            pl.BlockSpec((tq, np_pad), lambda i, j, *_: (i, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=[
@@ -320,14 +344,15 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
             pl.BlockSpec((tq, 1), lambda i, j, *_: (i, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((2, c, NP_PAD), points_pad.dtype),  # double-buffered
+            pltpu.VMEM((2, c, np_pad), points_pad.dtype),  # double-buffered
             pltpu.SemaphoreType.DMA((2,)),                 # window DMA slots
         ],
     )
     hits, counts, base = pl.pallas_call(
         functools.partial(_fused_kernel, c=c, tq=tq, n_real=n_real,
                           unicomp=unicomp, external=external, merged=merged,
-                          gid_pairs=gid_pairs, run_loop=run_loop),
+                          gid_pairs=gid_pairs, run_loop=run_loop,
+                          metric=metric, n_feat=n_feat),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(hits_shape, jnp.int8),
@@ -335,7 +360,7 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
             jax.ShapeDtypeStruct((qp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(win_start, win_count, is_zero, q_pos, run_ord, eps2, q_batch,
+    )(win_start, win_count, is_zero, q_pos, run_ord, scal, q_batch,
       points_pad)
     return hits, counts[:, 0], base[:, 0]
 
@@ -344,33 +369,33 @@ def _fused_join_hits_pallas(points_pad, q_batch, win_start, win_count,
 # Reference lowering (identical semantics, no Mosaic required)
 # ---------------------------------------------------------------------------
 
-def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
+def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, scal, *,
                  c, n_real, unicomp, external=False, merged=False,
-                 gid_pairs=False):
+                 gid_pairs=False, metric="l2", n_feat=0):
     """Masked hits of every query against one offset's windows.
 
-    Distances accumulate dimension-by-dimension over (Q, C) column gathers,
-    so no (Q, C, n) candidate tensor exists on this path either.
+    The metric refine accumulates lane-by-lane over (Q, C) column gathers
+    (``metric.plane_refine_hits``), so no (Q, C, n) candidate tensor
+    exists on this path either.
     """
-    qp = ws.shape[0]
     slots = jnp.arange(c, dtype=jnp.int32)
     cand_pos = ws[:, None] + slots[None, :]               # (Q, C)
-    d2 = jnp.zeros((qp, c), points_pad.dtype)
-    for dim in range(n_real):
-        cd = jnp.take(points_pad[:, dim], cand_pos)
-        d2 = d2 + (q_batch[:, dim][:, None] - cd) ** 2
-    hit = (d2 <= eps2) & (slots[None, :] < wc[:, None])
+    hit = metric_lib.plane_refine_hits(metric, points_pad, q_batch,
+                                       cand_pos, scal, n_real=n_real,
+                                       n_feat=n_feat)
+    hit = hit & (slots[None, :] < wc[:, None])
     ldiff = None
     if merged:
         # last-dimension boundary mask, identical to the kernel's: cell
-        # coordinates ride lane n_real of points_pad / q_batch as exact
-        # integers (grid.point_last_coords)
-        ldiff = (jnp.take(points_pad[:, n_real], cand_pos)
-                 - q_batch[:, n_real][:, None])
+        # coordinates ride the lane after the coordinate+feature lanes of
+        # points_pad / q_batch as exact integers (grid.point_last_coords)
+        ml = n_real + n_feat
+        ldiff = (jnp.take(points_pad[:, ml], cand_pos)
+                 - q_batch[:, ml][:, None])
         hit = hit & (jnp.abs(ldiff) <= 1)
     gq = gc = None
     if gid_pairs:
-        gl = n_real + (1 if merged else 0)
+        gl = n_real + n_feat + (1 if merged else 0)
         gq = q_batch[:, gl][:, None]
         gc = jnp.take(points_pad[:, gl], cand_pos)
     return _mask_hits(hit, cand_pos, q_pos[:, None], zero, unicomp, external,
@@ -379,25 +404,28 @@ def _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2, *,
 
 @functools.partial(
     jax.jit, static_argnames=("c", "tq", "n_real", "unicomp", "external",
-                              "merged", "gid_pairs", "keep_hits"))
+                              "merged", "gid_pairs", "keep_hits", "metric",
+                              "n_feat"))
 def _fused_join_hits_reference(points_pad, q_batch, win_start, win_count,
-                               is_zero, q_pos, run_ord, eps2, *, c, tq,
+                               is_zero, q_pos, run_ord, scal, *, c, tq,
                                n_real, unicomp, external=False, merged=False,
-                               gid_pairs=False, keep_hits=True):
+                               gid_pairs=False, keep_hits=True, metric="l2",
+                               n_feat=0):
     # ``run_ord`` is accepted for arity parity with the kernel and IGNORED:
     # evaluating each row against its own descriptors is the run-loop's
     # semantics whenever the plan satisfies the shared-window contract
     # (module docstring), so the reference is the oracle for both modes.
     del run_ord
     n_off, qp = win_start.shape
-    eps2s = eps2[0, 0]
+    scals = scal[0, 0]
 
     def per_offset(counts, xs):
         ws, wc, zero = xs
-        hit = _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, eps2s,
+        hit = _offset_hits(points_pad, q_batch, ws, wc, zero, q_pos, scals,
                            c=c, n_real=n_real, unicomp=unicomp,
                            external=external, merged=merged,
-                           gid_pairs=gid_pairs)
+                           gid_pairs=gid_pairs, metric=metric,
+                           n_feat=n_feat)
         counts = counts + hit.sum(axis=1, dtype=jnp.int32)
         out = hit.astype(jnp.int8) if keep_hits else jnp.zeros((), jnp.int8)
         return counts, out
@@ -420,7 +448,7 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                     q_pos, eps, *, c, n_real, unicomp, external=False,
                     merged=False, gid_pairs=False, tq=TQ_DEFAULT,
                     keep_hits=True, run_ord=None, run_loop=False,
-                    method=None, interpret=True):
+                    method=None, interpret=True, metric="l2", n_feat=0):
     """Fused gather-refine sweep over all stencil offsets in one launch.
 
     Args:
@@ -443,7 +471,11 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                   prefetched as a scalar array (self-join masking only;
                   pass zeros with ``external``). Padding rows may carry any
                   in-range value -- their windows are count-0.
-      eps:        scalar threshold; hits are d^2 <= eps^2.
+      eps:        scalar refine threshold in the metric's UNsquared form:
+                  the geometry radius for l2/cosine (squared once by
+                  ``metric.device_refine_scalar``), the Jaccard similarity
+                  threshold t for jaccard. Traced, so a mix of radii per
+                  metric shares one executable.
       c:          static window capacity (the launch's bucket capacity; the
                   global ``max_per_cell`` rounded up in the unbucketed case).
       n_real:     static true dimensionality (reference path skips pad lanes).
@@ -472,12 +504,19 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                   (win_start, win_count) columns for all offsets
                   (``analysis.contracts.check_run_plan``).
       method:     'kernel' | 'reference' | None (auto: kernel on TPU).
+      metric:     static metric tag ('l2' | 'cosine' | 'jaccard'): selects
+                  the refine predicate (core.metric) and keys a SEPARATE
+                  executable per metric -- no traced branch.
+      n_feat:     static count of metric feature lanes riding points_pad /
+                  q_batch at lanes [n_real, n_real + n_feat) (jaccard
+                  bitmap words; 0 otherwise).
 
     Returns (hits, counts, slot_base); hits is (1, Q_pad, c) scratch when
     ``keep_hits`` is False.
     """
     if method is None:
         method = "kernel" if jax.default_backend() == "tpu" else "reference"
+    metric_lib.check_metric(metric)
     q_pos = jnp.asarray(q_pos, jnp.int32)
     if run_ord is None:
         if run_loop:
@@ -485,25 +524,28 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                              "(grid.cell_run_plan)")
         run_ord = jnp.zeros((win_start.shape[1],), jnp.int32)
     run_ord = jnp.asarray(run_ord, jnp.int32)
-    eps2 = jnp.reshape(jnp.asarray(eps, points_pad.dtype) ** 2, (1, 1))
+    scal = metric_lib.device_refine_scalar(metric, eps, points_pad.dtype)
     if method == "kernel":
         return _fused_join_hits_pallas(
             points_pad, q_batch, win_start, win_count, is_zero, q_pos,
-            run_ord, eps2, c=c, tq=tq, n_real=n_real, unicomp=unicomp,
+            run_ord, scal, c=c, tq=tq, n_real=n_real, unicomp=unicomp,
             external=external, merged=merged, gid_pairs=gid_pairs,
-            keep_hits=keep_hits, run_loop=run_loop, interpret=interpret)
+            keep_hits=keep_hits, run_loop=run_loop, interpret=interpret,
+            metric=metric, n_feat=n_feat)
     if method == "reference":
         return _fused_join_hits_reference(
             points_pad, q_batch, win_start, win_count, is_zero, q_pos,
-            run_ord, eps2, c=c, tq=tq, n_real=n_real, unicomp=unicomp,
+            run_ord, scal, c=c, tq=tq, n_real=n_real, unicomp=unicomp,
             external=external, merged=merged, gid_pairs=gid_pairs,
-            keep_hits=keep_hits)
+            keep_hits=keep_hits, metric=metric, n_feat=n_feat)
     raise ValueError(f"unknown fused_join method {method!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("c", "tq", "check_hits"))
+@functools.partial(jax.jit, static_argnames=("c", "tq", "check_hits",
+                                             "metric", "n_real"))
 def sanitize_errcodes(points_pad, q_batch, win_start, win_count, counts,
-                      base, hits, *, c, tq, check_hits=False):
+                      base, hits, *, c, tq, check_hits=False, metric="l2",
+                      n_real=None):
     """Device-side invariant reduction for one fused launch -> int32 bitmask.
 
     The sanitized-mode checker (``REPRO_SANITIZE=1``, analysis/sanitize.py):
@@ -520,9 +562,17 @@ def sanitize_errcodes(points_pad, q_batch, win_start, win_count, counts,
       scan-mismatch  slot_base is not the per-tile exclusive scan of counts
                      (or, with ``check_hits``, counts disagree with the hits
                      mask) -- the emit path's slot writes would collide.
-      nonfinite      NaN/Inf in the points or query coordinates.
+      nonfinite      NaN/Inf in the points or query coordinates. With
+                     ``metric='jaccard'`` the check covers the GEOMETRY
+                     lanes [0, n_real) only: the bitmap feature lanes are
+                     packed integer words, not coordinates.
       count-range    negative window counts, or per-query totals outside
                      [0, n_off * c].
+      unnormalized   (``metric='cosine'`` only) a NONZERO point or query
+                     row whose coordinate-lane squared norm is off unity by
+                     more than ``metric.NORM_TOL``: raw embeddings reached
+                     the kernel without canonicalization. All-zero rows are
+                     padding, not input (canonicalize rejects zero rows).
     """
     from repro.analysis import sanitize as _san
 
@@ -542,9 +592,17 @@ def sanitize_errcodes(points_pad, q_batch, win_start, win_count, counts,
         scan_bad = scan_bad | jnp.any(
             hits.astype(jnp.int32).sum(axis=(0, 2)) != counts)
     code = code | jnp.where(scan_bad, _san.E_SCAN_MISMATCH, 0)
-    finite = (jnp.all(jnp.isfinite(points_pad))
-              & jnp.all(jnp.isfinite(q_batch)))
+    n_chk = points_pad.shape[1] if (metric != "jaccard" or n_real is None) \
+        else n_real
+    finite = (jnp.all(jnp.isfinite(points_pad[:, :n_chk]))
+              & jnp.all(jnp.isfinite(q_batch[:, :n_chk])))
     code = code | jnp.where(~finite, _san.E_NONFINITE, 0)
+    if metric == "cosine" and n_real is not None:
+        def off_unit(rows):
+            n2 = jnp.sum(rows[:, :n_real] * rows[:, :n_real], axis=1)
+            return jnp.any((n2 > 0) & (jnp.abs(n2 - 1) > metric_lib.NORM_TOL))
+        code = code | jnp.where(off_unit(points_pad) | off_unit(q_batch),
+                                _san.E_UNNORMALIZED, 0)
     return code.astype(jnp.int32)
 
 
@@ -559,4 +617,4 @@ def fused_window_hits(points_sorted, q, cand_pos, valid, eps):
     for dim in range(q.shape[1]):
         cd = jnp.take(points_sorted[:, dim], cand_pos)
         d2 = d2 + (q[:, dim][:, None] - cd) ** 2
-    return (d2 <= eps * eps) & valid
+    return metric_lib.l2_sq_hits(d2, eps) & valid

@@ -54,7 +54,8 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
                     q_pos, eps, *, c, n_real, unicomp, external=False,
                     merged=False, gid_pairs=False,
                     tq=_fused_join.TQ_DEFAULT, keep_hits=True,
-                    run_ord=None, run_loop=False, method=None):
+                    run_ord=None, run_loop=False, method=None,
+                    metric="l2", n_feat=0):
     """Fused gather-refine sweep (all offsets, one launch) -> hits/counts.
 
     ``q_pos`` is the (Q_pad,) per-row sorted-position array (zeros for
@@ -70,6 +71,8 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
     DESIGN.md S3; ids < 2^24, exact in f32). ``run_loop=True`` with a
     ``run_ord`` plan (grid.cell_run_plan) enables the cell-run DMA dedup
     (DESIGN.md S11): one window gather per run of co-located query rows.
+    ``metric``/``n_feat`` (DESIGN.md S12) select the static refine
+    predicate (core/metric.py) and the feature-lane layout.
     """
     dt = _kernel_dtype(points_pad.dtype)
     pts, qb = points_pad.astype(dt), q_batch.astype(dt)
@@ -78,16 +81,17 @@ def fused_join_hits(points_pad, q_batch, win_start, win_count, is_zero,
         is_zero, q_pos, eps, c=c, n_real=n_real, unicomp=unicomp,
         external=external, merged=merged, gid_pairs=gid_pairs, tq=tq,
         keep_hits=keep_hits, run_ord=run_ord, run_loop=run_loop,
-        method=method, interpret=_INTERPRET,
+        method=method, interpret=_INTERPRET, metric=metric, n_feat=n_feat,
     )
     if _sanitize.enabled():
         hits, counts, base = out
         code = _fused_join.sanitize_errcodes(
             pts, qb, jnp.asarray(win_start, jnp.int32),
             jnp.asarray(win_count, jnp.int32), counts, base, hits,
-            c=c, tq=tq, check_hits=keep_hits)
+            c=c, tq=tq, check_hits=keep_hits, metric=metric, n_real=n_real)
         _sanitize.record(
-            f"fused_join[c={c},tq={tq},merged={merged},ext={external}]",
+            f"fused_join[c={c},tq={tq},merged={merged},ext={external},"
+            f"metric={metric}]",
             code)
     return out
 

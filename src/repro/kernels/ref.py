@@ -2,22 +2,26 @@
 
 Each function is the exact mathematical specification its kernel is tested
 against (tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+The epsilon predicate itself is owned by core/metric.py (DESIGN.md S12);
+these oracles only compute squared distances and delegate the compare.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import metric as metric_lib
+
 
 def distance_tile_hits_ref(q, pts, eps):
     """(TQ,n) x (N,n) -> (TQ,N) bool: ||q_i - p_j||^2 <= eps^2."""
     d2 = jnp.sum((q[:, None, :] - pts[None, :, :]) ** 2, axis=-1)
-    return d2 <= jnp.asarray(eps, q.dtype) ** 2
+    return metric_lib.l2_sq_hits(d2, jnp.asarray(eps, q.dtype))
 
 
 def distance_tile_counts_ref(pts, eps):
     """(N,n) -> (N,) int32: per-point epsilon-neighbor count, excl. self."""
     d2 = jnp.sum((pts[:, None, :] - pts[None, :, :]) ** 2, axis=-1)
-    hits = d2 <= jnp.asarray(eps, pts.dtype) ** 2
+    hits = metric_lib.l2_sq_hits(d2, jnp.asarray(eps, pts.dtype))
     n = pts.shape[0]
     hits = hits & ~jnp.eye(n, dtype=bool)
     return hits.sum(axis=1).astype(jnp.int32)
@@ -26,4 +30,4 @@ def distance_tile_counts_ref(pts, eps):
 def cell_join_hits_ref(q, cand, valid, eps):
     """(B,n) x (B,C,n) x (B,C) -> (B,C) bool masked epsilon-hits."""
     d2 = jnp.sum((q[:, None, :] - cand) ** 2, axis=-1)
-    return (d2 <= jnp.asarray(eps, q.dtype) ** 2) & valid
+    return metric_lib.l2_sq_hits(d2, jnp.asarray(eps, q.dtype)) & valid

@@ -169,18 +169,35 @@ class JoinService(_JoinServiceBase):
 
     def __init__(self, points: np.ndarray, eps: float, *,
                  index=None, return_pairs: bool = False,
-                 merge_last_dim: Optional[bool] = None):
+                 merge_last_dim: Optional[bool] = None,
+                 metric: str = "l2", vocab: Optional[int] = None):
+        from repro.core import metric as metric_lib
         from repro.core.grid import build_grid
         from repro.core.query_join import prepare
 
         super().__init__(return_pairs)
-        self.eps = float(eps)
+        metric_lib.check_metric(metric)
+        self.metric = metric
+        self.vocab = vocab
+        self.eps = float(eps)          # METRIC-units threshold throughout
         self.merge_last_dim = merge_last_dim
         t0 = time.perf_counter()
-        if index is None:
-            index = build_grid(np.asarray(points), float(eps))
-        self._snapshot = (index, prepare(index,
-                                         merge_last_dim=merge_last_dim))
+        if metric != "l2":
+            if index is not None:
+                raise ValueError(
+                    "JoinService: non-L2 metrics build their own index "
+                    "over the canonical geometry; pass raw points")
+            canon = metric_lib.canonicalize(points, eps, metric=metric,
+                                            vocab=vocab)
+            index = build_grid(np.asarray(canon.geom),
+                               float(canon.eps_geom))
+            prepared = prepare(index, merge_last_dim=merge_last_dim,
+                               canon=canon)
+        else:
+            if index is None:
+                index = build_grid(np.asarray(points), float(eps))
+            prepared = prepare(index, merge_last_dim=merge_last_dim)
+        self._snapshot = (index, prepared)
         self.build_s = time.perf_counter() - t0
         self.swaps = 0
         self.reindex_timings: Optional[dict] = None
@@ -228,18 +245,29 @@ class JoinService(_JoinServiceBase):
         if self._reindex_thread is not None and self._reindex_thread.is_alive():
             raise RuntimeError("reindex already in progress")
         self.join_reindex()          # surface a previous failure, if any
-        pts = np.asarray(points)
+        # non-L2 input may be ragged (token sets); canonicalize in-thread
+        pts = np.asarray(points) if self.metric == "l2" else points
 
         def work():
             try:
+                from repro.core import metric as metric_lib
                 from repro.core.grid import build_grid
                 from repro.core.query_join import prepare
 
                 t0 = time.perf_counter()
-                index = jax.block_until_ready(build_grid(pts, self.eps))
+                canon = None
+                if self.metric != "l2":
+                    canon = metric_lib.canonicalize(
+                        pts, self.eps, metric=self.metric, vocab=self.vocab)
+                    geom, eps_geom = np.asarray(canon.geom), canon.eps_geom
+                else:
+                    geom, eps_geom = pts, self.eps
+                index = jax.block_until_ready(
+                    build_grid(geom, float(eps_geom)))
                 t1 = time.perf_counter()
                 prepared = prepare(index,
-                                   merge_last_dim=self.merge_last_dim)
+                                   merge_last_dim=self.merge_last_dim,
+                                   canon=canon)
                 t2 = time.perf_counter()
                 for qp in sorted(self._warm_buckets):
                     prepared.warm(qp, return_pairs=self.return_pairs)
@@ -295,17 +323,29 @@ class ShardedJoinService(_JoinServiceBase):
 
     def __init__(self, points: np.ndarray, eps: float, n_slabs: int, *,
                  return_pairs: bool = False,
-                 merge_last_dim: Optional[bool] = None):
+                 merge_last_dim: Optional[bool] = None,
+                 metric: str = "l2", vocab: Optional[int] = None):
+        from repro.core import metric as metric_lib
         from repro.core.distributed import partition_points_host
         from repro.core.grid import build_grid_host
         from repro.core.query_join import prepare
 
         super().__init__(return_pairs)
-        pts = np.asarray(points)
+        metric_lib.check_metric(metric)
+        self.metric = metric
+        self.eps = float(eps)          # METRIC-units threshold
+        # canonicalize ONCE over the full set (slab grids partition the
+        # canonical geometry; queries canonicalize against this form)
+        self._query_canon = None
+        if metric != "l2":
+            self._query_canon = metric_lib.canonicalize(
+                points, eps, metric=metric, vocab=vocab)
+            pts = np.asarray(self._query_canon.geom)
+        else:
+            pts = np.asarray(points)
         t0 = time.perf_counter()
         coords, gids, _ = partition_points_host(pts, n_slabs)
         self.n_slabs = n_slabs
-        self.eps = float(eps)
         self.slab_gids: list[np.ndarray] = []
         self.prepared: list = []
         self.indexes: list = []
@@ -313,10 +353,21 @@ class ShardedJoinService(_JoinServiceBase):
             own = gids[k] >= 0
             if not own.any():
                 continue                      # empty slab: nothing to index
-            self.slab_gids.append(gids[k][own])
-            idx = build_grid_host(coords[k][own], float(eps))
+            sg = gids[k][own]
+            self.slab_gids.append(sg)
+            canon_k = None
+            if self._query_canon is not None:
+                qc = self._query_canon
+                canon_k = metric_lib.Canonical(
+                    qc.metric, coords[k][own],
+                    None if qc.feats is None else qc.feats[sg],
+                    qc.n_feat, qc.eps, qc.eps_geom, qc.vocab)
+            idx = build_grid_host(coords[k][own],
+                                  float(self._query_canon.eps_geom
+                                        if canon_k else eps))
             self.indexes.append(idx)
-            self.prepared.append(prepare(idx, merge_last_dim=merge_last_dim))
+            self.prepared.append(prepare(idx, merge_last_dim=merge_last_dim,
+                                         canon=canon_k))
         self.build_s = time.perf_counter() - t0
 
     def warmup(self, batch_size: int) -> int:
@@ -331,6 +382,12 @@ class ShardedJoinService(_JoinServiceBase):
         return qp
 
     def _answer(self, queries: np.ndarray, eps: Optional[float] = None):
+        # canonicalize raw metric queries ONCE (the pre-canonicalized
+        # tuple path in join_async), not once per slab
+        if self._query_canon is not None:
+            from repro.core import metric as metric_lib
+            queries = metric_lib.canonicalize_queries(self._query_canon,
+                                                      queries)
         # dispatch EVERY slab before resolving ANY: the k-th slab's fused
         # sweep executes on device while the (k+1)-th is still being set
         # up on the host (join_async seam, DESIGN.md S8)
@@ -480,21 +537,37 @@ class BatchingJoinService(_JoinServiceBase):
     def __init__(self, points: np.ndarray, eps: float, *,
                  index=None, n_slabs: int = 1, return_pairs: bool = False,
                  merge_last_dim: Optional[bool] = None,
-                 max_batch: int = 1024, max_wait_ms: float = 2.0):
+                 max_batch: int = 1024, max_wait_ms: float = 2.0,
+                 metric: str = "l2", vocab: Optional[int] = None):
+        from repro.core import metric as metric_lib
         from repro.core.grid import build_grid_host
         from repro.core.query_join import prepare
 
         super().__init__(return_pairs)
+        metric_lib.check_metric(metric)
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
-        self.eps = float(eps)
+        self.metric = metric
+        self.eps = float(eps)          # METRIC-units threshold
+        # full-set canonical form: admission-time query canonicalization
+        # (slab grids partition the canonical geometry)
+        self._query_canon = None
+        if metric != "l2":
+            if index is not None:
+                raise ValueError(
+                    "BatchingJoinService: non-L2 metrics build their own "
+                    "index over the canonical geometry; pass raw points")
+            self._query_canon = metric_lib.canonicalize(
+                points, eps, metric=metric, vocab=vocab)
         t0 = time.perf_counter()
         if n_slabs > 1:
             from repro.core.distributed import partition_points_host
 
-            pts = np.asarray(points)
+            qc = self._query_canon
+            pts = np.asarray(points if qc is None else qc.geom)
+            eps_geom = float(eps if qc is None else qc.eps_geom)
             coords, gids, _ = partition_points_host(pts, n_slabs)
             self.slab_gids = []
             self.indexes = []
@@ -503,17 +576,32 @@ class BatchingJoinService(_JoinServiceBase):
                 own = gids[k] >= 0
                 if not own.any():
                     continue
-                self.slab_gids.append(gids[k][own])
-                idx = build_grid_host(coords[k][own], float(eps))
+                sg = gids[k][own]
+                self.slab_gids.append(sg)
+                canon_k = None
+                if qc is not None:
+                    canon_k = metric_lib.Canonical(
+                        qc.metric, coords[k][own],
+                        None if qc.feats is None else qc.feats[sg],
+                        qc.n_feat, qc.eps, qc.eps_geom, qc.vocab)
+                idx = build_grid_host(coords[k][own], eps_geom)
                 self.indexes.append(idx)
                 self.prepared.append(
-                    prepare(idx, merge_last_dim=merge_last_dim))
+                    prepare(idx, merge_last_dim=merge_last_dim,
+                            canon=canon_k))
         else:
-            idx = index if index is not None else build_grid_host(
-                np.asarray(points), float(eps))
+            qc = self._query_canon
+            if index is not None:
+                idx = index
+            elif qc is not None:
+                idx = build_grid_host(np.asarray(qc.geom),
+                                      float(qc.eps_geom))
+            else:
+                idx = build_grid_host(np.asarray(points), float(eps))
             self.slab_gids = None
             self.indexes = [idx]
-            self.prepared = [prepare(idx, merge_last_dim=merge_last_dim)]
+            self.prepared = [prepare(idx, merge_last_dim=merge_last_dim,
+                                     canon=qc)]
         self.n_slabs = len(self.prepared)
         self.build_s = time.perf_counter() - t0
         self._queue: deque[_Sub] = deque()
@@ -533,10 +621,22 @@ class BatchingJoinService(_JoinServiceBase):
         from repro.core.query_join import QueryJoinResult, note_metric_peak
 
         pj0 = self.prepared[0]
-        q = np.asarray(queries, pj0.dtype)
-        if q.ndim != 2 or q.shape[1] != pj0.n_dims:
-            raise ValueError(f"queries must be (Q, {pj0.n_dims}), "
-                             f"got {q.shape}")
+        if self.metric != "l2":
+            # canonicalize at ADMISSION (once per request, not per launch/
+            # slab): geometry + feature lanes coalesce as one 2-D array
+            # and split back at launch into join_async's tuple path
+            from repro.core import metric as metric_lib
+
+            qg, qf = metric_lib.canonicalize_queries(self._query_canon,
+                                                     queries)
+            q = np.asarray(qg, pj0.dtype)
+            if qf is not None:
+                q = np.concatenate([q, np.asarray(qf, pj0.dtype)], axis=1)
+        else:
+            q = np.asarray(queries, pj0.dtype)
+            if q.ndim != 2 or q.shape[1] != pj0.n_dims:
+                raise ValueError(f"queries must be (Q, {pj0.n_dims}), "
+                                 f"got {q.shape}")
         eps_key = float(self.eps if eps is None else eps)
         n = q.shape[0]
         if n == 0:
@@ -593,7 +693,15 @@ class BatchingJoinService(_JoinServiceBase):
         qcat, bounds = coalesce_requests([s.queries for s in group])
         eps = group[0].eps_key
         single = self.slab_gids is None
-        pendings = [pj.join_async(qcat, eps=eps,
+        pj0 = self.prepared[0]
+        if self.metric != "l2":
+            # split the admission-time concatenation back into the
+            # (geometry, features) pair join_async consumes directly
+            qsend = (qcat[:, :pj0.n_dims],
+                     qcat[:, pj0.n_dims:] if pj0.n_feat else None)
+        else:
+            qsend = qcat
+        pendings = [pj.join_async(qsend, eps=eps,
                                   return_pairs=self.return_pairs,
                                   sort_pairs=single)
                     for pj in self.prepared]
@@ -685,45 +793,75 @@ class BatchingJoinService(_JoinServiceBase):
         return ticket.result()
 
 
+def _metric_workload(args, rng):
+    """(points, eps, make_queries) for the service smoke, per metric.
+
+    l2 keeps the uniform box; cosine serves random embeddings at a
+    similarity floor; jaccard serves random binary token matrices at a
+    Jaccard floor ((Q, V) matrix form, 2-D so the batching coalescer
+    accepts it)."""
+    if args.metric == "cosine":
+        eps = args.eps if -1.0 <= args.eps < 1.0 else 0.9
+        if eps != args.eps:
+            print(f"[serve] --eps {args.eps} is not a cosine similarity; "
+                  f"using {eps}")
+        pts = rng.normal(size=(args.points, args.dims))
+        return pts, eps, lambda n: rng.normal(size=(n, args.dims))
+    if args.metric == "jaccard":
+        eps = args.eps if 0.0 < args.eps <= 1.0 else 0.5
+        if eps != args.eps:
+            print(f"[serve] --eps {args.eps} is not a jaccard threshold; "
+                  f"using {eps}")
+        vocab = 64
+        pts = (rng.random((args.points, vocab)) < 0.1).astype(np.float32)
+        return pts, eps, lambda n: (
+            rng.random((n, vocab)) < 0.1).astype(np.float32)
+    pts = rng.uniform(0, 100, size=(args.points, args.dims))
+    return pts, args.eps, lambda n: rng.uniform(0, 100,
+                                                size=(n, args.dims))
+
+
 def serve_selfjoin(args):
     rng = np.random.default_rng(args.seed)
-    pts = rng.uniform(0, 100, size=(args.points, args.dims))
+    pts, eps, make_queries = _metric_workload(args, rng)
     if args.batching:
         svc = BatchingJoinService(
-            pts, args.eps, n_slabs=args.slabs,
+            pts, eps, n_slabs=args.slabs,
             return_pairs=args.return_pairs,
             merge_last_dim=not args.no_merge,
-            max_batch=args.max_batch, max_wait_ms=args.max_wait_ms)
+            max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+            metric=args.metric)
         print(f"[serve] batching service: {args.points} pts, "
               f"{svc.n_slabs} slab(s), max_batch={svc.max_batch}, "
               f"max_wait={svc.max_wait_ms}ms "
               f"(indexed in {svc.build_s:.3f}s)")
     elif args.slabs > 1:
-        svc = ShardedJoinService(pts, args.eps, args.slabs,
+        svc = ShardedJoinService(pts, eps, args.slabs,
                                  return_pairs=args.return_pairs,
-                                 merge_last_dim=not args.no_merge)
+                                 merge_last_dim=not args.no_merge,
+                                 metric=args.metric)
         sweep = ("merged-range" if svc.prepared[0].merged else "per-cell")
         cells = sum(int(i.num_cells) for i in svc.indexes)
         print(f"[serve] indexed {args.points} pts across "
               f"{len(svc.prepared)} slabs in {svc.build_s:.3f}s "
               f"(|G|={cells} non-empty cells total, {sweep} sweep)")
     else:
-        svc = JoinService(pts, args.eps, return_pairs=args.return_pairs,
-                          merge_last_dim=not args.no_merge)
+        svc = JoinService(pts, eps, return_pairs=args.return_pairs,
+                          merge_last_dim=not args.no_merge,
+                          metric=args.metric)
         sweep = "merged-range" if svc.prepared.merged else "per-cell"
         print(f"[serve] indexed {args.points} pts in {svc.build_s:.3f}s "
-              f"(|G|={int(svc.index.num_cells)} non-empty cells, "
-              f"C={svc.prepared.c}, {svc.prepared.n_offsets} {sweep} "
-              f"stencil offsets)")
+              f"(metric={args.metric}, |G|={int(svc.index.num_cells)} "
+              f"non-empty cells, C={svc.prepared.c}, "
+              f"{svc.prepared.n_offsets} {sweep} stencil offsets)")
     t0 = time.perf_counter()
     qp = svc.warmup(args.request_batch)   # auto-marks steady (warns)
     print(f"[serve] warmed bucket {qp} rows in "
           f"{time.perf_counter()-t0:.3f}s (compile, off the request path)")
     if args.batching:
         # throughput path: admit everything through the queue, pump, drain
-        tickets = [svc.submit(rng.uniform(
-            0, 100, size=(args.request_batch, args.dims)))
-            for _ in range(args.requests)]
+        tickets = [svc.submit(make_queries(args.request_batch))
+                   for _ in range(args.requests)]
         t0 = time.perf_counter()
         svc.pump()
         svc.drain()
@@ -754,7 +892,7 @@ def serve_selfjoin(args):
                       f"warm {t['warm_s']*1000:.1f}ms "
                       f"swap {t['swap_s']*1e6:.0f}us "
                       f"(snapshot swaps: {svc.swaps})")
-            q = rng.uniform(0, 100, size=(args.request_batch, args.dims))
+            q = make_queries(args.request_batch)
             svc.query(q)
         p50, p99 = svc.percentiles()
         print(f"[serve] {args.requests} requests x {args.request_batch} "
@@ -814,6 +952,11 @@ def main(argv=None):
     ap.add_argument("--return-pairs", action="store_true",
                     help="materialize neighbor pairs per request, not "
                          "just counts")
+    ap.add_argument("--metric", default="l2",
+                    choices=("l2", "cosine", "jaccard"),
+                    help="similarity metric for the join service "
+                         "(DESIGN.md S12); --eps is then the metric-units "
+                         "threshold (minimum cosine / Jaccard similarity)")
     ap.add_argument("--no-merge", action="store_true",
                     help="serve through the per-cell 3^n stencil instead "
                          "of the merged-range 3^(n-1) sweep (parity "

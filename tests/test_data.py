@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.data.dedup import dedup_batch, embed_ngrams
+from repro.data.dedup import (dedup_batch, dedup_embeddings, embed_ngrams,
+                              guard_embeddings)
 from repro.data.pipeline import TokenPipeline
 
 
@@ -60,6 +61,72 @@ def test_dedup_union_find_clusters():
     keep = dedup_batch(batch, eps=0.05)
     assert keep.sum() == 3                     # 1 survivor + 2 unique
     assert keep[0] and not keep[1:4].any()
+
+
+def test_guard_embeddings_flags_zero_and_nonfinite_rows():
+    emb = np.array([[1.0, 0.0], [0.0, 0.0], [np.nan, 1.0],
+                    [np.inf, 0.5], [0.3, -0.4]])
+    assert np.array_equal(guard_embeddings(emb),
+                          [True, False, False, False, True])
+
+
+def test_dedup_embeddings_cosine_scale_invariant():
+    """Cosine dedup must catch a scaled copy (same direction, different
+    norm) that L2 dedup at any small radius would miss."""
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(6, 5))
+    scaled = 7.5 * base[:3]                    # same docs, longer vectors
+    emb = np.concatenate([base, scaled])
+    keep, valid = dedup_embeddings(emb, min_cos=0.999)
+    assert valid.all()
+    assert keep[:6].all() and not keep[6:].any()
+
+
+def test_dedup_embeddings_quarantines_bad_encodes():
+    """Zero/NaN rows survive the guard (kept for re-encode, valid=False)
+    and never reach cosine canonicalization -- which rejects them."""
+    rng = np.random.default_rng(4)
+    good = rng.normal(size=(5, 4))
+    emb = np.concatenate([good, good[:2],       # 2 exact dups
+                          np.zeros((1, 4)),     # encoder timeout
+                          np.full((1, 4), np.nan)])
+    keep, valid = dedup_embeddings(emb, min_cos=0.999)
+    assert np.array_equal(valid, [True] * 7 + [False] * 2)
+    assert keep[7:].all()                       # quarantined rows kept
+    assert keep[:5].all() and not keep[5:7].any()
+    # the same batch without the guard seam crashes canonicalization
+    from repro.core import metric as metric_lib
+    with pytest.raises(ValueError):
+        metric_lib.canonicalize(emb, 0.999, metric="cosine")
+
+
+def test_dedup_embeddings_matches_brute_cosine_clusters():
+    """keep-mask parity with a brute-force union-find over the exact
+    cosine similarity matrix."""
+    rng = np.random.default_rng(5)
+    emb = rng.normal(size=(40, 6))
+    emb[10:14] = emb[0:4] + 0.001 * rng.normal(size=(4, 6))  # near-dups
+    min_cos = 0.99
+    keep, valid = dedup_embeddings(emb, min_cos=min_cos)
+    assert valid.all()
+    u = emb / np.linalg.norm(emb, axis=1, keepdims=True)
+    sims = u @ u.T
+    parent = list(range(40))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for i in range(40):
+        for j in range(i + 1, 40):
+            if sims[i, j] >= min_cos:
+                ri, rj = find(i), find(j)
+                if ri != rj:
+                    parent[max(ri, rj)] = min(ri, rj)
+    expect = np.array([find(i) == i for i in range(40)])
+    assert np.array_equal(keep, expect)
 
 
 def test_pipeline_dedup_keeps_batch_shape():

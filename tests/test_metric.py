@@ -1,0 +1,337 @@
+"""Metric trait (DESIGN.md S12): cosine + jaccard join paths end-to-end.
+
+Four layers of coverage:
+
+  * trait primitives -- canonicalization, threshold translation, the
+    request-override rules, token bitmap packing;
+  * pair-set parity of every metric's fused join against the module's own
+    brute-force oracles (seed-swept always; hypothesis-driven where the
+    environment has hypothesis, per-test ``importorskip`` like
+    tests/test_cell_runs.py);
+  * Pallas-kernel bit-parity: the interpreter-mode Mosaic kernel
+    (``method='kernel'``) against the reference lowering, per metric;
+  * the serving no-retrace gate with the metric warm ladder, and the
+    sanitizer's E_UNNORMALIZED cosine check.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metric as metric_lib
+from repro.core.selfjoin import self_join, self_join_count
+
+
+def _embeddings(seed, n=120, d=4):
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(n, d))
+    # scaled copies: cosine-duplicates that L2 cannot see
+    emb[n - 8: n - 4] = 3.0 * emb[:4]
+    emb[n - 4:] = emb[4:8] + 0.01 * rng.normal(size=(4, d))
+    return emb
+
+
+def _token_sets(seed, n=80, vocab=60):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(0, 9))
+        out.append(tuple(rng.integers(0, vocab, k)))   # dups + empties
+    out[0] = ()                                        # guaranteed empty set
+    out[1] = out[2]                                    # guaranteed duplicate
+    return out
+
+
+# ---------------------------------------------------------------------------
+# trait primitives
+# ---------------------------------------------------------------------------
+
+def test_check_metric_rejects_unknown():
+    with pytest.raises(ValueError):
+        metric_lib.check_metric("manhattan")
+
+
+def test_cosine_eps_geom_chord_translation():
+    # cos 1 -> chord 0; cos -1 -> chord 2 (antipodal on the unit sphere)
+    assert metric_lib.cosine_eps_geom(1.0) == pytest.approx(0.0)
+    assert metric_lib.cosine_eps_geom(-1.0) == pytest.approx(2.0)
+    # monotone: higher required similarity -> smaller chord radius
+    grid = np.linspace(-1, 1, 21)
+    chords = [metric_lib.cosine_eps_geom(c) for c in grid]
+    assert all(a >= b for a, b in zip(chords, chords[1:]))
+    # exact identity on a known pair: cos(60 deg) = 0.5 -> chord 1
+    assert metric_lib.cosine_eps_geom(0.5) == pytest.approx(1.0)
+
+
+def test_cosine_canonicalize_rejects_zero_and_nonfinite():
+    with pytest.raises(ValueError):
+        metric_lib.canonicalize(np.array([[1.0, 0.0], [0.0, 0.0]]), 0.9,
+                                metric="cosine")
+    with pytest.raises(ValueError):
+        metric_lib.canonicalize(np.array([[1.0, np.nan]]), 0.9,
+                                metric="cosine")
+
+
+def test_cosine_canonicalize_unit_rows():
+    canon = metric_lib.canonicalize(_embeddings(0), 0.9, metric="cosine")
+    norms = np.linalg.norm(np.asarray(canon.geom), axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=metric_lib.NORM_TOL)
+    assert canon.eps_geom == pytest.approx(np.sqrt(2 - 2 * 0.9))
+    assert canon.refine == pytest.approx(canon.eps_geom)
+
+
+def test_jaccard_pack_tokens_popcount_intersection():
+    sets = [(1, 2, 3), (2, 3, 50), (), (1, 2, 3)]
+    canon = metric_lib.canonicalize(sets, 0.5, metric="jaccard")
+    feats = np.asarray(canon.feats)
+    pop = metric_lib._popcount16_table()
+    inter = pop[np.bitwise_and(feats[0].astype(np.int64),
+                               feats[1].astype(np.int64))].sum()
+    assert inter == 2                                   # {2, 3}
+    sizes = np.asarray(canon.geom)[:, 0]
+    np.testing.assert_array_equal(sizes, [3, 3, 0, 3])
+    np.testing.assert_array_equal(feats[0], feats[3])   # dup packs equal
+    assert not feats[2].any()                           # empty set: no bits
+
+
+def test_request_scalar_override_rules():
+    # l2: tighter radius fine, looser raises
+    assert metric_lib.request_scalar(
+        "l2", 0.5, index_eps=1.0, index_eps_geom=1.0) == pytest.approx(0.5)
+    with pytest.raises(ValueError):
+        metric_lib.request_scalar("l2", 2.0, index_eps=1.0,
+                                  index_eps_geom=1.0)
+    # cosine: HIGHER similarity is the tighter request
+    g = metric_lib.cosine_eps_geom(0.8)
+    got = metric_lib.request_scalar("cosine", 0.95, index_eps=0.8,
+                                    index_eps_geom=g)
+    assert got == pytest.approx(metric_lib.cosine_eps_geom(0.95))
+    with pytest.raises(ValueError):
+        metric_lib.request_scalar("cosine", 0.5, index_eps=0.8,
+                                  index_eps_geom=g)
+    # jaccard: similarity scalar passes through verbatim when tighter
+    assert metric_lib.request_scalar(
+        "jaccard", 0.7, index_eps=0.5,
+        index_eps_geom=4.0) == pytest.approx(0.7)
+    with pytest.raises(ValueError):
+        metric_lib.request_scalar("jaccard", 0.3, index_eps=0.5,
+                                  index_eps_geom=4.0)
+
+
+# ---------------------------------------------------------------------------
+# fused join vs brute oracle, per metric (seed-swept, always runs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("min_cos", [0.5, 0.9, 0.999])
+def test_cosine_join_matches_brute(seed, min_cos):
+    emb = _embeddings(seed)
+    canon = metric_lib.canonicalize(emb, min_cos, metric="cosine")
+    expect = metric_lib.brute_force_join_metric(canon)
+    got = self_join(emb, min_cos, metric="cosine")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    stats = self_join_count(emb, min_cos, metric="cosine")
+    assert stats.total_pairs == expect.shape[0]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("t", [0.3, 0.6, 1.0])
+def test_jaccard_join_matches_brute(seed, t):
+    sets = _token_sets(seed)
+    canon = metric_lib.canonicalize(sets, t, metric="jaccard")
+    expect = metric_lib.brute_force_join_metric(canon)
+    got = self_join(sets, t, metric="jaccard")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    assert self_join_count(sets, t,
+                           metric="jaccard").total_pairs == expect.shape[0]
+
+
+def test_jaccard_binary_matrix_input_equals_token_sets():
+    sets = _token_sets(3, vocab=32)
+    mat = np.zeros((len(sets), 32), np.float64)
+    for i, s in enumerate(sets):
+        mat[i, list(s)] = 1.0
+    a = self_join(sets, 0.5, metric="jaccard", vocab=32)
+    b = self_join(mat, 0.5, metric="jaccard")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_l2_metric_tag_is_bit_identical_to_default():
+    rng = np.random.default_rng(9)
+    pts = rng.uniform(0, 10, (300, 3))
+    a = self_join(pts, 0.7)
+    b = self_join(pts, 0.7, metric="l2")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cosine_catches_scaled_duplicates_l2_misses():
+    emb = _embeddings(0)
+    cos_pairs = set(map(tuple, np.asarray(
+        self_join(emb, 0.9999, metric="cosine"))))
+    l2_pairs = set(map(tuple, np.asarray(self_join(emb, 1e-6))))
+    n = emb.shape[0]
+    for k in range(4):                   # the 3x-scaled copies
+        assert (k, n - 8 + k) in cos_pairs
+        assert (k, n - 8 + k) not in l2_pairs
+
+
+# hypothesis-driven versions (skip cleanly where hypothesis is absent)
+
+def test_cosine_join_matches_brute_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=20, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**31 - 1),
+               n=st.integers(2, 80), d=st.integers(2, 5),
+               min_cos=st.sampled_from([-0.5, 0.0, 0.8, 0.99]))
+    def run(seed, n, d, min_cos):
+        rng = np.random.default_rng(seed)
+        emb = rng.normal(size=(n, d))
+        emb[n // 2] = emb[0] * rng.uniform(0.5, 4.0)   # scaled duplicate
+        expect = metric_lib.brute_force_join_metric(
+            metric_lib.canonicalize(emb, min_cos, metric="cosine"))
+        got = self_join(emb, min_cos, metric="cosine")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+    run()
+
+
+def test_jaccard_join_matches_brute_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=20, deadline=None)
+    @hyp.given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 60),
+               vocab=st.sampled_from([8, 40, 120]),
+               t=st.sampled_from([0.25, 0.5, 0.75, 1.0]))
+    def run(seed, n, vocab, t):
+        rng = np.random.default_rng(seed)
+        sets = [tuple(rng.integers(0, vocab, int(rng.integers(0, 7))))
+                for _ in range(n)]
+        expect = metric_lib.brute_force_join_metric(
+            metric_lib.canonicalize(sets, t, metric="jaccard"))
+        got = self_join(sets, t, metric="jaccard")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Pallas-kernel bit-parity (interpreter-mode Mosaic vs reference lowering)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric,data,eps", [
+    ("l2", _embeddings(5) * 2.0, 1.0),
+    ("cosine", _embeddings(5), 0.9),
+    ("jaccard", _token_sets(5), 0.5),
+])
+def test_kernel_lowering_bit_parity(metric, data, eps):
+    """``method='kernel'`` (the Pallas kernel, interpreter mode off-TPU)
+    must produce the SAME counts and pair set as the reference lowering
+    for every metric -- the trait predicate is shared code, so parity is
+    structural, and this pins it."""
+    from repro.core.query_join import epsilon_join
+
+    queries = data[:40] if metric != "jaccard" else data[:40]
+    ref = epsilon_join(queries, data, eps, metric=metric)
+    ker = epsilon_join(queries, data, eps, metric=metric, method="kernel")
+    np.testing.assert_array_equal(ref.counts, ker.counts)
+    np.testing.assert_array_equal(ref.pairs, ker.pairs)
+
+
+# ---------------------------------------------------------------------------
+# serving: metric warm ladder keeps the no-retrace watchdog green
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["cosine", "jaccard"])
+def test_join_service_no_retrace_across_metric_requests(metric):
+    from repro.launch.serve import JoinService
+
+    if metric == "cosine":
+        pts = _embeddings(7, n=200)
+        eps = 0.95
+        make = lambda k, s: np.random.default_rng(s).normal(  # noqa: E731
+            size=(k, 4))
+    else:
+        pts = _token_sets(7, n=200)
+        eps = 0.5
+        make = lambda k, s: _token_sets(s, n=k)  # noqa: E731
+    svc = JoinService(pts, eps, return_pairs=True, metric=metric)
+    svc.warmup(32)
+    svc.mark_steady()
+    for i, size in enumerate((3, 17, 32, 8)):
+        res = svc.query(make(size, 20 + i))
+        assert res.counts.shape == (size,)
+    svc.assert_no_retrace()
+
+
+def test_join_service_metric_eps_override():
+    """Per-request thresholds stay in METRIC units and respect the
+    tighter-only rule end-to-end through the service."""
+    from repro.launch.serve import JoinService
+
+    emb = _embeddings(11, n=150)
+    svc = JoinService(emb, 0.8, return_pairs=True, metric="cosine")
+    q = _embeddings(12, n=10)
+    tight = svc.query(q, eps=0.99)
+    base = svc.query(q)
+    assert (tight.counts <= base.counts).all()
+    qu = q / np.linalg.norm(q, axis=1, keepdims=True)
+    eu = emb / np.linalg.norm(emb, axis=1, keepdims=True)
+    chord2 = ((qu[:, None, :] - eu[None, :, :]) ** 2).sum(-1)
+    thresh = metric_lib.cosine_eps_geom(0.99)
+    expect = metric_lib.l2_sq_hits(chord2, thresh).sum(axis=1)
+    np.testing.assert_array_equal(tight.counts, expect)
+    with pytest.raises(ValueError):
+        svc.query(q, eps=0.5)          # looser than the index threshold
+
+
+# ---------------------------------------------------------------------------
+# sanitizer: E_UNNORMALIZED (cosine) end-to-end
+# ---------------------------------------------------------------------------
+
+class TestCosineSanitizer:
+    def setup_method(self):
+        from repro.analysis import sanitize
+        sanitize.set_enabled(True)
+        sanitize.clear()
+
+    def teardown_method(self):
+        from repro.analysis import sanitize
+        sanitize.set_enabled(None)
+        sanitize.clear()
+
+    def _launch(self, rows):
+        from repro.kernels import ops
+        from repro.kernels.fused_join import pad_points
+
+        c, tq, qp, n_off = 8, 16, 16, 9
+        points_pad = pad_points(jnp.asarray(rows), c)
+        return ops.fused_join_hits(
+            points_pad, points_pad[:qp],
+            jnp.zeros((n_off, qp), jnp.int32),
+            jnp.zeros((n_off, qp), jnp.int32),
+            jnp.zeros((n_off,), jnp.int32), jnp.zeros((qp,), jnp.int32),
+            0.2, c=c, n_real=2, unicomp=False, external=True, tq=tq,
+            method="kernel", metric="cosine")
+
+    def test_unit_rows_pass(self):
+        from repro.analysis import sanitize
+
+        rng = np.random.default_rng(0)
+        rows = rng.normal(size=(64, 2))
+        rows /= np.linalg.norm(rows, axis=1, keepdims=True)
+        self._launch(rows)
+        sanitize.raise_pending()              # no raise
+
+    def test_unnormalized_rows_flagged(self):
+        from repro.analysis import sanitize
+
+        rng = np.random.default_rng(0)
+        rows = rng.normal(size=(64, 2))
+        rows /= np.linalg.norm(rows, axis=1, keepdims=True)
+        rows[5] *= 1.5                        # bypassed canonicalize
+        self._launch(rows)
+        with pytest.raises(sanitize.SanitizerError,
+                           match="unnormalized-cosine"):
+            sanitize.raise_pending()
